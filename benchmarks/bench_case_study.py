@@ -1,0 +1,49 @@
+"""Paper Fig. 1 — case study: parallelism over heterogeneity.
+
+LLAMA-2 (70B) on 4xA6000 + 2xA5000 + 2xA4000, input 128 / output 64.
+Reproduces: TP=8 OOM, even PP=8 OOM, PP8-proportional and PP2xTP4 slow,
+asymmetric [4,2,2] with 48/20/12 layers fastest."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import cluster as cl
+from repro.core import cost_model as cm
+from repro.core.dp_layout import optimize_pipeline
+
+
+def run() -> None:
+    c = cl.case_study_cluster()
+    prof = cm.ModelProfile.from_config(get_config("llama2-70b"),
+                                       paper_exact=True)
+    task = cm.Task(batch=1, s_in=128, s_out=64)
+
+    oom_tp8 = not cm.mem_ok(c, list(range(8)), 80, prof, task)
+    oom_pp8 = not cm.mem_ok(c, [6], 10, prof, task)
+    emit("case_study/tp8", 0.0, f"OOM={oom_tp8} (paper: OOM)")
+    emit("case_study/pp8_even", 0.0, f"OOM={oom_pp8} (paper: OOM)")
+
+    layouts = {
+        "pp8_proportional": ([[d] for d in range(8)],
+                             [14, 14, 14, 14, 7, 7, 5, 5]),
+        "pp2_tp4_crossmachine": ([[0, 1, 2, 3], [4, 5, 6, 7]], [56, 24]),
+        "hexgen_asym_4_2_2": ([[0, 1, 2, 3], [4, 5], [6, 7]], [48, 20, 12]),
+    }
+    costs = {}
+    for name, (stages, split) in layouts.items():
+        costs[name] = cm.pipeline_cost(c, stages, split, prof, task)
+        emit(f"case_study/{name}", costs[name] * 1e6,
+             f"latency={costs[name]:.2f}s")
+    hx = costs["hexgen_asym_4_2_2"]
+    emit("case_study/speedup_vs_pp8", 0.0,
+         f"{costs['pp8_proportional']/hx:.2f}x (paper: ~2x)")
+    emit("case_study/speedup_vs_pp2tp4", 0.0,
+         f"{costs['pp2_tp4_crossmachine']/hx:.2f}x (paper: up to 19x)")
+
+    plan = optimize_pipeline(c, list(range(8)), prof, task)
+    emit("case_study/dp_best", plan.cost * 1e6,
+         f"layout={plan.describe()} latency={plan.cost:.2f}s")
+
+
+if __name__ == "__main__":
+    run()

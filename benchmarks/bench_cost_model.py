@@ -1,0 +1,117 @@
+"""Paper Table 3 — cost-model fidelity: estimated prefill/decode times for
+LLAMA-2 (70B) on 8xA100-40G under TP8 / TP4+PP2 / TP2+PP4 / PP8, compared
+against the paper's published Benchmarked and Estimated columns.
+
+Our constants (A100 specs + NVLink alpha/beta) differ from the paper's
+unpublished calibration, so we report ratios; orderings must match."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import cluster as cl
+from repro.core import cost_model as cm
+
+# paper Table 3: (config, in/out) -> (prefill_bench, prefill_est,
+#                                     decode_bench, decode_est)
+PAPER = {
+    ("TP=8", 256, 32): (2.72, 2.99, 2.43, 2.46),
+    ("TP=4 PP=2", 256, 32): (3.79, 3.85, 2.25, 2.14),
+    ("TP=2 PP=4", 256, 32): (5.26, 5.25, 3.29, 3.04),
+    ("PP=8", 256, 32): (8.04, 7.83, 6.04, 5.60),
+    ("TP=8", 512, 64): (3.04, 3.10, 4.76, 4.92),
+    ("TP=4 PP=2", 512, 64): (4.16, 4.10, 4.32, 4.28),
+    ("TP=2 PP=4", 512, 64): (5.57, 5.63, 6.65, 6.08),
+    ("PP=8", 512, 64): (8.27, 8.49, 12.40, 11.20),
+}
+
+LAYOUTS = {
+    "TP=8": ([list(range(8))], [80]),
+    "TP=4 PP=2": ([[0, 1, 2, 3], [4, 5, 6, 7]], [40, 40]),
+    "TP=2 PP=4": ([[0, 1], [2, 3], [4, 5], [6, 7]], [20, 20, 20, 20]),
+    "PP=8": ([[d] for d in range(8)], [10] * 8),
+}
+
+
+def split_prefill_decode(cluster, stages, split, prof, task, *,
+                         pp_lat=None, pp_bw=None):
+    """Separate the cost-model terms into prefill vs decode components."""
+    pre = dec = 0.0
+    B = task.bytes_per_el
+    H = prof.d_model
+    for j, (devs, l) in enumerate(zip(stages, split)):
+        n = len(devs)
+        specs = [cluster.devices[d].spec for d in devs]
+        # decode: parameter scan + per-token matmul
+        dec += max(prof.params_per_layer * B * task.s_out / (n * s.mem_bw)
+                   for s in specs) * l
+        dec += max(prof.flops_per_layer_per_token * task.batch * task.s_out
+                   / (n * s.flops) for s in specs) * l
+        # prefill: prompt matmul
+        pre += max(prof.flops_per_layer_per_token * task.batch * task.s_in
+                   / (n * s.flops) for s in specs) * l
+        if n > 1:
+            def superstep(msg):
+                best = 0.0
+                for d in devs:
+                    tot = sum(cluster.lat[d, d2] + msg / (n * cluster.bw[d, d2])
+                              for d2 in devs if d2 != d)
+                    best = max(best, tot)
+                return best
+            pre += superstep(task.batch * task.s_in * H * B) * 4 * l
+            dec += superstep(task.batch * H * B) * 4 * task.s_out * l
+        if j + 1 < len(stages):
+            nxt = stages[j + 1]
+            link = min((cluster.lat[d, d2], d, d2) for d in devs
+                       for d2 in nxt)
+            a = pp_lat if pp_lat is not None else link[0]
+            bw = pp_bw if pp_bw is not None else cluster.bw[link[1], link[2]]
+            pre += a + task.batch * task.s_in * H * B / bw
+            dec += (a + task.batch * H * B / bw) * task.s_out
+    return pre, dec
+
+
+# Best-fit effective constants against Table 3 (see EXPERIMENTS.md §Repro:
+# the paper's prefill column implies ~1 ms per AllReduce while its decode
+# column implies ~20 us under the published formulas, so no single (alpha,
+# beta) reproduces both; this profile minimizes joint log-error -- decode
+# lands within 1.3-1.6x and every ordering matches).
+CALIBRATED = dict(alpha=5e-5, beta=2.0e9, pp_alpha=2e-2, pp_beta=5e8)
+
+
+def _calibrated_cluster():
+    import numpy as np
+    homo = cl.homogeneous_a100()
+    n = len(homo)
+    lat = np.full((n, n), CALIBRATED["alpha"])
+    bw = np.full((n, n), CALIBRATED["beta"])
+    np.fill_diagonal(lat, 0)
+    return cl.Cluster(homo.devices, lat, bw)
+
+
+def run() -> None:
+    homo = cl.homogeneous_a100()
+    calib = _calibrated_cluster()
+    prof = cm.ModelProfile.from_config(get_config("llama2-70b"),
+                                       paper_exact=True)
+    for (name, s_in, s_out), (pb, pe, db, de) in PAPER.items():
+        task = cm.Task(batch=1, s_in=s_in, s_out=s_out)
+        stages, split = LAYOUTS[name]
+        pre, dec = split_prefill_decode(homo, stages, split, prof, task)
+        pre_c, dec_c = split_prefill_decode(
+            calib, stages, split, prof, task,
+            pp_lat=CALIBRATED["pp_alpha"], pp_bw=CALIBRATED["pp_beta"])
+        emit(f"cost_model/{name.replace(' ', '_')}/{s_in}_{s_out}", 0.0,
+             f"prefill={pre:.2f}s calib={pre_c:.2f}s (paper bench {pb} est {pe}) "
+             f"decode={dec:.2f}s calib={dec_c:.2f}s (paper bench {db} est {de})")
+    # ordering check: decode PP=8 > TP=2PP=4 > TP=8 scan-bound ordering
+    task = cm.Task(batch=1, s_in=256, s_out=32)
+    decs = {}
+    for name, (stages, split) in LAYOUTS.items():
+        _, decs[name] = split_prefill_decode(homo, stages, split, prof, task)
+    ok = decs["PP=8"] > decs["TP=2 PP=4"] > decs["TP=4 PP=2"]
+    emit("cost_model/ordering", 0.0,
+         f"PP8>TP2PP4>TP4PP2={ok} (paper: same ordering)")
+
+
+if __name__ == "__main__":
+    run()

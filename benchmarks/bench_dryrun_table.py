@@ -1,0 +1,78 @@
+"""Deliverable (g): the roofline table, aggregated from the dry-run sweep
+records (results/dryrun/*.json). One row per (arch x shape x mesh):
+all three terms, dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, memory."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def load_records(d=None):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(d or DRYRUN_DIR, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def markdown_table(recs):
+    """Markdown rows for EXPERIMENTS.md §Roofline (single-pod only)."""
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | MF/HLO | bytes/chip |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r.get("multi_pod") or "skipped" in r:
+            continue
+        rl = r["roofline"]
+        uf = rl.get("useful_flops_frac")
+        mem = r.get("memory_analysis", {})
+        tot = (mem.get("argument_size_in_bytes", 0)
+               + mem.get("temp_size_in_bytes", 0)
+               - mem.get("alias_size_in_bytes", 0))
+        lines.append(
+            f"| {r['arch']} | {r['shape']}"
+            f"{' (swa)' if r.get('swa_variant') else ''} "
+            f"| {rl['compute_s']:.4f} | {rl['memory_s']:.4f} "
+            f"| {rl['collective_s']:.4f} | {rl['dominant']} "
+            f"| {uf:.3f} | {tot/1e9:.1f}G |" if uf is not None else
+            f"| {r['arch']} | {r['shape']} | - | - | - | - | - | - |")
+    return "\n".join(lines)
+
+
+def run() -> None:
+    dirs = [("baseline", DRYRUN_DIR)]
+    if os.path.isdir("results/dryrun_opt") and \
+            DRYRUN_DIR != "results/dryrun_opt":
+        dirs.append(("optimized", "results/dryrun_opt"))
+    for label, d in dirs:
+        recs = load_records(d)
+        if not recs:
+            continue
+        n_ok = sum(1 for r in recs if "skipped" not in r)
+        n_skip = sum(1 for r in recs if "skipped" in r)
+        emit(f"dryrun/{label}/summary", 0.0,
+             f"compiled={n_ok} skipped={n_skip}")
+        for r in recs:
+            tag = (f"{label}/{r['arch']}/{r['shape']}/"
+                   f"{'multi' if r['multi_pod'] else 'single'}")
+            if "skipped" in r:
+                emit(f"dryrun/{tag}", 0.0, "SKIP " + r["skipped"])
+                continue
+            rl = r["roofline"]
+            uf = rl.get("useful_flops_frac") or 0.0
+            emit(f"dryrun/{tag}", r["compile_s"] * 1e6,
+                 f"compute={rl['compute_s']:.4f}s "
+                 f"memory={rl['memory_s']:.4f}s "
+                 f"coll={rl['collective_s']:.4f}s dom={rl['dominant']} "
+                 f"mf_ratio={uf:.3f}")
+
+
+if __name__ == "__main__":
+    run()
+    print()
+    print(markdown_table(load_records()))

@@ -1,0 +1,63 @@
+"""Kernel microbenchmarks (CPU timings of the XLA paths; the Pallas TPU
+kernels are validated in interpret mode -- their wall-clock here is Python
+interpretation, not TPU performance, so we report the XLA path)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_us
+from repro.kernels import ops
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run() -> None:
+    b, s, hq, hkv, d = 1, 1024, 8, 2, 64
+    q = jax.random.normal(KEY, (b, s, hq, d), jnp.float32)
+    k = jax.random.normal(KEY, (b, s, hkv, d), jnp.float32)
+    v = jax.random.normal(KEY, (b, s, hkv, d), jnp.float32)
+
+    fa = jax.jit(lambda q, k, v: ops.flash_attention(
+        q, k, v, causal=True, q_block=256, kv_block=256))
+    us = time_us(lambda: jax.block_until_ready(fa(q, k, v)))
+    flops = 2 * b * hq * s * s * d * 2
+    emit("kernels/flash_attention_1k", us,
+         f"cpu_gflops={flops/us/1e3:.1f}")
+
+    swa = jax.jit(lambda q, k, v: ops.flash_attention(
+        q, k, v, causal=True, window=256, q_block=256))
+    us_swa = time_us(lambda: jax.block_until_ready(swa(q, k, v)))
+    emit("kernels/swa_attention_1k_w256", us_swa,
+         f"speedup_vs_full={us/us_swa:.2f}x")
+
+    S = 8192
+    qd = jax.random.normal(KEY, (4, 1, hq, d), jnp.float32)
+    kc = jax.random.normal(KEY, (4, S, hkv, d), jnp.float32)
+    vc = jax.random.normal(KEY, (4, S, hkv, d), jnp.float32)
+    dec = jax.jit(lambda q, k, v: ops.decode_attention(q, k, v))
+    us = time_us(lambda: jax.block_until_ready(dec(qd, kc, vc)))
+    emit("kernels/decode_attention_8k", us,
+         f"bytes={(kc.nbytes+vc.nbytes)/1e6:.0f}MB")
+
+    din, ds = 256, 16
+    x = jax.random.normal(KEY, (2, 2048, din), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(KEY, (2, 2048, din)))
+    A = -jnp.exp(jax.random.normal(KEY, (din, ds)) * 0.5)
+    B = jax.random.normal(KEY, (2, 2048, ds))
+    C = jax.random.normal(KEY, (2, 2048, ds))
+    D = jax.random.normal(KEY, (din,))
+    scan = jax.jit(lambda *a: ops.ssm_scan(*a, chunk=128)[0])
+    us = time_us(lambda: jax.block_until_ready(scan(x, dt, A, B, C, D)))
+    emit("kernels/ssm_scan_2k", us, f"chunked(128)")
+
+    # chunked-vs-sequential speedup (the chunk-parallel win)
+    from repro.kernels import ref
+    seq = jax.jit(lambda *a: ref.ssm_scan_ref(*a)[0])
+    us_seq = time_us(lambda: jax.block_until_ready(seq(x, dt, A, B, C, D)))
+    emit("kernels/ssm_scan_2k_sequential", us_seq,
+         f"chunked_speedup={us_seq/us:.1f}x")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,114 @@
+"""Paper Table 4 / Appendix F — scheduled layout breakdown by region for the
+heterogeneous-full-price pool, plus replica-count comparison with the
+homogeneous pool (paper: 16 A100 -> 4 replicas; 58 hetero GPUs -> ~12)."""
+from __future__ import annotations
+
+from collections import defaultdict
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import cluster as cl
+from repro.core import cost_model as cm
+from repro.core.scheduler import schedule
+
+
+# Paper Table 4 / Appendix F: the published full-price assignment.
+# Device ids follow cluster.hetero_full_price() machine order.
+TABLE4 = [
+    # (stages as device-id lists)
+    [[0, 1, 2, 3], [4, 5, 6, 7]],                 # Iceland 8x3090Ti [4,4]
+    [[8, 9, 10, 11], [12, 13, 14, 15]],           # Iceland 8x3090Ti [4,4]
+    [[16, 17], [18], [19], [20, 21]],             # Norway [2,1,1,2]
+    [[22, 23, 24, 25], [26, 27, 28, 29]],         # Nevada A5000 [4,4]
+    [[30, 31], [32]],                             # Illinois 3xA6000 [2,1]
+    [[33, 34], [35]],
+    [[38, 39], [40]],
+    [[41, 42], [43]],
+    [[36, 37], [46, 47]],                         # 2xA6000+2xA5000 [2,2]
+    [[44, 45], [48, 49]],
+    [[54, 55], [50, 51]],                         # 2xA40+2xA5000 [2,2]
+    [[56, 57], [52, 53]],
+]
+
+
+def paper_table4_comparison(task):
+    """Evaluate the published layout with asymmetric support vs the best
+    symmetric (uniform-TP, even-split) execution of the same groups."""
+    from repro.core import slo_sim
+    from repro.core.dp_layout import _mem_proportional_split
+    from benchmarks.bench_slo_attainment import _symmetric_layout
+    full = cl.hetero_full_price()
+    prof = cm.ModelProfile.from_config(get_config("llama2-70b"),
+                                       paper_exact=True)
+    asym, sym = [], []
+    for stages in TABLE4:
+        split = _mem_proportional_split(full, stages, prof.num_layers)
+        cost = cm.pipeline_cost(full, stages, split, prof, task)
+        if cost != float("inf"):
+            asym.append(slo_sim.ReplicaModel(
+                cost, cm.pipeline_bottleneck(full, stages, split, prof,
+                                             task)))
+        ids = [d for s in stages for d in s]
+        got = _symmetric_layout(full, ids, prof, task)
+        if got is not None:
+            sym.append(slo_sim.ReplicaModel(*got))
+    return asym, sym
+
+
+def run() -> None:
+    task = cm.Task(batch=1, s_in=128, s_out=32)
+    from repro.core import slo_sim
+    asym, sym = paper_table4_comparison(task)
+    emit("layout/table4/replicas", 0.0,
+         f"asym={len(asym)} sym={len(sym)} (paper: 12 replicas)")
+    for name, reps in (("asym", asym), ("symmetric", sym)):
+        if not reps:
+            continue
+        mind = slo_sim.min_deadline_for_attainment(reps, 1.0, 0.99,
+                                                   duration=60.0)
+        peak = slo_sim.peak_rate_for_attainment(reps, 10.0, 0.9,
+                                                duration=60.0)
+        emit(f"layout/table4/{name}", 0.0,
+             f"min_deadline={mind:.2f}s peak_rate={peak:.2f}req/s "
+             f"mean_lat={sum(r.latency for r in reps)/len(reps):.2f}s")
+    if asym and sym:
+        d1 = slo_sim.min_deadline_for_attainment(asym, 1.0, 0.99, duration=60.0)
+        d2 = slo_sim.min_deadline_for_attainment(sym, 1.0, 0.99, duration=60.0)
+        emit("layout/table4/asym_advantage", 0.0,
+             f"deadline_ratio={d2/d1:.2f}x (paper: up to 1.8x)")
+    full = cl.hetero_full_price()
+    res = schedule(full, "llama2-70b", task, deadline=10.0, rate=8.0,
+                   iters=25, seed=0, paper_exact=True)
+    emit("layout/full_price/replicas", 0.0,
+         f"{res.assignment.num_replicas} (paper: up to 12)")
+    for i, p in enumerate(res.assignment.pipelines):
+        regions = sorted({full.devices[d].region for d in p.device_ids})
+        types = sorted({full.devices[d].type for d in p.device_ids})
+        emit(f"layout/full_price/pipeline{i}", p.cost * 1e6,
+             f"strategy={p.describe()} regions={'+'.join(regions)} "
+             f"gpus={'+'.join(types)}")
+    # structural properties the paper reports
+    cross_region = 0
+    for p in res.assignment.pipelines:
+        regs = {full.devices[d].region for d in p.device_ids}
+        if len(regs) > 1:
+            cross_region += 1
+    emit("layout/full_price/cross_region_pipelines", 0.0,
+         f"{cross_region} (paper: scheduling avoids cross-region groups)")
+    tp_cross_machine = 0
+    for p in res.assignment.pipelines:
+        for s in p.stages:
+            if len({full.devices[d].machine for d in s.device_ids}) > 1:
+                tp_cross_machine += 1
+    emit("layout/full_price/tp_groups_cross_machine", 0.0,
+         f"{tp_cross_machine} (paper heuristic: always 0)")
+
+    homo = cl.homogeneous_a100()
+    res_h = schedule(homo, "llama2-70b", task, deadline=10.0, rate=8.0,
+                     iters=15, seed=0, paper_exact=True)
+    emit("layout/homogeneous/replicas", 0.0,
+         f"{res_h.assignment.num_replicas} (paper: 4)")
+
+
+if __name__ == "__main__":
+    run()

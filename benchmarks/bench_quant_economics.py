@@ -1,0 +1,33 @@
+"""Beyond-paper: int8 weight-only quantization through the HexGen economics
+lens — B_type=1 halves the cost model's parameter memory AND the
+memory-scan decode term, so the scheduler packs more (and faster) replicas
+into the same budget. (The paper cites quantization as related work; here
+it composes with its scheduler.)"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import cluster as cl
+from repro.core import cost_model as cm
+from repro.core import slo_sim
+from repro.core.scheduler import schedule
+
+
+def run() -> None:
+    for setting, pool in (("half_price", cl.hetero_half_price()),
+                          ("case_study", cl.case_study_cluster())):
+        for name, bte in (("bf16", 2), ("int8", 1)):
+            task = cm.Task(batch=1, s_in=128, s_out=32, bytes_per_el=bte)
+            res = schedule(pool, "llama2-70b", task, deadline=10.0,
+                           rate=6.0, iters=15, seed=0, paper_exact=True)
+            reps = [slo_sim.ReplicaModel(p.cost, p.bottleneck)
+                    for p in res.assignment.pipelines]
+            peak = slo_sim.peak_rate_for_attainment(reps, 5.0, target=0.9,
+                                                    duration=60.0)
+            emit(f"quant/{setting}/{name}", 0.0,
+                 f"replicas={res.assignment.num_replicas} "
+                 f"peak_rate@5s={peak:.2f}req/s "
+                 f"layout={res.assignment.describe()[:70]}")
+
+
+if __name__ == "__main__":
+    run()

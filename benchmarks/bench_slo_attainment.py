@@ -1,0 +1,109 @@
+"""Paper Fig. 2 — cost-performance trade-off: SLO attainment of HexGen
+(hetero full-price, w/ and w/o asymmetric parallelism, half-price) vs the
+homogeneous A100 datacenter baseline, across SLO scales and request rates.
+
+SLO scale is measured in multiples of the homogeneous A100 single-request
+latency, exactly as in the paper; workloads are Poisson; the analytical cost
+model provides per-replica latency/bottleneck and the discrete-event
+simulator produces attainment."""
+from __future__ import annotations
+
+from typing import List
+
+from benchmarks.common import emit
+from repro.configs import get_config
+from repro.core import cluster as cl
+from repro.core import cost_model as cm
+from repro.core import slo_sim
+from repro.core.dp_layout import TP_CANDIDATES, optimize_pipeline
+from repro.core.scheduler import schedule
+
+OUT_LENS = (32, 64)
+RATES = (0.5, 1.0, 2.0, 4.0, 8.0)
+SLO_SCALES = (1.0, 2.0, 5.0, 10.0)
+
+
+def _a100_unit_latency(task) -> float:
+    homo = cl.homogeneous_a100()
+    prof = cm.ModelProfile.from_config(get_config("llama2-70b"),
+                                       paper_exact=True)
+    plan = optimize_pipeline(homo, list(range(8)), prof, task)
+    return plan.cost
+
+
+def _symmetric_layout(cluster, device_ids, prof, task):
+    """'HexGen w/o asymmetric parallelism' ablation: the same scheduled
+    group, but executed the way FlashAttention/FasterTransformer require --
+    every stage has the SAME TP degree and the SAME layer count (even
+    split), no per-stage DP or memory-proportional EM. Cross-machine TP is
+    permitted (that is exactly what hurts). Returns the best uniform plan or
+    None (OOM at every uniform degree -- asymmetric support is what makes
+    the group usable at all)."""
+    ids = sorted(device_ids)
+    best = None
+    L = prof.num_layers
+    for tp in (8, 4, 2, 1):
+        n_stage = len(ids) // tp
+        if n_stage == 0:
+            continue
+        stages = [ids[i * tp:(i + 1) * tp] for i in range(n_stage)]
+        base = L // n_stage
+        split = [base + (1 if j < L % n_stage else 0)
+                 for j in range(n_stage)]
+        cost = cm.pipeline_cost(cluster, stages, split, prof, task)
+        if cost == float("inf"):
+            continue
+        bott = cm.pipeline_bottleneck(cluster, stages, split, prof, task)
+        if best is None or cost < best[0]:
+            best = (cost, bott)
+    return best
+
+
+def _replicas(cluster, task, *, symmetric_only=False, iters=12, seed=0):
+    prof = cm.ModelProfile.from_config(get_config("llama2-70b"),
+                                       paper_exact=True)
+    from repro.core import genetic
+    res = genetic.search(cluster, prof, task, deadline=10.0, rate=2.0,
+                         iters=iters, seed=seed,
+                         mutation="hexgen")
+    reps = []
+    for p in res.assignment.pipelines:
+        if symmetric_only:
+            got = _symmetric_layout(cluster, p.device_ids, prof, task)
+            if got is None:
+                continue
+            reps.append(slo_sim.ReplicaModel(got[0], got[1]))
+        else:
+            reps.append(slo_sim.ReplicaModel(p.cost, p.bottleneck))
+    return reps
+
+
+def run(fast: bool = True) -> None:
+    for out_len in OUT_LENS if not fast else OUT_LENS[:1]:
+        task = cm.Task(batch=1, s_in=128, s_out=out_len)
+        unit = _a100_unit_latency(task)
+        settings = {
+            "homogeneous_a100": _replicas(cl.homogeneous_a100(), task),
+            "hexgen_full": _replicas(cl.hetero_full_price(), task),
+            "hexgen_full_symmetric": _replicas(cl.hetero_full_price(), task,
+                                               symmetric_only=True),
+            "hexgen_half": _replicas(cl.hetero_half_price(), task),
+        }
+        for name, reps in settings.items():
+            for scale in SLO_SCALES:
+                att = [slo_sim.simulate(reps, r, scale * unit, duration=60.0)
+                       for r in RATES]
+                emit(f"slo/{name}/out{out_len}/scale{scale:g}", 0.0,
+                     "att@rates(" + "|".join(f"{r:g}" for r in RATES) + ")="
+                     + "|".join(f"{a:.2f}" for a in att))
+            peak = slo_sim.peak_rate_for_attainment(reps, 5 * unit,
+                                                    target=0.9, duration=60.0)
+            mind = slo_sim.min_deadline_for_attainment(reps, 1.0, target=0.99,
+                                                       duration=60.0)
+            emit(f"slo/{name}/out{out_len}/summary", 0.0,
+                 f"peak_rate@5xSLO={peak:.2f}req/s "
+                 f"min_deadline@1req/s={mind:.2f}s unit={unit:.2f}s")
+
+
+if __name__ == "__main__":
+    run(fast=False)

@@ -1,0 +1,22 @@
+"""Shared helpers for the benchmark suite."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row)
+
+
+def time_us(fn: Callable, *, warmup: int = 1, iters: int = 3) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.monotonic()
+    for _ in range(iters):
+        fn()
+    return (time.monotonic() - t0) / iters * 1e6

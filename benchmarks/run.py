@@ -1,0 +1,61 @@
+"""Benchmark orchestrator: one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--only case_study,kernels] [--full]
+"""
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_case_study, bench_continuous,
+                        bench_convergence, bench_cost_model,
+                        bench_dryrun_table, bench_kernels,
+                        bench_layout_breakdown, bench_offline_resilience,
+                        bench_quant_economics, bench_slo_attainment,
+                        bench_swarm_compare)
+
+SUITES = {
+    "case_study": bench_case_study.run,             # Fig. 1
+    "cost_model": bench_cost_model.run,             # Table 3
+    "slo_attainment": bench_slo_attainment.run,     # Fig. 2
+    "swarm_compare": bench_swarm_compare.run,       # Fig. 3
+    "offline_resilience": bench_offline_resilience.run,   # Fig. 4
+    "convergence": bench_convergence.run,           # Fig. 6/7
+    "layout_breakdown": bench_layout_breakdown.run,  # Table 4
+    "kernels": bench_kernels.run,                   # substrate
+    "continuous": bench_continuous.run,             # beyond-paper (Appx D)
+    "quant_economics": bench_quant_economics.run,   # beyond-paper (int8)
+    "dryrun_table": bench_dryrun_table.run,         # deliverable (g)
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    ap.add_argument("--full", action="store_true",
+                    help="run slow variants (both output lengths etc.)")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SUITES)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        t0 = time.time()
+        print(f"# === {name} ===")
+        try:
+            if name == "slo_attainment":
+                SUITES[name](fast=not args.full)
+            else:
+                SUITES[name]()
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+        print(f"# {name} done in {time.time()-t0:.1f}s")
+    if failed:
+        print(f"# FAILED suites: {failed}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+"""End-to-end serving driver: schedule the paper's half-price heterogeneous
+pool, stand up the multi-replica asymmetric-pipeline engine, and serve a
+timed Poisson workload, reporting measured SLO attainment.
+
+  PYTHONPATH=src python examples/serve_heterogeneous.py
+"""
+import subprocess
+import sys
+
+# the serving driver is a proper module CLI; this example drives it the way
+# an operator would
+subprocess.run([
+    sys.executable, "-m", "repro.launch.serve",
+    "--arch", "h2o-danube-1.8b", "--reduced",
+    "--cluster", "half_price",
+    "--rate", "3", "--duration", "4", "--deadline", "30",
+    "--prompt-len", "16", "--out-len", "6", "--search-iters", "6",
+], check=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                    **__import__("os").environ})

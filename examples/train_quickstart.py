@@ -1,0 +1,18 @@
+"""Train a ~100M-param model for a few hundred steps on the synthetic
+Markov stream, with checkpointing. (xlstm-125m full config, CPU-feasible.)
+
+  PYTHONPATH=src python examples/train_quickstart.py [--steps 300]
+"""
+import subprocess
+import sys
+import os
+
+steps = "300" if "--steps" not in sys.argv else \
+    sys.argv[sys.argv.index("--steps") + 1]
+subprocess.run([
+    sys.executable, "-m", "repro.launch.train",
+    "--arch", "xlstm-125m",
+    "--steps", steps, "--batch", "4", "--seq", "128",
+    "--lr", "1e-3", "--ckpt-dir", "/tmp/repro_ckpt",
+    "--ckpt-every", "100", "--log-every", "20",
+], check=True, env={"PYTHONPATH": "src", **os.environ})

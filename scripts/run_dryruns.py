@@ -1,0 +1,73 @@
+#!/usr/bin/env python
+"""Sweep driver: run every (arch x shape x mesh) dry-run in a subprocess
+(each needs a fresh jax with 512 host devices) and collect JSON records.
+
+  PYTHONPATH=src python scripts/run_dryruns.py [--out results/dryrun]
+      [--archs a,b,c] [--shapes s1,s2] [--mesh single|multi|both] [--skip-done]
+"""
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = ["granite-8b", "jamba-v0.1-52b", "h2o-danube-1.8b",
+         "granite-moe-3b-a800m", "granite-20b", "xlstm-125m",
+         "paligemma-3b", "codeqwen1.5-7b", "phi3.5-moe-42b-a6.6b",
+         "whisper-base"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--archs", default=",".join(ARCHS))
+    ap.add_argument("--shapes", default=",".join(SHAPES))
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--timeout", type=int, default=1200)
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    jobs = [(a, s, mp) for a in args.archs.split(",")
+            for s in args.shapes.split(",") for mp in meshes]
+    t0 = time.time()
+    fails = []
+    for i, (arch, shape, mp) in enumerate(jobs):
+        tag = f"{arch}_{shape}_{'multi' if mp else 'single'}"
+        out_json = os.path.join(args.out, tag + ".json")
+        if args.skip_done and os.path.exists(out_json):
+            print(f"[{i+1}/{len(jobs)}] {tag}: cached")
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--json", out_json]
+        if mp:
+            cmd.append("--multi-pod")
+        t1 = time.time()
+        try:
+            p = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout,
+                               env={**os.environ, "PYTHONPATH": "src"})
+            ok = p.returncode == 0
+        except subprocess.TimeoutExpired:
+            ok = False
+            p = None
+        dt = time.time() - t1
+        if not ok:
+            fails.append(tag)
+            err = (p.stderr[-2000:] if p else "TIMEOUT")
+            with open(os.path.join(args.out, tag + ".err"), "w") as f:
+                f.write(err)
+            print(f"[{i+1}/{len(jobs)}] {tag}: FAIL ({dt:.0f}s)")
+        else:
+            print(f"[{i+1}/{len(jobs)}] {tag}: ok ({dt:.0f}s)")
+    print(f"done in {(time.time()-t0)/60:.1f} min; {len(fails)} failures")
+    for f in fails:
+        print("  FAIL:", f)
+
+
+if __name__ == "__main__":
+    main()

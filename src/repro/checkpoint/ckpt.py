@@ -1,0 +1,71 @@
+"""Sharding-aware npz checkpointing (no orbax dependency).
+
+Layout: <dir>/step_<n>/params.npz + opt_state.npz + meta.json. Pytrees are
+flattened with '/'-joined key paths; arrays are gathered to host (fine at
+demo scale; a real pod deployment would write per-host shards -- the format
+reserves a `shard` field for that)."""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+                       for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, step: int, params, opt_state: Any = None,
+         extra: Optional[dict] = None) -> str:
+    d = os.path.join(path, f"step_{step:08d}")
+    os.makedirs(d, exist_ok=True)
+    np.savez(os.path.join(d, "params.npz"), **_flatten(params))
+    if opt_state is not None:
+        np.savez(os.path.join(d, "opt_state.npz"), **_flatten(opt_state))
+    with open(os.path.join(d, "meta.json"), "w") as f:
+        json.dump({"step": step, **(extra or {})}, f)
+    return d
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(m.group(1)) for n in os.listdir(path)
+             if (m := re.match(r"step_(\d+)$", n))]
+    return max(steps) if steps else None
+
+
+def restore(path: str, step: int, params_like, opt_like=None
+            ) -> Tuple[Any, Any, dict]:
+    """Restores into the structure of `params_like` (shape/dtype checked)."""
+    d = os.path.join(path, f"step_{step:08d}")
+    data = np.load(os.path.join(d, "params.npz"))
+
+    def unflatten(like, blob):
+        flat = _flatten(like)
+        leaves, treedef = jax.tree_util.tree_flatten(like)
+        keys = list(flat.keys())
+        assert len(keys) == len(leaves)
+        out = []
+        for key, leaf in zip(keys, leaves):
+            arr = blob[key]
+            assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+            out.append(arr.astype(leaf.dtype))
+        return treedef.unflatten(out)
+
+    params = unflatten(params_like, data)
+    opt = None
+    if opt_like is not None:
+        opt = unflatten(opt_like, np.load(os.path.join(d, "opt_state.npz")))
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    return params, opt, meta

@@ -1,0 +1,38 @@
+"""Architecture registry. ``get_config("granite-8b")`` etc."""
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig, InputShape, INPUT_SHAPES  # noqa: F401
+
+_REGISTRY = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    _load_all()
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; available: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs():
+    _load_all()
+    return sorted(_REGISTRY)
+
+
+_LOADED = False
+
+
+def _load_all():
+    global _LOADED
+    if _LOADED:
+        return
+    from repro.configs import (  # noqa: F401
+        granite_8b, jamba_v0_1_52b, h2o_danube_1_8b, granite_moe_3b_a800m,
+        granite_20b, xlstm_125m, paligemma_3b, codeqwen1_5_7b,
+        phi3_5_moe_42b_a6_6b, whisper_base, llama2_70b,
+    )
+    _LOADED = True

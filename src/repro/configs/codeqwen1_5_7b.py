@@ -1,0 +1,18 @@
+"""codeqwen1.5-7b — Qwen1.5 arch (MHA kv=32, attention bias)
+[hf:Qwen/CodeQwen1.5-7B]."""
+from repro.configs import register
+from repro.configs.base import ModelConfig
+
+CONFIG = register(ModelConfig(
+    name="codeqwen1.5-7b",
+    source="hf:Qwen/CodeQwen1.5-7B",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=13440,
+    vocab_size=92416,
+    attn_bias=True,
+    rope_theta=1_000_000.0,
+))

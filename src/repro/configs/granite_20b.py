@@ -1,0 +1,16 @@
+"""granite-20b — IBM Granite Code 20B, MQA (kv=1) dense [arXiv:2405.04324]."""
+from repro.configs import register
+from repro.configs.base import ModelConfig
+
+CONFIG = register(ModelConfig(
+    name="granite-20b",
+    source="arXiv:2405.04324",
+    family="dense",
+    num_layers=52,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=1,
+    d_ff=24576,
+    vocab_size=49152,
+    activation="gelu",  # gpt-bigcode style MLP
+))

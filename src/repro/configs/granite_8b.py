@@ -1,0 +1,15 @@
+"""granite-8b — IBM Granite Code 8B, llama-arch dense GQA [arXiv:2405.04324]."""
+from repro.configs import register
+from repro.configs.base import ModelConfig
+
+CONFIG = register(ModelConfig(
+    name="granite-8b",
+    source="arXiv:2405.04324",
+    family="dense",
+    num_layers=36,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=49152,
+))

@@ -1,0 +1,18 @@
+"""granite-moe-3b-a800m — IBM Granite MoE, 40 experts top-8
+[hf:ibm-granite/granite-3.0-1b-a400m-base]."""
+from repro.configs import register
+from repro.configs.base import ModelConfig
+
+CONFIG = register(ModelConfig(
+    name="granite-moe-3b-a800m",
+    source="hf:ibm-granite/granite-3.0-1b-a400m-base",
+    family="moe",
+    num_layers=32,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=8,
+    d_ff=512,
+    vocab_size=49155,
+    num_experts=40,
+    top_k=8,
+))

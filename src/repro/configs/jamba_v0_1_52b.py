@@ -1,0 +1,27 @@
+"""jamba-v0.1-52b — AI21 Jamba, Mamba+attention 1:7 interleave with MoE
+(16 experts, top-2, MoE every other layer) [arXiv:2403.19887]."""
+from repro.configs import register
+from repro.configs.base import ATTN, MAMBA, ModelConfig
+
+# 1 attention layer per 8-layer period (1:7 attn:mamba), MoE every 2 layers.
+_PATTERN = (MAMBA, MAMBA, MAMBA, MAMBA, ATTN, MAMBA, MAMBA, MAMBA)
+
+CONFIG = register(ModelConfig(
+    name="jamba-v0.1-52b",
+    source="arXiv:2403.19887",
+    family="hybrid",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=65536,
+    num_experts=16,
+    top_k=2,
+    moe_every=2,
+    moe_offset=1,
+    layer_pattern=_PATTERN,
+    ssm_d_state=16,
+    ssm_d_conv=4,
+    ssm_expand=2,
+))

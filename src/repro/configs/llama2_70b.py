@@ -1,0 +1,19 @@
+"""llama2-70b — the paper's own served model [arXiv:2307.09288].
+
+Used by the HexGen scheduling reproduction (cost model, case study, SLO
+benchmarks). H=8192, L=80 matches Table 1's 12H^2-per-layer approximation.
+"""
+from repro.configs import register
+from repro.configs.base import ModelConfig
+
+CONFIG = register(ModelConfig(
+    name="llama2-70b",
+    source="arXiv:2307.09288",
+    family="dense",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    d_ff=28672,
+    vocab_size=32000,
+))

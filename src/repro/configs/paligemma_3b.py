@@ -1,0 +1,21 @@
+"""paligemma-3b — SigLIP + gemma VLM; this config is the gemma-style language
+backbone; the SigLIP vision tower + projector are STUBBED (input_specs provides
+precomputed patch embeddings) [arXiv:2407.07726]."""
+from repro.configs import register
+from repro.configs.base import ModelConfig
+
+CONFIG = register(ModelConfig(
+    name="paligemma-3b",
+    source="arXiv:2407.07726",
+    family="vlm",
+    num_layers=18,
+    d_model=2048,
+    num_heads=8,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=257216,
+    activation="gelu",
+    tie_embeddings=True,
+    num_image_tokens=256,
+))

@@ -1,0 +1,18 @@
+"""phi3.5-moe-42b-a6.6b — Microsoft Phi-3.5-MoE, 16 experts top-2
+[hf:microsoft/Phi-3.5-MoE-instruct]."""
+from repro.configs import register
+from repro.configs.base import ModelConfig
+
+CONFIG = register(ModelConfig(
+    name="phi3.5-moe-42b-a6.6b",
+    source="hf:microsoft/Phi-3.5-MoE-instruct",
+    family="moe",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=6400,
+    vocab_size=32064,
+    num_experts=16,
+    top_k=2,
+))

@@ -1,0 +1,23 @@
+"""whisper-base — OpenAI Whisper base, encoder-decoder; mel-spectrogram +
+conv frontend is STUBBED (input_specs provides precomputed frame embeddings)
+[arXiv:2212.04356]."""
+from repro.configs import register
+from repro.configs.base import ModelConfig
+
+CONFIG = register(ModelConfig(
+    name="whisper-base",
+    source="arXiv:2212.04356",
+    family="audio",
+    num_layers=6,                 # decoder layers
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=8,
+    d_ff=2048,
+    vocab_size=51865,
+    activation="gelu",
+    is_encoder_decoder=True,
+    num_encoder_layers=6,
+    encoder_seq_len=1500,
+    rope_theta=0.0,               # whisper uses learned/sinusoidal positions
+    tie_embeddings=True,
+))

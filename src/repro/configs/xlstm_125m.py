@@ -1,0 +1,24 @@
+"""xlstm-125m — sLSTM + mLSTM blocks, attention-free [arXiv:2405.04517].
+
+12 blocks; sLSTM at 1-of-4 positions (xLSTM[x:y] style interleave), the rest
+mLSTM. d_ff=0: xLSTM blocks carry their own projections, no separate MLP.
+"""
+from repro.configs import register
+from repro.configs.base import MLSTM, SLSTM, ModelConfig
+
+_PATTERN = (MLSTM, MLSTM, MLSTM, SLSTM)
+
+CONFIG = register(ModelConfig(
+    name="xlstm-125m",
+    source="arXiv:2405.04517",
+    family="ssm",
+    num_layers=12,
+    d_model=768,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    layer_pattern=_PATTERN,
+    ssm_expand=2,
+    xlstm_qk_dim_factor=0.5,
+))

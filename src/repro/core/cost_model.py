@@ -1,0 +1,183 @@
+"""The paper's analytical cost model (Table 1 / Appendix B), plus a
+generalized form that derives per-layer parameter counts, FLOPs and cache
+bytes from any ModelConfig (GQA, MoE active experts, SSM state) so the same
+scheduler plans every assigned architecture.
+
+paper_exact=True reproduces Table 1 literally:
+  params/layer = 12 H^2            (w_K,Q,V,O: 4H^2; w_1,w_2: 8H^2)
+  FLOPs/layer  = 24 b s H^2        (2 FLOPs per param per token)
+  KV bytes     = 2 b s H B_type / layer
+  activation buffers = 4 b s H B_type (reused across layers)
+TP comm: 4 AllReduce phases per layer (2 AllReduce = ReduceScatter+AllGather
+x 2 per layer under the BSP model); PP comm: fastest link between stages.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+from repro.configs.base import ModelConfig
+from repro.core.cluster import Cluster
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """One inference task t: batch, prompt length, output length."""
+    batch: int                # b_t
+    s_in: int
+    s_out: int
+    bytes_per_el: int = 2     # B_type (FP16/bf16)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelProfile:
+    """What the cost model needs to know about the served model."""
+    name: str
+    num_layers: int
+    d_model: int
+    params_per_layer: float        # weights scanned per generated token
+    flops_per_layer_per_token: float   # 2 * active params
+    kv_bytes_per_token_per_layer: float
+    embed_params: float = 0.0
+    paper_exact: bool = False
+
+    @staticmethod
+    def from_config(cfg: ModelConfig, paper_exact: bool = False,
+                    bytes_per_el: int = 2) -> "ModelProfile":
+        H = cfg.d_model
+        if paper_exact:
+            return ModelProfile(
+                name=cfg.name, num_layers=cfg.num_layers, d_model=H,
+                params_per_layer=12 * H * H,
+                flops_per_layer_per_token=24 * H * H,
+                kv_bytes_per_token_per_layer=2 * H * bytes_per_el,
+                paper_exact=True)
+        total_p = sum(cfg.params_per_layer(i) for i in range(cfg.num_layers))
+        active_p = sum(cfg.active_params_per_layer(i)
+                       for i in range(cfg.num_layers))
+        kv = sum(cfg.kv_cache_bytes_per_token_layer(i, bytes_per_el)
+                 for i in range(cfg.num_layers))
+        L = cfg.num_layers
+        return ModelProfile(
+            name=cfg.name, num_layers=L, d_model=H,
+            params_per_layer=total_p / L,
+            flops_per_layer_per_token=2 * active_p / L,
+            kv_bytes_per_token_per_layer=kv / L,
+            embed_params=cfg.vocab_size * H * (1 if cfg.tie_embeddings else 2))
+
+
+# ---------------------------------------------------------------------------
+# Table 1 terms. `devices` are global device ids of one stage's TP group.
+# ---------------------------------------------------------------------------
+
+def comp_cost(cluster: Cluster, devices: Sequence[int], layers: int,
+              model: ModelProfile, task: Task) -> float:
+    """C_comp^{i,j}: memory-scan term + matmul term."""
+    n = len(devices)
+    B = task.bytes_per_el
+    scan = max(model.params_per_layer * B * task.s_out
+               / (n * cluster.devices[d].spec.mem_bw) for d in devices)
+    flops = max(model.flops_per_layer_per_token * task.batch
+                * (task.s_in + task.s_out) / (n * cluster.devices[d].spec.flops)
+                for d in devices)
+    return (scan + flops) * layers
+
+
+def comm_tp_cost(cluster: Cluster, devices: Sequence[int], layers: int,
+                 model: ModelProfile, task: Task) -> float:
+    """C_comm-tp^{i,j}: BSP AllReduce pair per layer (4 supersteps)."""
+    n = len(devices)
+    if n == 1:
+        return 0.0
+    B = task.bytes_per_el
+    H = model.d_model
+
+    def superstep(msg_bytes: float) -> float:
+        best = 0.0
+        for d in devices:
+            tot = 0.0
+            for d2 in devices:
+                if d2 == d:
+                    continue
+                tot += cluster.lat[d, d2] + msg_bytes / (n * cluster.bw[d, d2])
+            best = max(best, tot)
+        return best
+
+    prefill = superstep(task.batch * task.s_in * H * B) * 4 * layers
+    decode = superstep(task.batch * H * B) * 4 * task.s_out * layers
+    return prefill + decode
+
+
+def comm_pp_cost(cluster: Cluster, stage: Sequence[int],
+                 next_stage: Sequence[int], task: Task,
+                 model: ModelProfile) -> float:
+    """C_comm-pp^{i,j}: fastest link between consecutive stages."""
+    B = task.bytes_per_el
+    H = model.d_model
+
+    def best(msg_bytes: float) -> float:
+        return min(cluster.lat[d, d2] + msg_bytes / cluster.bw[d, d2]
+                   for d in stage for d2 in next_stage)
+
+    return best(task.batch * task.s_in * H * B) \
+        + best(task.batch * H * B) * task.s_out
+
+
+def mem_bytes_per_device(cluster: Cluster, devices: Sequence[int],
+                         layers: int, model: ModelProfile,
+                         task: Task) -> float:
+    """C_mem^d: params + KV cache (sharded over the TP group) + 4 activation
+    buffers."""
+    n = len(devices)
+    B = task.bytes_per_el
+    H = model.d_model
+    s_total = task.s_in + task.s_out
+    per_layer = model.params_per_layer * B / n \
+        + model.kv_bytes_per_token_per_layer * task.batch * s_total / n
+    return per_layer * layers + 4 * task.batch * s_total * H * B
+
+
+# Fraction of device memory actually usable for weights/caches (CUDA context,
+# allocator fragmentation, workspace) — reproduces the paper's Fig.1 OOMs.
+MEM_UTIL = 0.9
+
+
+def mem_ok(cluster: Cluster, devices: Sequence[int], layers: int,
+           model: ModelProfile, task: Task) -> bool:
+    need = mem_bytes_per_device(cluster, devices, layers, model, task)
+    return all(need <= MEM_UTIL * cluster.devices[d].spec.mem_bytes
+               for d in devices)
+
+
+# ---------------------------------------------------------------------------
+# Whole-pipeline cost (Eq. 2)
+# ---------------------------------------------------------------------------
+
+def pipeline_cost(cluster: Cluster, stages: List[Sequence[int]],
+                  layer_split: List[int], model: ModelProfile,
+                  task: Task) -> float:
+    """End-to-end latency; inf if any stage violates memory."""
+    total = 0.0
+    for j, (devs, l) in enumerate(zip(stages, layer_split)):
+        if not mem_ok(cluster, devs, l, model, task):
+            return float("inf")
+        total += comp_cost(cluster, devs, l, model, task)
+        total += comm_tp_cost(cluster, devs, l, model, task)
+        if j + 1 < len(stages):
+            total += comm_pp_cost(cluster, devs, stages[j + 1], task, model)
+    return total
+
+
+def pipeline_bottleneck(cluster: Cluster, stages: List[Sequence[int]],
+                        layer_split: List[int], model: ModelProfile,
+                        task: Task) -> float:
+    """Max per-stage time: the pipelined throughput limit (1/this = req/s
+    capacity of the replica when stages overlap across requests)."""
+    worst = 0.0
+    for j, (devs, l) in enumerate(zip(stages, layer_split)):
+        t = comp_cost(cluster, devs, l, model, task) \
+            + comm_tp_cost(cluster, devs, l, model, task)
+        if j + 1 < len(stages):
+            t += comm_pp_cost(cluster, devs, stages[j + 1], task, model)
+        worst = max(worst, t)
+    return worst

@@ -1,0 +1,252 @@
+"""§4.3: genetic search over partitions of the device pool into independent
+pipeline groups.
+
+Individual = tuple of disjoint device-id frozensets (groups). Each group is
+layed out by the Algorithm-1 DP (dp_layout.optimize_pipeline); fitness is the
+simulated SLO attainment of the resulting replica set (slo_sim), tie-broken
+by mean latency.
+
+Initialization: K-means over the latency-matrix embedding with the elbow
+method choosing K (plus machine-per-group and whole-pool seeds). Mutations:
+merge / split / swap, with early memory-feasibility pruning of offspring.
+A `random` mutation mode reproduces the paper's strawman baseline (Fig. 6).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core import slo_sim
+from repro.core.cluster import Cluster
+from repro.core.dp_layout import optimize_pipeline
+from repro.core.plan import Assignment, PipelinePlan
+
+Individual = Tuple[FrozenSet[int], ...]
+
+
+def _canon(groups: Sequence[FrozenSet[int]]) -> Individual:
+    return tuple(sorted((g for g in groups if g), key=lambda g: sorted(g)))
+
+
+# ---------------------------------------------------------------------------
+# Initialization: K-means over comm topology + elbow
+# ---------------------------------------------------------------------------
+
+def _kmeans(feats: np.ndarray, k: int, rng: np.random.Generator,
+            iters: int = 20) -> np.ndarray:
+    n = len(feats)
+    centers = feats[rng.choice(n, size=min(k, n), replace=False)]
+    assign = np.zeros(n, dtype=int)
+    for _ in range(iters):
+        d = ((feats[:, None, :] - centers[None]) ** 2).sum(-1)
+        assign = d.argmin(1)
+        for c in range(len(centers)):
+            pts = feats[assign == c]
+            if len(pts):
+                centers[c] = pts.mean(0)
+    return assign
+
+
+def _inertia(feats: np.ndarray, assign: np.ndarray) -> float:
+    tot = 0.0
+    for c in np.unique(assign):
+        pts = feats[assign == c]
+        tot += ((pts - pts.mean(0)) ** 2).sum()
+    return tot
+
+
+def kmeans_init(cluster: Cluster, rng: np.random.Generator,
+                max_k: int = 12) -> List[Individual]:
+    """Elbow-method K-means over the latency matrix rows (footnote: avoids
+    slow cross-region links inside one group)."""
+    feats = np.log10(cluster.lat + 1e-7)
+    ks = range(1, min(max_k, len(cluster)) + 1)
+    assigns, inertias = {}, []
+    for k in ks:
+        a = _kmeans(feats, k, rng)
+        assigns[k] = a
+        inertias.append(_inertia(feats, a))
+    # elbow: max second difference
+    if len(inertias) >= 3:
+        d2 = np.diff(inertias, 2)
+        k_star = int(np.argmax(d2)) + 2
+    else:
+        k_star = 1
+    seeds = []
+    for k in {k_star, max(1, k_star - 1), min(len(ks), k_star + 1)}:
+        a = assigns[k]
+        groups = [frozenset(np.flatnonzero(a == c).tolist())
+                  for c in np.unique(a)]
+        seeds.append(_canon(groups))
+    # machine-per-group seed
+    seeds.append(_canon([frozenset(ids) for ids in
+                         cluster.machines().values()]))
+    # whole pool
+    seeds.append(_canon([frozenset(range(len(cluster)))]))
+    return list(dict.fromkeys(seeds))
+
+
+# ---------------------------------------------------------------------------
+# Mutations (§4.3)
+# ---------------------------------------------------------------------------
+
+def mutate(ind: Individual, rng: np.random.Generator) -> Individual:
+    groups = [set(g) for g in ind]
+    op = rng.choice(["merge", "split", "swap"])
+    if op == "merge" and len(groups) >= 2:
+        i, j = rng.choice(len(groups), size=2, replace=False)
+        groups[i] |= groups[j]
+        del groups[j]
+    elif op == "split" and groups:
+        i = int(rng.integers(len(groups)))
+        g = sorted(groups[i])
+        if len(g) >= 2:
+            # even split per the tau-vector definition
+            a, b = set(g[0::2]), set(g[1::2])
+            groups[i] = a
+            groups.append(b)
+    elif op == "swap" and len(groups) >= 2:
+        i, j = rng.choice(len(groups), size=2, replace=False)
+        if groups[i]:
+            d = int(rng.choice(sorted(groups[i])))
+            groups[i].discard(d)
+            groups[j].add(d)
+    return _canon([frozenset(g) for g in groups])
+
+
+def mutate_random(ind: Individual, rng: np.random.Generator) -> Individual:
+    """Strawman baseline: randomly reassign a few devices between groups."""
+    groups = [set(g) for g in ind]
+    if not groups:
+        return ind
+    for _ in range(int(rng.integers(1, 4))):
+        all_devs = [d for g in groups for d in g]
+        d = int(rng.choice(all_devs))
+        for g in groups:
+            g.discard(d)
+        k = int(rng.integers(len(groups) + 1))
+        if k == len(groups):
+            groups.append({d})
+        else:
+            groups[k].add(d)
+    return _canon([frozenset(g) for g in groups])
+
+
+# ---------------------------------------------------------------------------
+# Fitness
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SearchResult:
+    assignment: Assignment
+    attainment: float
+    history: List[Tuple[float, float]]    # (wall_seconds, best_attainment)
+    evaluations: int
+
+
+class Evaluator:
+    def __init__(self, cluster: Cluster, model: cm.ModelProfile,
+                 task: cm.Task, *, deadline: float, rate: float,
+                 sim_duration: float = 60.0, seed: int = 0,
+                 max_stages: int = 8):
+        self.cluster = cluster
+        self.model = model
+        self.task = task
+        self.deadline = deadline
+        self.rate = rate
+        self.sim_duration = sim_duration
+        self.seed = seed
+        self.max_stages = max_stages
+        self._plan_cache: Dict[FrozenSet[int], Optional[PipelinePlan]] = {}
+        self._fit_cache: Dict[Individual, Tuple[float, float]] = {}
+        self.evaluations = 0
+
+    def _feasible(self, group: FrozenSet[int]) -> bool:
+        """Early check (§4.3): group memory must hold one model copy."""
+        total = sum(self.cluster.devices[d].spec.mem_bytes for d in group)
+        need = self.model.params_per_layer * self.model.num_layers \
+            * self.task.bytes_per_el
+        return total >= need
+
+    def plan(self, group: FrozenSet[int]) -> Optional[PipelinePlan]:
+        if group not in self._plan_cache:
+            if not self._feasible(group):
+                self._plan_cache[group] = None
+            else:
+                self._plan_cache[group] = optimize_pipeline(
+                    self.cluster, sorted(group), self.model, self.task,
+                    max_stages=self.max_stages)
+        return self._plan_cache[group]
+
+    def assignment(self, ind: Individual) -> Assignment:
+        plans = [self.plan(g) for g in ind]
+        return Assignment([p for p in plans if p is not None])
+
+    def fitness(self, ind: Individual) -> Tuple[float, float]:
+        """(SLO attainment, -mean latency) to maximize lexicographically."""
+        if ind in self._fit_cache:
+            return self._fit_cache[ind]
+        self.evaluations += 1
+        asg = self.assignment(ind)
+        reps = [slo_sim.ReplicaModel(p.cost, p.bottleneck)
+                for p in asg.pipelines]
+        att = slo_sim.simulate(reps, self.rate, self.deadline,
+                               duration=self.sim_duration, seed=self.seed)
+        mean_lat = np.mean([p.cost for p in asg.pipelines]) if asg.pipelines \
+            else float("inf")
+        out = (att, -mean_lat)
+        self._fit_cache[ind] = out
+        return out
+
+
+def search(cluster: Cluster, model: cm.ModelProfile, task: cm.Task, *,
+           deadline: float, rate: float, iters: int = 60,
+           pop_size: int = 10, seed: int = 0, mutation: str = "hexgen",
+           sim_duration: float = 60.0, max_stages: int = 8,
+           init: Optional[List[Individual]] = None) -> SearchResult:
+    """The full two-phase search: genetic over partitions, DP inside."""
+    rng = np.random.default_rng(seed)
+    ev = Evaluator(cluster, model, task, deadline=deadline, rate=rate,
+                   sim_duration=sim_duration, seed=seed,
+                   max_stages=max_stages)
+    if init is None:
+        if mutation == "hexgen":
+            pop = kmeans_init(cluster, rng)
+        else:
+            # strawman: random partitions
+            pop = []
+            for _ in range(4):
+                k = int(rng.integers(1, max(2, len(cluster) // 4)))
+                a = rng.integers(0, k, size=len(cluster))
+                pop.append(_canon([frozenset(np.flatnonzero(a == c).tolist())
+                                   for c in range(k)]))
+    else:
+        pop = list(init)
+    mut = mutate if mutation == "hexgen" else mutate_random
+
+    t0 = time.monotonic()
+    scored = sorted(((ev.fitness(i), i) for i in pop), reverse=True)
+    history = [(time.monotonic() - t0, scored[0][0][0])]
+    for _ in range(iters):
+        # sample parents biased to the best
+        parents = [i for _, i in scored[:max(2, pop_size // 2)]]
+        children = []
+        for p in parents:
+            child = mut(p, rng)
+            if mutation == "hexgen":
+                # early feasibility pruning of offspring groups
+                if not any(ev._feasible(g) for g in child):
+                    continue
+            children.append(child)
+        allc = {i for _, i in scored} | set(children)
+        scored = sorted(((ev.fitness(i), i) for i in allc), reverse=True)
+        scored = scored[:pop_size]
+        history.append((time.monotonic() - t0, scored[0][0][0]))
+    best = scored[0][1]
+    asg = ev.assignment(best)
+    return SearchResult(assignment=asg, attainment=scored[0][0][0],
+                        history=history, evaluations=ev.evaluations)

@@ -1,0 +1,30 @@
+"""Two-phase HexGen scheduler: public entry point (Contribution 2)."""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.configs import get_config
+from repro.core import cost_model as cm
+from repro.core import genetic
+from repro.core.cluster import Cluster
+from repro.core.genetic import SearchResult
+
+
+def schedule(cluster: Cluster, arch: str, task: cm.Task, *,
+             deadline: float, rate: float, iters: int = 60,
+             seed: int = 0, mutation: str = "hexgen",
+             paper_exact: bool = False,
+             max_stages: int = 8) -> SearchResult:
+    """Find an assignment of `cluster` serving `arch` replicas.
+
+    deadline: SLO latency bound (s); rate: request rate (req/s).
+    mutation="random" reproduces the paper's strawman baseline.
+    """
+    cfg = get_config(arch)
+    profile = cm.ModelProfile.from_config(cfg, paper_exact=paper_exact,
+                                          bytes_per_el=task.bytes_per_el)
+    res = genetic.search(cluster, profile, task, deadline=deadline,
+                         rate=rate, iters=iters, seed=seed,
+                         mutation=mutation, max_stages=max_stages)
+    res.assignment.validate(cfg.num_layers)
+    return res

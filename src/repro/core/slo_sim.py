@@ -1,0 +1,99 @@
+"""AlpaServe-style inference workload simulator (§4.3 "Put it together",
+§5.1 evaluation metrics).
+
+Requests arrive by a Poisson process (exponential inter-arrival, rate
+lambda); each request is dispatched to the replica whose queue admits it
+earliest; a replica is a pipeline that admits a new request every
+`bottleneck` seconds (stages overlap across requests) and completes it
+`latency` seconds after admission. SLO attainment = fraction of requests
+finishing within the deadline.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaModel:
+    latency: float        # end-to-end time of one request on this pipeline
+    bottleneck: float     # min inter-admission gap (max stage time)
+
+
+def poisson_arrivals(rate: float, duration: float, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    ts = []
+    t = 0.0
+    while True:
+        t += rng.exponential(1.0 / rate)
+        if t > duration:
+            break
+        ts.append(t)
+    return np.asarray(ts)
+
+
+def simulate(replicas: Sequence[ReplicaModel], rate: float, deadline: float,
+             *, duration: float = 120.0, seed: int = 0) -> float:
+    """Returns SLO attainment in [0, 1]."""
+    if not replicas:
+        return 0.0
+    arrivals = poisson_arrivals(rate, duration, seed)
+    if len(arrivals) == 0:
+        return 1.0
+    next_free = np.zeros(len(replicas))
+    ok = 0
+    for t in arrivals:
+        # least-loaded dispatch: earliest possible admission
+        starts = np.maximum(next_free, t)
+        r = int(np.argmin(starts + [rep.latency for rep in replicas]))
+        start = max(next_free[r], t)
+        finish = start + replicas[r].latency
+        next_free[r] = start + replicas[r].bottleneck
+        if finish - t <= deadline:
+            ok += 1
+    return ok / len(arrivals)
+
+
+def attainment_curve(replicas: Sequence[ReplicaModel], rates: Sequence[float],
+                     deadline: float, **kw) -> List[float]:
+    return [simulate(replicas, r, deadline, **kw) for r in rates]
+
+
+def min_deadline_for_attainment(replicas: Sequence[ReplicaModel], rate: float,
+                                target: float = 0.99, *, duration: float = 120.0,
+                                seed: int = 0, hi: float = 1e4) -> float:
+    """Smallest deadline achieving `target` attainment (bisection)."""
+    lo = 0.0
+    hi0 = hi
+    if simulate(replicas, rate, hi0, duration=duration, seed=seed) < target:
+        return float("inf")
+    for _ in range(40):
+        mid = (lo + hi) / 2
+        if simulate(replicas, rate, mid, duration=duration, seed=seed) >= target:
+            hi = mid
+        else:
+            lo = mid
+    return hi
+
+
+def peak_rate_for_attainment(replicas: Sequence[ReplicaModel],
+                             deadline: float, target: float = 0.99, *,
+                             duration: float = 120.0, seed: int = 0,
+                             hi: float = 64.0) -> float:
+    """Largest request rate sustaining `target` attainment (bisection)."""
+    if simulate(replicas, 1e-3, deadline, duration=duration, seed=seed) < target:
+        return 0.0
+    lo = 1e-3
+    while simulate(replicas, hi, deadline, duration=duration, seed=seed) >= target:
+        hi *= 2
+        if hi > 1e5:
+            return hi
+    for _ in range(30):
+        mid = (lo + hi) / 2
+        if simulate(replicas, mid, deadline, duration=duration, seed=seed) >= target:
+            lo = mid
+        else:
+            hi = mid
+    return lo

@@ -1,0 +1,106 @@
+"""Pallas TPU flash-decode: one query token against a long KV cache.
+
+Tiling: grid (batch, q_head, kv_blocks); kv innermost/sequential with
+online-softmax scratch in VMEM, like flash_attention but with q_len == 1 —
+the kernel keeps the single query row resident in VREGs while streaming
+kv_block x head_dim tiles from the cache (the HBM-bandwidth-bound regime of
+decode). Out-of-range cache slots (kv_len / kv_start) are masked via iota.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, start_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, scale, nk, kv_block, use_len,
+            use_start):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kpos = ik * kv_block + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (1, kv_block), 1)
+    mask = jnp.ones((1, kv_block), jnp.bool_)
+    if use_len:
+        mask &= kpos < len_ref[0]
+    if use_start:
+        mask &= kpos >= start_ref[0]
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (1, d)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (kvblk, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m_new[:, None]))
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k, v, *, kv_len=None, kv_start=None,
+                            kv_block=512, scale=None, interpret=False):
+    """q (b,1,hq,d); k,v (b,S,hkv,d) -> (b,1,hq,d)."""
+    b, one, hq, d = q.shape
+    assert one == 1
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    kv_block = min(kv_block, skv)
+    assert skv % kv_block == 0
+    nk = skv // kv_block
+
+    qt = jnp.moveaxis(q, 2, 1)                          # (b,hq,1,d)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    use_len = kv_len is not None
+    use_start = kv_start is not None
+    lenb = kv_len if use_len else jnp.zeros((b,), jnp.int32)
+    startb = kv_start if use_start else jnp.zeros((b,), jnp.int32)
+
+    kern = functools.partial(_kernel, scale=scale, nk=nk, kv_block=kv_block,
+                             use_len=use_len, use_start=use_start)
+    out = pl.pallas_call(
+        kern,
+        grid=(b, hq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda ib, ih, ik: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, kv_block, d),
+                         lambda ib, ih, ik: (ib, ih // g, ik, 0)),
+            pl.BlockSpec((1, 1, kv_block, d),
+                         lambda ib, ih, ik: (ib, ih // g, ik, 0)),
+            pl.BlockSpec((1,), lambda ib, ih, ik: (ib,)),
+            pl.BlockSpec((1,), lambda ib, ih, ik: (ib,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d), lambda ib, ih, ik: (ib, ih, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qt, kt, vt, lenb, startb)
+    return jnp.moveaxis(out, 1, 2)

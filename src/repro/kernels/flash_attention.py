@@ -1,0 +1,128 @@
+"""Pallas TPU flash-attention (prefill/training forward).
+
+Tiling: grid (batch, q_head, q_blocks, kv_blocks); the kv axis is the
+innermost (sequential on TPU), so the online-softmax state (m, l, acc) lives
+in VMEM scratch carried across kv steps and the output tile is emitted on the
+last kv step. Block shapes are MXU-friendly (q_block x head_dim and
+kv_block x head_dim tiles, multiples of 128 for full-size configs). GQA maps
+q-head h to kv-head h // (hq // hkv) in the k/v BlockSpec index maps.
+
+Masking (causal / sliding window / kv_len / kv_start) is applied with
+broadcasted iotas inside the kernel; fully-masked tiles short-circuit to
+zero contribution. Validated against ref.attention_ref in interpret mode
+(CPU) by tests/test_kernels.py; real-TPU execution uses the same code path.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, start_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, scale, causal, window, nk,
+            q_block, kv_block, use_len, use_start):
+    ib = pl.program_id(0)
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    qpos = iq * q_block + jax.lax.broadcasted_iota(jnp.int32,
+                                                   (q_block, kv_block), 0)
+    kpos = ik * kv_block + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (q_block, kv_block), 1)
+    mask = jnp.ones((q_block, kv_block), jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    if use_len:
+        mask &= kpos < len_ref[0]
+    if use_start:
+        mask &= kpos >= start_ref[0]
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (qblk, d)
+    k = k_ref[0, 0].astype(jnp.float32)                 # (kvblk, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m_new[:, None]))
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == nk - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal=True, window=0, kv_len=None,
+                           kv_start=None, q_block=512, kv_block=512,
+                           scale=None, interpret=False):
+    """q (b,sq,hq,d); k,v (b,skv,hkv,d) -> (b,sq,hq,d)."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, skv)
+    assert sq % q_block == 0 and skv % kv_block == 0, (sq, skv)
+    nq, nk = sq // q_block, skv // kv_block
+    if window >= skv:
+        window = 0
+
+    qt = jnp.moveaxis(q, 2, 1)                          # (b,hq,sq,d)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    use_len = kv_len is not None
+    use_start = kv_start is not None
+    lenb = kv_len if use_len else jnp.zeros((b,), jnp.int32)
+    startb = kv_start if use_start else jnp.zeros((b,), jnp.int32)
+
+    grid = (b, hq, nq, nk)
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window, nk=nk,
+        q_block=q_block, kv_block=kv_block, use_len=use_len,
+        use_start=use_start)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q_block, d),
+                         lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, kv_block, d),
+                         lambda ib, ih, iq, ik: (ib, ih // g, ik, 0)),
+            pl.BlockSpec((1, 1, kv_block, d),
+                         lambda ib, ih, iq, ik: (ib, ih // g, ik, 0)),
+            pl.BlockSpec((1,), lambda ib, ih, iq, ik: (ib,)),
+            pl.BlockSpec((1,), lambda ib, ih, iq, ik: (ib,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_block, d),
+                               lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block, d), jnp.float32),      # acc
+            pltpu.VMEM((q_block,), jnp.float32),        # m
+            pltpu.VMEM((q_block,), jnp.float32),        # l
+        ],
+        interpret=interpret,
+    )(qt, kt, vt, lenb, startb)
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,153 @@
+"""Pure-jnp oracles for every kernel. Simple, obviously-correct, O(s^2) where
+applicable. Tests assert the Pallas kernels and the chunked XLA paths in
+ops.py against these.
+
+Shape conventions:
+  q:     (b, s_q, h_q, d)
+  k, v:  (b, s_kv, h_kv, d)      h_q % h_kv == 0 (GQA)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q, k):
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    # -> (b, hkv, g, sq, skv)
+    return jnp.einsum("bshgd,bthd->bhgst", qg, k)
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, q_offset=0,
+                  kv_len=None, kv_start=None, scale=None):
+    """Full materialized attention oracle.
+
+    q_offset: absolute position of q[0] (for decode / chunked prefill).
+    window:   sliding-window size (0 = full). Query at abs position p attends
+              to keys in [p-window+1, p].
+    kv_len:   optional (b,) valid KV lengths (positions >= len are masked).
+    kv_start: optional (b,) first valid KV position (left-padding mask).
+    """
+    orig_dtype = q.dtype
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    s = _gqa_scores(q, k) * scale                      # (b,hkv,g,sq,skv)
+
+    qpos = jnp.arange(sq) + q_offset                   # (sq,)
+    kpos = jnp.arange(skv)                             # (skv,)
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    if kv_len is not None:
+        lmask = kpos[None, :] < kv_len[:, None]        # (b,skv)
+        s = jnp.where(lmask[:, None, None, None], s, NEG_INF)
+    if kv_start is not None:
+        smask = kpos[None, :] >= kv_start[:, None]     # (b,skv)
+        s = jnp.where(smask[:, None, None, None], s, NEG_INF)
+
+    m = s.max(-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(-1, keepdims=True)
+    o = jnp.einsum("bhgst,bthd->bshgd", p / jnp.maximum(l, 1e-30), v)
+    # fully-masked rows (e.g. pad queries) return exactly 0
+    dead = (m <= NEG_INF / 2)
+    o = jnp.where(jnp.moveaxis(dead, 3, 1), 0.0, o)
+    return o.reshape(b, sq, hq, d).astype(orig_dtype)
+
+
+def decode_attention_ref(q, k, v, *, kv_len=None, kv_start=None, window=0,
+                         scale=None):
+    """One-token decode oracle: q is (b, 1, hq, d); cache (b, S, hkv, d).
+
+    With a sliding-window ring cache the caller passes the ring contents and
+    kv_len = full cache size (every slot valid); ordering inside the ring
+    does not matter for attention (softmax is permutation-invariant).
+    """
+    b, one, hq, d = q.shape
+    assert one == 1
+    skv = k.shape[1]
+    if kv_len is None:
+        kv_len = jnp.full((b,), skv, dtype=jnp.int32)
+    # decode never needs the causal triangle: all cached keys are in the past.
+    return attention_ref(q, k, v, causal=False, window=0, kv_len=kv_len,
+                         kv_start=kv_start, scale=scale)
+
+
+def ssm_scan_ref(x, dt, A, B, C, D, *, h0=None):
+    """Sequential selective-scan oracle (Mamba S6).
+
+    x:  (b, s, din)      input after conv+silu
+    dt: (b, s, din)      positive step sizes (already softplus'ed)
+    A:  (din, ds)        negative real
+    B:  (b, s, ds)
+    C:  (b, s, ds)
+    D:  (din,)
+    h0: optional initial state (b, din, ds)
+    Returns (y, h_final): y (b, s, din), h_final (b, din, ds).
+    """
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    b, s, din = x.shape
+    ds = A.shape[-1]
+    h = jnp.zeros((b, din, ds), jnp.float32) if h0 is None else h0.astype(jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp                          # (b,din),(b,din),(b,ds),(b,ds)
+        dA = jnp.exp(dtt[..., None] * A[None])         # (b,din,ds)
+        dBx = (dtt * xt)[..., None] * Bt[:, None, :]   # (b,din,ds)
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, Ct)            # (b,din)
+        return h, y
+
+    xs = (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+          jnp.moveaxis(Bf, 1, 0), jnp.moveaxis(Cf, 1, 0))
+    h, ys = jax.lax.scan(step, h, xs)
+    y = jnp.moveaxis(ys, 0, 1) + xf * D[None, None].astype(jnp.float32)
+    return y.astype(x.dtype), h
+
+
+def mlstm_scan_ref(q, k, v, i_gate, f_gate, *, C0=None, n0=None):
+    """Sequential mLSTM oracle (softened sigmoid gating — see DESIGN.md).
+
+    q,k: (b, s, h, dk)   v: (b, s, h, dv)
+    i_gate, f_gate: (b, s, h) in (0,1)
+    state C: (b, h, dk, dv), n: (b, h, dk)
+    h_t = (q_t^T C_t) / max(|q_t^T n_t|, 1)
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    i_f = i_gate.astype(jnp.float32)
+    f_f = f_gate.astype(jnp.float32)
+    C = jnp.zeros((b, h, dk, dv), jnp.float32) if C0 is None else C0.astype(jnp.float32)
+    n = jnp.zeros((b, h, dk), jnp.float32) if n0 is None else n0.astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(dk)
+
+    def step(carry, inp):
+        C, n = carry
+        qt, kt, vt, it, ft = inp
+        C = ft[..., None, None] * C + it[..., None, None] * (
+            kt[..., :, None] * vt[..., None, :])
+        n = ft[..., None] * n + it[..., None] * kt
+        num = jnp.einsum("bhk,bhkv->bhv", qt * scale, C)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", qt * scale, n))
+        y = num / jnp.maximum(den, 1.0)[..., None]
+        return (C, n), y
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (qf, kf, vf, i_f, f_f))
+    (C, n), ys = jax.lax.scan(step, (C, n), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(q.dtype), (C, n)

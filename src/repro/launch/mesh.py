@@ -1,0 +1,24 @@
+"""Production meshes for the TPU v5e target.
+
+Functions, not module constants: importing this module never touches jax
+device state. The dry-run (launch/dryrun.py) sets
+``--xla_force_host_platform_device_count=512`` before calling these.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(multi_pod: bool = False):
+    """Axes the global batch shards over."""
+    return ("pod", "data") if multi_pod else ("data",)
+
+
+MODEL_AXIS = "model"
+TP = 16

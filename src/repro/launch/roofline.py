@@ -1,0 +1,150 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+  compute term    = HLO_FLOPs / (chips x peak)         [197 TFLOP/s bf16]
+  memory term     = HLO_bytes / (chips x HBM bw)       [819 GB/s]
+  collective term = collective_bytes / (chips x link)  [~50 GB/s ICI]
+
+cost_analysis() of the SPMD-partitioned module reports *per-partition*
+FLOPs/bytes, so the terms divide by per-chip peaks directly. Collective
+bytes are parsed from the partitioned HLO text: we sum the result-shape
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute op (per-partition shapes; an approximation of wire
+bytes documented in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO result type, incl. tuples: '(bf16[2,3], f32[4])'."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum per-partition result bytes per collective kind."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w-]+)", ls)
+        if not m:
+            continue
+        opname = m.group(2)
+        for kind in _COLLECTIVES:
+            if opname == kind or opname.startswith(kind + "-start"):
+                out[kind] += _shape_bytes(m.group(1))
+                break
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per chip
+    hbm_bytes: float             # per chip
+    coll_bytes: Dict[str, int]   # per chip, by kind
+    model_flops: float           # 6 N D (analytic, global)
+    chips: int
+    xla_raw: Optional[dict] = None
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return sum(self.coll_bytes.values()) / LINK_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_frac(self) -> Optional[float]:
+        if self.flops <= 0:
+            return None
+        return self.model_flops / (self.flops * self.chips)
+
+    def as_dict(self) -> dict:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "collective_bytes_per_chip": dict(self.coll_bytes),
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_flops_frac": self.useful_flops_frac,
+            "chips": self.chips,
+            "xla_raw": self.xla_raw,
+        }
+
+
+def extract(compiled, *, model_flops: float, chips: int) -> Roofline:
+    """Primary numbers from the trip-count-aware analyzer
+    (launch/hlo_analysis.py); XLA's cost_analysis (which counts while bodies
+    once) is kept in xla_raw for reference."""
+    from repro.launch import hlo_analysis
+
+    xla_cost = {}
+    try:
+        xla_cost = compiled.cost_analysis() or {}
+        if isinstance(xla_cost, list):
+            xla_cost = xla_cost[0]
+    except Exception:
+        pass
+    try:
+        text = compiled.as_text()
+    except Exception:
+        text = ""
+    c = hlo_analysis.analyze(text)
+    rl = Roofline(flops=c.flops, hbm_bytes=c.bytes,
+                  coll_bytes={k: int(v) for k, v in c.coll.items()},
+                  model_flops=model_flops, chips=chips)
+    rl.xla_raw = {"flops": float(xla_cost.get("flops", 0.0)),
+                  "bytes accessed": float(xla_cost.get("bytes accessed", 0.0))}
+    return rl
+
+
+def model_flops_estimate(cfg, shape) -> float:
+    """6·N_active·D for train (fwd+bwd), 2·N_active·D for inference."""
+    n_active = cfg.active_params
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch      # one decode token

@@ -1,0 +1,158 @@
+"""ShapeDtypeStruct input stand-ins + sharding assembly for every
+(arch x input-shape x mesh) dry-run combination. No device allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+from repro.launch import mesh as mesh_lib
+from repro.models import model as M
+from repro.models import parallel_ctx, shardings
+from repro.training import optimizer
+from repro.training.train_step import make_train_step
+
+SDS = jax.ShapeDtypeStruct
+
+# full-attention archs run long_500k only as a documented sliding-window
+# variant (DESIGN.md "Shape skips"); whisper-base skips it entirely.
+SWA_OVERRIDE_WINDOW = 8192
+LONG_SKIP = {"whisper-base"}
+
+
+def resolve_config(arch: str, shape_name: str) -> ModelConfig:
+    cfg = get_config(arch)
+    if shape_name == "long_500k":
+        if arch in LONG_SKIP:
+            raise ValueError(f"{arch} skips long_500k (see DESIGN.md)")
+        sub_quadratic = cfg.family in ("hybrid", "ssm") or cfg.swa_window
+        if not sub_quadratic:
+            cfg = dataclasses.replace(cfg, swa_window=SWA_OVERRIDE_WINDOW)
+    return cfg
+
+
+def token_struct(cfg: ModelConfig, shape: InputShape):
+    """Batch dict of ShapeDtypeStructs (text tokens + modality stubs)."""
+    b = shape.global_batch
+    s = shape.seq_len
+    batch = {}
+    if shape.kind == "decode":
+        pass
+    else:
+        st = s - cfg.num_image_tokens
+        batch["tokens"] = SDS((b, st), jnp.int32)
+        if cfg.num_image_tokens:
+            batch["image_embeds"] = SDS((b, cfg.num_image_tokens,
+                                         cfg.d_model), jnp.dtype(cfg.dtype))
+        if cfg.is_encoder_decoder:
+            batch["enc_frames"] = SDS((b, cfg.encoder_seq_len, cfg.d_model),
+                                      jnp.dtype(cfg.dtype))
+    return batch
+
+
+def axis_size(mesh, name: str) -> int:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return sizes.get(name, 1)
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, multi_pod: bool,
+                mesh=None):
+    d = mesh_lib.data_axes(multi_pod)
+    b = shape.global_batch
+    if mesh is not None:
+        nd = 1
+        for ax in d:
+            nd *= axis_size(mesh, ax)
+    else:
+        nd = 32 if multi_pod else 16
+    bspec = d if b % nd == 0 else (None if b < nd else d[-1])
+    specs = {}
+    if shape.kind != "decode":
+        specs["tokens"] = P(bspec, None)
+        if cfg.num_image_tokens:
+            specs["image_embeds"] = P(bspec, None, None)
+        if cfg.is_encoder_decoder:
+            specs["enc_frames"] = P(bspec, None, None)
+    return specs, bspec
+
+
+def params_struct(cfg: ModelConfig):
+    return jax.eval_shape(partial(M.init_params, cfg), jax.random.PRNGKey(0))
+
+
+def cache_struct(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(partial(M.init_cache, cfg, batch, max_len))
+
+
+def _with_ctx(fn, mesh, multi_pod):
+    """Give the model code the ambient mesh at trace time (shard_map MoE)."""
+    def wrapped(*a):
+        with parallel_ctx.use_mesh(mesh, mesh_lib.data_axes(multi_pod),
+                                   mesh_lib.MODEL_AXIS):
+            return fn(*a)
+    return wrapped
+
+
+def build_dryrun(arch: str, shape_name: str, mesh, multi_pod: bool):
+    """Returns (step_fn, arg structs tuple, in_shardings tuple, donate)."""
+    cfg = resolve_config(arch, shape_name)
+    shape = INPUT_SHAPES[shape_name]
+    tp = axis_size(mesh, mesh_lib.MODEL_AXIS)
+
+    pstruct = params_struct(cfg)
+    pspec = shardings.param_specs(cfg, pstruct, tp=tp)
+    psh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspec)
+    bstruct = token_struct(cfg, shape)
+    bspec, bax = batch_specs(cfg, shape, multi_pod, mesh)
+    bsh = {k: NamedSharding(mesh, s) for k, s in bspec.items()}
+
+    if shape.kind == "train":
+        opt_cfg = optimizer.AdamWConfig()
+        ostruct = jax.eval_shape(partial(optimizer.init), pstruct)
+        osh = optimizer.AdamWState(
+            step=NamedSharding(mesh, P()),
+            mu=jax.tree.map(lambda s: NamedSharding(mesh, s), pspec),
+            nu=jax.tree.map(lambda s: NamedSharding(mesh, s), pspec))
+        fn = _with_ctx(make_train_step(cfg, opt_cfg), mesh, multi_pod)
+        return (fn, (pstruct, ostruct, bstruct), (psh, osh, bsh),
+                {"donate_argnums": (0, 1)}, cfg)
+
+    if shape.kind == "prefill":
+        cstruct = cache_struct(cfg, shape.global_batch, shape.seq_len)
+        cspec = shardings.cache_specs(cfg, cstruct, tp=tp, data_axis=bax)
+        csh = jax.tree.map(lambda s: NamedSharding(mesh, s), cspec)
+
+        def prefill_fn(params, batch, cache):
+            return M.prefill(cfg, params, batch, cache)
+
+        return (_with_ctx(prefill_fn, mesh, multi_pod),
+                (pstruct, bstruct, cstruct), (psh, bsh, csh),
+                {"donate_argnums": (2,)}, cfg)
+
+    # decode: one new token against a cache of seq_len
+    b = shape.global_batch
+    cstruct = cache_struct(cfg, b, shape.seq_len)
+    shard_seq = (b == 1)        # long_500k: context parallelism over data
+    cspec = shardings.cache_specs(cfg, cstruct, tp=tp, data_axis=bax,
+                                  shard_seq_over_data=shard_seq,
+                                  seq_over_model_if_kv_replicated=True)
+    csh = jax.tree.map(lambda s: NamedSharding(mesh, s), cspec)
+    tstruct = SDS((b,), jnp.int32)
+    tsh = NamedSharding(mesh, P(bax if b > 1 else None))
+    posst = SDS((), jnp.int32)
+    possh = NamedSharding(mesh, P())
+
+    def decode_fn(params, tokens, cache, pos):
+        return M.decode_step(cfg, params, tokens, cache, pos)
+
+    return (_with_ctx(decode_fn, mesh, multi_pod),
+            (pstruct, tstruct, cstruct, posst),
+            (psh, tsh, csh, possh), {"donate_argnums": (2,)}, cfg)

@@ -1,0 +1,88 @@
+"""Training driver.
+
+  PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m --steps 50 \
+      [--reduced] [--batch 8] [--seq 128] [--ckpt-dir ckpts] [--log-every 10]
+
+Full-size configs on the production mesh are exercised via dryrun.py; this
+driver actually executes, so on CPU use --reduced or a small arch.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs import get_config
+from repro.models import model as M
+from repro.training import optimizer
+from repro.training.data import DataConfig, SyntheticStream
+from repro.training.train_step import make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    print(f"arch={cfg.name} params~{cfg.total_params/1e6:.1f}M "
+          f"batch={args.batch} seq={args.seq}")
+
+    key = jax.random.PRNGKey(args.seed)
+    params = M.init_params(cfg, key)
+    opt_cfg = optimizer.AdamWConfig(lr=args.lr, warmup_steps=20,
+                                    total_steps=args.steps)
+    opt_state = optimizer.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg), donate_argnums=(0, 1))
+
+    data = SyntheticStream(DataConfig(vocab_size=cfg.vocab_size,
+                                      seq_len=args.seq,
+                                      batch_size=args.batch,
+                                      seed=args.seed))
+    start = 0
+    if args.ckpt_dir and (s := ckpt.latest_step(args.ckpt_dir)) is not None:
+        params, opt_state, meta = ckpt.restore(args.ckpt_dir, s, params,
+                                               opt_state)
+        start = meta["step"]
+        print(f"resumed from step {start}")
+
+    t0 = time.time()
+    losses = []
+    for step in range(start, args.steps):
+        batch = {k: jax.numpy.asarray(v) for k, v in data.batch(step).items()}
+        if cfg.num_image_tokens:
+            batch["image_embeds"] = jax.numpy.zeros(
+                (args.batch, cfg.num_image_tokens, cfg.d_model), cfg.dtype)
+        if cfg.is_encoder_decoder:
+            batch["enc_frames"] = jax.numpy.zeros(
+                (args.batch, cfg.encoder_seq_len, cfg.d_model), cfg.dtype)
+        params, opt_state, loss = step_fn(params, opt_state, batch)
+        losses.append(float(loss))
+        if (step + 1) % args.log_every == 0:
+            rate = (step + 1 - start) * args.batch * args.seq / (time.time() - t0)
+            print(f"step {step+1:5d} loss {float(loss):.4f} "
+                  f"({rate:.0f} tok/s)")
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            ckpt.save(args.ckpt_dir, step + 1, params, opt_state)
+    if args.ckpt_dir:
+        ckpt.save(args.ckpt_dir, args.steps, params, opt_state)
+    print(f"first-10 mean loss {np.mean(losses[:10]):.4f} -> "
+          f"last-10 mean {np.mean(losses[-10:]):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,196 @@
+"""Shared layer primitives: RMSNorm, RoPE, GQA attention blocks, MLP.
+
+All functions are pure; parameters are plain dict pytrees. Sequence mixing
+goes through repro.kernels.ops so the Pallas/XLA backend switch applies
+uniformly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.quant import mm
+
+
+def rms_norm(x, w, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def layer_norm(x, w, b, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w + b
+
+
+def rope(x, positions, theta):
+    """x: (b, s, h, d); positions: (b, s) or (s,). theta==0 disables."""
+    if theta == 0.0:
+        return x
+    d = x.shape[-1]
+    freqs = 1.0 / (theta ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (b,s,d/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions, d):
+    """Whisper-style sinusoidal embeddings. positions (b,s) -> (b,s,d)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32)
+                    / (half - 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention block
+# ---------------------------------------------------------------------------
+
+def _qkv(p, x, cfg):
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    q = mm(x, p["wq"])
+    k = mm(x, p["wk"])
+    v = mm(x, p["wv"])
+    if cfg.attn_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(b, s, cfg.num_heads, hd)
+    k = k.reshape(b, s, cfg.num_kv_heads, hd)
+    v = v.reshape(b, s, cfg.num_kv_heads, hd)
+    return q, k, v
+
+
+def attn_prefill(p, x, cfg, *, positions, kv_start=None, cache=None,
+                 window=None):
+    """Self-attention over a full (left-padded) prompt.
+
+    positions (b,s) absolute; kv_start (b,) first valid index per row.
+    Returns (out, new_cache). cache is written when provided:
+      full cache:  {"k": (b,S,hkv,hd), "v": ...} written at [0:s]
+      ring cache:  {"k": (b,W,hkv,hd), ...} last W keys
+    """
+    window = cfg.swa_window if window is None else window
+    q, k, v = _qkv(p, x, cfg)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    o = ops.flash_attention(q, k, v, causal=True, window=window,
+                            kv_start=kv_start)
+    b, s, _, _ = q.shape
+    out = mm(o.reshape(b, s, -1), p["wo"])
+    new_cache = None
+    if cache is not None:
+        if window and cache["k"].shape[1] <= window:
+            W = cache["k"].shape[1]
+            if s >= W:
+                # true ring layout: position p lives at slot p % W, so the
+                # decode write at slot pos % W evicts exactly the oldest key
+                ck = jnp.roll(k[:, -W:], s % W, axis=1)
+                cv = jnp.roll(v[:, -W:], s % W, axis=1)
+            else:
+                pad = W - s
+                ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            new_cache = {"k": ck.astype(cache["k"].dtype),
+                         "v": cv.astype(cache["v"].dtype)}
+        else:
+            S = cache["k"].shape[1]
+            nk = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), 0, axis=1)
+            nv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), 0, axis=1)
+            new_cache = {"k": nk, "v": nv}
+    return out, new_cache
+
+
+def attn_decode(p, x, cfg, *, pos, kv_start=None, cache=None, window=None):
+    """One-token decode. x (b,1,d); pos: scalar int (uniform batch — the
+    static-batching and dry-run path, in-place DUS write) or an int32 (b,)
+    array of PER-ROW positions (continuous batching — scatter write).
+
+    Full cache: write k,v at [pos], attend to [0:pos+1) minus kv_start pad.
+    Ring cache (SWA): write at pos % W, attend to all valid ring slots.
+    """
+    window = cfg.swa_window if window is None else window
+    q, k, v = _qkv(p, x, cfg)
+    b = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    per_row = pos.ndim > 0
+    posb = pos[:, None] if per_row else jnp.full((b, 1), pos, jnp.int32)
+    q = rope(q, posb, cfg.rope_theta)
+    k = rope(k, posb, cfg.rope_theta)
+    ring = window and cache["k"].shape[1] <= window
+    ridx = jnp.arange(b)
+    if ring:
+        W = cache["k"].shape[1]
+        slot = jnp.mod(pos, W)
+        if per_row:
+            nk = cache["k"].at[ridx, slot].set(
+                k[:, 0].astype(cache["k"].dtype))
+            nv = cache["v"].at[ridx, slot].set(
+                v[:, 0].astype(cache["v"].dtype))
+        else:
+            nk = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+            nv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        kv_len = jnp.broadcast_to(jnp.minimum(pos + 1, W), (b,))
+        o = ops.decode_attention(q, nk, nv, kv_len=kv_len)
+    else:
+        if per_row:
+            nk = cache["k"].at[ridx, pos].set(k[:, 0].astype(cache["k"].dtype))
+            nv = cache["v"].at[ridx, pos].set(v[:, 0].astype(cache["v"].dtype))
+        else:
+            nk = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+            nv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+        kv_len = jnp.broadcast_to(pos + 1, (b,))
+        o = ops.decode_attention(q, nk, nv, kv_len=kv_len, kv_start=kv_start)
+    out = mm(o.reshape(b, 1, -1), p["wo"])
+    return out, {"k": nk, "v": nv}
+
+
+def cross_attn(p, x, cfg, *, enc_kv=None, enc_out=None):
+    """Whisper cross-attention. enc_kv: precomputed {"k","v"} over encoder
+    frames (cached at prefill); or compute from enc_out."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim_
+    q = mm(x, p["wq"]).reshape(b, s, cfg.num_heads, hd)
+    if enc_kv is None:
+        se = enc_out.shape[1]
+        k = mm(enc_out, p["wk"]).reshape(b, se, cfg.num_kv_heads, hd)
+        v = mm(enc_out, p["wv"]).reshape(b, se, cfg.num_kv_heads, hd)
+        enc_kv = {"k": k, "v": v}
+    o = ops.flash_attention(q, enc_kv["k"].astype(q.dtype),
+                            enc_kv["v"].astype(q.dtype), causal=False)
+    return mm(o.reshape(b, s, -1), p["wo"]), enc_kv
+
+
+def attn_encoder(p, x, cfg):
+    """Bidirectional self-attention (whisper encoder)."""
+    q, k, v = _qkv(p, x, cfg)
+    o = ops.flash_attention(q, k, v, causal=False)
+    b, s = x.shape[:2]
+    return mm(o.reshape(b, s, -1), p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp(p, x, cfg):
+    if cfg.activation == "silu":
+        return mm(jax.nn.silu(mm(x, p["w_gate"])) * mm(x, p["w_up"]),
+                  p["w_down"])
+    return mm(jax.nn.gelu(mm(x, p["w_up"])), p["w_down"])

@@ -1,0 +1,95 @@
+"""Mamba (S6) selective-SSM block, Jamba-style.
+
+Prefill/train use the chunked parallel scan in kernels.ops (Pallas on TPU);
+decode is a single-step state update. TP sharding follows the Megatron
+pattern: in_proj column-parallel over d_inner, out_proj row-parallel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.quant import mm
+
+
+def _dt_rank(cfg):
+    return cfg.ssm_dt_rank or -(-cfg.d_model // 16)
+
+
+def d_inner(cfg):
+    return cfg.ssm_expand * cfg.d_model
+
+
+def _project(p, x, cfg, valid=None):
+    """Shared pre-scan computation. x (b,s,d) -> xz pieces + dt/B/C."""
+    xz = mm(x, p["in_proj"])                             # (b,s,2*din)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    return xi, z
+
+
+def _ssm_inputs(p, xi, cfg, valid=None):
+    dtr = _dt_rank(cfg)
+    ds = cfg.ssm_d_state
+    dbc = mm(xi, p["x_proj"])                            # (b,s,dtr+2ds)
+    dt_raw = dbc[..., :dtr]
+    B = dbc[..., dtr:dtr + ds]
+    C = dbc[..., dtr + ds:]
+    dt = jax.nn.softplus(mm(dt_raw, p["dt_proj"]) + p["dt_bias"])
+    if valid is not None:
+        dt = dt * valid[..., None].astype(dt.dtype)   # pad steps = identity
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    return dt, A, B, C
+
+
+def mamba_prefill(p, x, cfg, *, valid=None, cache=None):
+    """x (b,s,d); valid (b,s) 0/1 mask for left-padding.
+    Returns (out, new_cache) where cache = {"conv": (b,w-1,din), "h": (b,din,ds)}."""
+    b, s, _ = x.shape
+    xi, z = _project(p, x, cfg)
+    if valid is not None:
+        xi = xi * valid[..., None].astype(xi.dtype)
+    # causal depthwise conv1d, width w
+    w = cfg.ssm_d_conv
+    xpad = jnp.pad(xi, ((0, 0), (w - 1, 0), (0, 0)))
+    xc = _depthwise_conv(xpad, p["conv_w"], p["conv_b"])   # (b,s,din)
+    xc = jax.nn.silu(xc)
+    dt, A, B, C = _ssm_inputs(p, xc, cfg, valid=valid)
+    y, h = ops.ssm_scan(xc, dt, A, B, C, p["D"])
+    out = mm(y * jax.nn.silu(z), p["out_proj"])
+    new_cache = None
+    if cache is not None:
+        conv_tail = xpad[:, -(w - 1):] if w > 1 else xpad[:, :0]
+        new_cache = {"conv": conv_tail.astype(cache["conv"].dtype),
+                     "h": h.astype(cache["h"].dtype)}
+    return out, new_cache
+
+
+def mamba_decode(p, x, cfg, *, cache):
+    """x (b,1,d). cache {"conv": (b,w-1,din), "h": (b,din,ds)}."""
+    b = x.shape[0]
+    w = cfg.ssm_d_conv
+    xi, z = _project(p, x, cfg)                       # (b,1,din)
+    hist = jnp.concatenate(
+        [cache["conv"].astype(xi.dtype), xi], axis=1)  # (b,w,din)
+    kern = p["conv_w"]                                # (din,w)
+    xc = jnp.einsum("bwd,dw->bd", hist, kern) + p["conv_b"]
+    xc = jax.nn.silu(xc)[:, None, :]                  # (b,1,din)
+    dt, A, B, C = _ssm_inputs(p, xc, cfg)
+    y, h = ops.ssm_step(xc[:, 0], dt[:, 0], A, B[:, 0], C[:, 0], p["D"],
+                        cache["h"].astype(jnp.float32))
+    out = mm(y[:, None, :] * jax.nn.silu(z), p["out_proj"])
+    new_cache = {"conv": hist[:, 1:].astype(cache["conv"].dtype),
+                 "h": h.astype(cache["h"].dtype)}
+    return out, new_cache
+
+
+def _depthwise_conv(xpad, kern, bias):
+    """xpad (b, s+w-1, din); kern (din, w) -> (b, s, din) causal."""
+    w = kern.shape[-1]
+    s = xpad.shape[1] - (w - 1)
+    # unrolled taps: w is tiny (4)
+    out = jnp.zeros((xpad.shape[0], s, xpad.shape[2]), xpad.dtype)
+    for i in range(w):
+        out = out + xpad[:, i:i + s] * kern[:, i][None, None, :]
+    return out + bias[None, None, :]

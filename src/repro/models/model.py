@@ -1,0 +1,555 @@
+"""Model assembly: init / train-forward / prefill / decode for every family.
+
+Layer stacks are organized into *periods*: the layer pattern of a hybrid
+model (e.g. Jamba's mamba x7 + attn, MoE every 2) repeats with period
+``period_len(cfg)``; parameters for each period position are stacked over a
+leading ``n_periods`` axis and the stack is applied with ``jax.lax.scan`` so
+the lowered HLO contains one period body regardless of depth — this keeps
+the 512-device dry-run compiles tractable.
+
+Caches are pytrees with the same period stacking and are carried through the
+scan as (xs -> ys).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, MAMBA, MLSTM, SLSTM, ModelConfig
+from repro.models import layers, mamba, moe, xlstm
+from repro.models.quant import mm
+
+
+# ---------------------------------------------------------------------------
+# Period structure
+# ---------------------------------------------------------------------------
+
+def period_len(cfg: ModelConfig) -> int:
+    p = len(cfg.layer_pattern) if cfg.layer_pattern else 1
+    m = cfg.moe_every if cfg.num_experts else 1
+    return math.lcm(p, m)
+
+
+def n_periods(cfg: ModelConfig) -> int:
+    pl = period_len(cfg)
+    assert cfg.num_layers % pl == 0, (cfg.name, cfg.num_layers, pl)
+    return cfg.num_layers // pl
+
+
+def sub_kinds(cfg: ModelConfig):
+    """Kind + moe flag for each position within one period."""
+    return [(cfg.layer_kind(j), cfg.is_moe_layer(j))
+            for j in range(period_len(cfg))]
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def _norm_params(cfg, P, d=None):
+    d = d or cfg.d_model
+    w = jnp.ones((P, d), _pdt(cfg))
+    if cfg.is_encoder_decoder:                      # LayerNorm with bias
+        return {"w": w, "b": jnp.zeros((P, d), _pdt(cfg))}
+    return {"w": w}
+
+
+def _pdt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+def _rand(key, name, shape, cfg, scale=0.02):
+    k = jax.random.fold_in(key, hash(name) % (2 ** 31))
+    return (jax.random.normal(k, shape, jnp.float32) * scale).astype(_pdt(cfg))
+
+
+def _init_attn(key, cfg, P, cross=False):
+    d, hd = cfg.d_model, cfg.head_dim_
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    out_scale = 0.02 / math.sqrt(2 * cfg.num_layers)
+    p = {
+        "wq": _rand(key, "wq", (P, d, hq * hd), cfg),
+        "wk": _rand(key, "wk", (P, d, hkv * hd), cfg),
+        "wv": _rand(key, "wv", (P, d, hkv * hd), cfg),
+        "wo": _rand(key, "wo", (P, hq * hd, d), cfg, out_scale),
+    }
+    if cfg.attn_bias and not cross:
+        p["bq"] = jnp.zeros((P, hq * hd), _pdt(cfg))
+        p["bk"] = jnp.zeros((P, hkv * hd), _pdt(cfg))
+        p["bv"] = jnp.zeros((P, hkv * hd), _pdt(cfg))
+    return p
+
+
+def _init_mlp(key, cfg, P):
+    d, f = cfg.d_model, cfg.d_ff
+    out_scale = 0.02 / math.sqrt(2 * cfg.num_layers)
+    if cfg.activation == "silu":
+        return {"w_gate": _rand(key, "w_gate", (P, d, f), cfg),
+                "w_up": _rand(key, "w_up", (P, d, f), cfg),
+                "w_down": _rand(key, "w_down", (P, f, d), cfg, out_scale)}
+    return {"w_up": _rand(key, "w_up", (P, d, f), cfg),
+            "w_down": _rand(key, "w_down", (P, f, d), cfg, out_scale)}
+
+
+def _init_moe(key, cfg, P):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    out_scale = 0.02 / math.sqrt(2 * cfg.num_layers)
+    p = {"router": _rand(key, "router", (P, d, E), cfg)}
+    if cfg.activation == "silu":
+        p["w_gate"] = _rand(key, "moe_gate", (P, E, d, f), cfg)
+        p["w_up"] = _rand(key, "moe_up", (P, E, d, f), cfg)
+    else:
+        p["w_up"] = _rand(key, "moe_up", (P, E, d, f), cfg)
+    p["w_down"] = _rand(key, "moe_down", (P, E, f, d), cfg, out_scale)
+    return p
+
+
+def _init_mamba(key, cfg, P):
+    d = cfg.d_model
+    din = mamba.d_inner(cfg)
+    dtr = mamba._dt_rank(cfg)
+    ds = cfg.ssm_d_state
+    w = cfg.ssm_d_conv
+    A = jnp.tile(jnp.arange(1, ds + 1, dtype=jnp.float32)[None, None],
+                 (P, din, 1))
+    dt_init = jnp.exp(jax.random.uniform(
+        jax.random.fold_in(key, 7), (P, din)) *
+        (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))   # inv softplus
+    return {
+        "in_proj": _rand(key, "in_proj", (P, d, 2 * din), cfg),
+        "conv_w": _rand(key, "conv_w", (P, din, w), cfg, 0.1),
+        "conv_b": jnp.zeros((P, din), _pdt(cfg)),
+        "x_proj": _rand(key, "x_proj", (P, din, dtr + 2 * ds), cfg),
+        "dt_proj": _rand(key, "dt_proj", (P, dtr, din), cfg, 0.1),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((P, din), jnp.float32),
+        "out_proj": _rand(key, "mam_out", (P, din, d), cfg,
+                          0.02 / math.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def _init_mlstm(key, cfg, P):
+    d = cfg.d_model
+    din = xlstm.m_d_inner(cfg)
+    qk = xlstm.m_qk_dim(cfg)
+    h = cfg.num_heads
+    return {
+        "w_up": _rand(key, "w_up", (P, d, 2 * din), cfg),
+        "wq": _rand(key, "m_wq", (P, din, qk), cfg),
+        "wk": _rand(key, "m_wk", (P, din, qk), cfg),
+        "wv": _rand(key, "m_wv", (P, din, din), cfg),
+        "w_i": _rand(key, "m_wi", (P, din, h), cfg),
+        "w_f": _rand(key, "m_wf", (P, din, h), cfg),
+        "out_proj": _rand(key, "m_out", (P, din, d), cfg,
+                          0.02 / math.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def _init_slstm(key, cfg, P):
+    d = cfg.d_model
+    heads = cfg.num_heads
+    dh = d // heads
+    p = {"out_proj": _rand(key, "s_out", (P, d, d), cfg,
+                           0.02 / math.sqrt(2 * cfg.num_layers))}
+    for g in ("z", "i", "f", "o"):
+        p[f"w_{g}"] = _rand(key, f"s_w{g}", (P, d, d), cfg)
+        p[f"r_{g}"] = _rand(key, f"s_r{g}", (P, heads, dh, dh), cfg)
+        b = jnp.zeros((P, d), _pdt(cfg))
+        if g == "f":
+            b = b + 1.0  # forget-gate bias toward remembering
+        p[f"b_{g}"] = b
+    return p
+
+
+def _init_sub(key, cfg, j, kind, is_moe, P):
+    key = jax.random.fold_in(key, j)
+    sub = {"ln1": _norm_params(cfg, P)}
+    if kind == ATTN:
+        sub["mixer"] = _init_attn(key, cfg, P)
+    elif kind == MAMBA:
+        sub["mixer"] = _init_mamba(key, cfg, P)
+    elif kind == MLSTM:
+        sub["mixer"] = _init_mlstm(key, cfg, P)
+    elif kind == SLSTM:
+        sub["mixer"] = _init_slstm(key, cfg, P)
+    if cfg.is_encoder_decoder:
+        sub["lnx"] = _norm_params(cfg, P)
+        sub["xattn"] = _init_attn(jax.random.fold_in(key, 91), cfg, P,
+                                  cross=True)
+    has_mlp = cfg.d_ff > 0 and kind in (ATTN, MAMBA)
+    if has_mlp:
+        sub["ln2"] = _norm_params(cfg, P)
+        if is_moe:
+            sub["moe"] = _init_moe(jax.random.fold_in(key, 17), cfg, P)
+        else:
+            sub["mlp"] = _init_mlp(jax.random.fold_in(key, 19), cfg, P)
+    return sub
+
+
+def init_params(cfg: ModelConfig, key):
+    P = n_periods(cfg)
+    params = {
+        "embed": _rand(key, "embed", (cfg.vocab_size, cfg.d_model), cfg),
+        "final_norm": {"w": jnp.ones((cfg.d_model,), _pdt(cfg)),
+                       **({"b": jnp.zeros((cfg.d_model,), _pdt(cfg))}
+                          if cfg.is_encoder_decoder else {})},
+        "blocks": {
+            f"sub{j}": _init_sub(key, cfg, j, kind, is_moe, P)
+            for j, (kind, is_moe) in enumerate(sub_kinds(cfg))
+        },
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = _rand(key, "lm_head",
+                                  (cfg.d_model, cfg.vocab_size), cfg)
+    if cfg.is_encoder_decoder:
+        Pe = cfg.num_encoder_layers
+        ekey = jax.random.fold_in(key, 1234)
+        params["encoder"] = {
+            "blocks": {"sub0": {
+                "ln1": _norm_params(cfg, Pe),
+                "mixer": _init_attn(ekey, cfg, Pe),
+                "ln2": _norm_params(cfg, Pe),
+                "mlp": _init_mlp(jax.random.fold_in(ekey, 3), cfg, Pe),
+            }},
+            "final_norm": {"w": jnp.ones((cfg.d_model,), _pdt(cfg)),
+                           "b": jnp.zeros((cfg.d_model,), _pdt(cfg))},
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    """Stacked (n_periods, ...) cache pytree. max_len = prompt + new tokens."""
+    P = n_periods(cfg)
+    dt = dtype or _pdt(cfg)
+    hd = cfg.head_dim_
+    cache = {}
+    for j, (kind, _) in enumerate(sub_kinds(cfg)):
+        c = {}
+        if kind == ATTN:
+            S = min(max_len, cfg.swa_window) if cfg.swa_window else max_len
+            c["k"] = jnp.zeros((P, batch, S, cfg.num_kv_heads, hd), dt)
+            c["v"] = jnp.zeros((P, batch, S, cfg.num_kv_heads, hd), dt)
+            if cfg.is_encoder_decoder:
+                c["cross_k"] = jnp.zeros(
+                    (P, batch, cfg.encoder_seq_len, cfg.num_kv_heads, hd), dt)
+                c["cross_v"] = jnp.zeros(
+                    (P, batch, cfg.encoder_seq_len, cfg.num_kv_heads, hd), dt)
+        elif kind == MAMBA:
+            din = mamba.d_inner(cfg)
+            c["conv"] = jnp.zeros((P, batch, cfg.ssm_d_conv - 1, din), dt)
+            c["h"] = jnp.zeros((P, batch, din, cfg.ssm_d_state), jnp.float32)
+        elif kind == MLSTM:
+            h = cfg.num_heads
+            qk_h = xlstm.m_qk_dim(cfg) // h
+            v_h = xlstm.m_d_inner(cfg) // h
+            c["C"] = jnp.zeros((P, batch, h, qk_h, v_h), jnp.float32)
+            c["n"] = jnp.zeros((P, batch, h, qk_h), jnp.float32)
+        elif kind == SLSTM:
+            for nm in ("c", "n", "m", "h"):
+                c[nm] = jnp.zeros((P, batch, cfg.d_model), jnp.float32)
+        cache[f"sub{j}"] = c
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Stack application
+# ---------------------------------------------------------------------------
+
+def _norm(cfg, p, x):
+    if cfg.is_encoder_decoder:
+        return layers.layer_norm(x, p["w"], p["b"], cfg.norm_eps)
+    return layers.rms_norm(x, p["w"], cfg.norm_eps)
+
+
+def apply_sublayer_seq(cfg, kind, sp, x, sc, *, positions, kv_start, valid,
+                       enc_out, mode):
+    """One block (mixer [+ cross-attn] [+ MLP/MoE]) over a full sequence.
+    mode: 'train' (no cache) | 'prefill' (write cache).
+    Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = _norm(cfg, sp["ln1"], x)
+    if kind == ATTN:
+        mixer_cache = None
+        if mode == "prefill" and sc is not None:
+            mixer_cache = {"k": sc["k"], "v": sc["v"]}
+        o, mc = layers.attn_prefill(sp["mixer"], h, cfg, positions=positions,
+                                    kv_start=kv_start, cache=mixer_cache)
+        nc = dict(mc) if mc is not None else {}
+    elif kind == MAMBA:
+        o, mc = mamba.mamba_prefill(sp["mixer"], h, cfg, valid=valid,
+                                    cache=sc if mode == "prefill" else None)
+        nc = mc or {}
+    elif kind == MLSTM:
+        o, mc = xlstm.mlstm_prefill(sp["mixer"], h, cfg, valid=valid,
+                                    cache=sc if mode == "prefill" else None)
+        nc = mc or {}
+    elif kind == SLSTM:
+        o, mc = xlstm.slstm_prefill(sp["mixer"], h, cfg, valid=valid,
+                                    cache=sc if mode == "prefill" else None)
+        nc = mc or {}
+    x = x + o
+    if cfg.is_encoder_decoder:
+        hx = _norm(cfg, sp["lnx"], x)
+        if mode == "prefill" and sc is not None:
+            o, ekv = layers.cross_attn(sp["xattn"], hx, cfg, enc_out=enc_out)
+            nc["cross_k"] = ekv["k"].astype(sc["cross_k"].dtype)
+            nc["cross_v"] = ekv["v"].astype(sc["cross_v"].dtype)
+        else:
+            o, _ = layers.cross_attn(sp["xattn"], hx, cfg, enc_out=enc_out)
+        x = x + o
+    if "mlp" in sp:
+        x = x + layers.mlp(sp["mlp"], _norm(cfg, sp["ln2"], x), cfg)
+    elif "moe" in sp:
+        o, a = moe.moe_mlp(sp["moe"], _norm(cfg, sp["ln2"], x), cfg,
+                           return_aux=True)
+        x = x + o
+        aux = aux + a
+    return x, nc, aux
+
+
+def apply_sublayer_decode(cfg, kind, sp, x, sc, *, pos, kv_start):
+    """One block for a single decode token. Returns (x, new_cache)."""
+    h = _norm(cfg, sp["ln1"], x)
+    if kind == ATTN:
+        o, mc = layers.attn_decode(sp["mixer"], h, cfg, pos=pos,
+                                   kv_start=kv_start,
+                                   cache={"k": sc["k"], "v": sc["v"]})
+        nc = dict(mc)
+        if cfg.is_encoder_decoder:
+            nc["cross_k"], nc["cross_v"] = sc["cross_k"], sc["cross_v"]
+    elif kind == MAMBA:
+        o, nc = mamba.mamba_decode(sp["mixer"], h, cfg, cache=sc)
+    elif kind == MLSTM:
+        o, nc = xlstm.mlstm_decode(sp["mixer"], h, cfg, cache=sc)
+    elif kind == SLSTM:
+        o, nc = xlstm.slstm_decode(sp["mixer"], h, cfg, cache=sc)
+    x = x + o
+    if cfg.is_encoder_decoder:
+        hx = _norm(cfg, sp["lnx"], x)
+        o, _ = layers.cross_attn(
+            sp["xattn"], hx, cfg,
+            enc_kv={"k": sc["cross_k"], "v": sc["cross_v"]})
+        x = x + o
+    if "mlp" in sp:
+        x = x + layers.mlp(sp["mlp"], _norm(cfg, sp["ln2"], x), cfg)
+    elif "moe" in sp:
+        x = x + moe.moe_mlp(sp["moe"], _norm(cfg, sp["ln2"], x), cfg)
+    return x, nc
+
+
+def _apply_period_seq(cfg, pp, x, cache_p, *, positions, kv_start, valid,
+                      enc_out, mode):
+    new_cache = {}
+    aux = jnp.zeros((), jnp.float32)
+    for j, (kind, _) in enumerate(sub_kinds(cfg)):
+        sc = cache_p.get(f"sub{j}") if cache_p is not None else None
+        x, nc, a = apply_sublayer_seq(cfg, kind, pp[f"sub{j}"], x, sc,
+                                      positions=positions, kv_start=kv_start,
+                                      valid=valid, enc_out=enc_out, mode=mode)
+        aux = aux + a
+        new_cache[f"sub{j}"] = nc
+    return x, new_cache, aux
+
+
+def _apply_period_decode(cfg, pp, x, cache_p, *, pos, kv_start):
+    new_cache = {}
+    for j, (kind, _) in enumerate(sub_kinds(cfg)):
+        x, nc = apply_sublayer_decode(cfg, kind, pp[f"sub{j}"], x,
+                                      cache_p[f"sub{j}"], pos=pos,
+                                      kv_start=kv_start)
+        new_cache[f"sub{j}"] = nc
+    return x, new_cache
+
+
+# Activation checkpointing for training: recompute each period in the
+# backward pass instead of saving its internals (the flash-attention chunk
+# stats would otherwise grow O(s^2)). Policy is swappable for perf studies.
+REMAT_TRAIN = True
+REMAT_POLICY = None            # e.g. jax.checkpoint_policies.dots_saveable
+
+
+def _scan_stack(cfg, blocks, x, cache, body):
+    """scan over the period axis. cache may be None (train mode)."""
+    if cache is None:
+        def f(x, pp):
+            x, _, aux = body(x, pp, None)
+            return x, aux
+        if REMAT_TRAIN:
+            f = jax.checkpoint(f, policy=REMAT_POLICY)
+        x, auxs = jax.lax.scan(f, x, blocks)
+        return x, None, auxs.sum()
+
+    def f(x, per):
+        pp, cp = per
+        x, nc, aux = body(x, pp, cp)
+        return x, (nc, aux)
+
+    x, (new_cache, auxs) = jax.lax.scan(f, x, (blocks, cache))
+    return x, new_cache, auxs.sum()
+
+
+# ---------------------------------------------------------------------------
+# Per-layer access (asymmetric pipeline executor: stages hold arbitrary
+# contiguous layer ranges, so they index into the period-stacked params)
+# ---------------------------------------------------------------------------
+
+def layer_sub_index(cfg: ModelConfig, i: int):
+    """Global layer i -> (period index, sub index within period)."""
+    pl = period_len(cfg)
+    return i // pl, i % pl
+
+
+def slice_layer_params(cfg: ModelConfig, params, i: int):
+    """Un-stacked params of global layer i (leading period dim removed)."""
+    p, j = layer_sub_index(cfg, i)
+    return jax.tree.map(lambda l: l[p], params["blocks"][f"sub{j}"])
+
+
+def init_layer_cache(cfg: ModelConfig, i: int, batch: int, max_len: int,
+                     dtype=None):
+    """Single-layer cache (no period axis)."""
+    p, j = layer_sub_index(cfg, i)
+    full = init_cache(cfg, batch, max_len, dtype)
+    return jax.tree.map(lambda l: l[0], full[f"sub{j}"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+def _embed(cfg, params, tokens):
+    x = params["embed"][tokens]
+    if cfg.family == "vlm":                      # gemma-style scaling
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def _head(cfg, params, x):
+    x = _norm(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        return x @ params["embed"].T
+    return mm(x, params["lm_head"])
+
+
+def _encoder_forward(cfg, params, frames):
+    """Whisper encoder over stub frame embeddings (b, se, d)."""
+    b, se, d = frames.shape
+    pos = jnp.arange(se)[None].repeat(b, 0)
+    x = frames + layers.sinusoidal_positions(pos, d).astype(frames.dtype)
+    ep = params["encoder"]
+
+    def body(x, pp):
+        h = _norm(cfg, pp["ln1"], x)
+        x = x + layers.attn_encoder(pp["mixer"], h, cfg)
+        x = x + layers.mlp(pp["mlp"], _norm(cfg, pp["ln2"], x), cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, ep["blocks"]["sub0"])
+    return layers.layer_norm(x, ep["final_norm"]["w"], ep["final_norm"]["b"],
+                             cfg.norm_eps)
+
+
+def _prep_input_seq(cfg, params, batch):
+    """tokens (+ modality stubs) -> (x, positions, extra_prefix_len)."""
+    tokens = batch["tokens"]
+    b, st = tokens.shape
+    x = _embed(cfg, params, tokens)
+    prefix = 0
+    if cfg.num_image_tokens:
+        img = batch["image_embeds"].astype(x.dtype)   # (b, n_img, d)
+        x = jnp.concatenate([img, x], axis=1)
+        prefix = cfg.num_image_tokens
+    s = x.shape[1]
+    positions = jnp.arange(s)[None].repeat(b, 0)
+    if cfg.is_encoder_decoder and cfg.rope_theta == 0.0:
+        x = x + layers.sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
+    return x, positions, prefix
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def train_forward(cfg: ModelConfig, params, batch):
+    """Full-sequence causal logits for training.
+    batch: {"tokens": (b,s)} + optional "image_embeds"/"enc_frames".
+    Returns (logits (b, s_total, V), aux_loss)."""
+    x, positions, _ = _prep_input_seq(cfg, params, batch)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encoder_forward(cfg, params, batch["enc_frames"])
+
+    def body(x, pp, cp):
+        return _apply_period_seq(cfg, pp, x, cp, positions=positions,
+                                 kv_start=None, valid=None, enc_out=enc_out,
+                                 mode="train")
+
+    x, _, aux = _scan_stack(cfg, params["blocks"], x, None, body)
+    return _head(cfg, params, x), aux
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    """Next-token cross entropy over the text positions."""
+    logits, aux = train_forward(cfg, params, batch)
+    tokens = batch["tokens"]
+    prefix = cfg.num_image_tokens
+    logits = logits[:, prefix:, :]
+    pred = logits[:, :-1]
+    tgt = tokens[:, 1:]
+    logp = jax.nn.log_softmax(pred.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return nll.mean() + aux
+
+
+def prefill(cfg: ModelConfig, params, batch, cache, *, kv_start=None):
+    """Prompt pass; fills cache; returns (last-position logits (b,V), cache).
+    Prompts are left-padded to uniform length; kv_start (b,) = pad amounts."""
+    x, positions, _ = _prep_input_seq(cfg, params, batch)
+    b, s = x.shape[:2]
+    valid = None
+    if kv_start is not None:
+        valid = (jnp.arange(s)[None, :] >= kv_start[:, None]).astype(jnp.int32)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = _encoder_forward(cfg, params, batch["enc_frames"])
+
+    def body(x, pp, cp):
+        return _apply_period_seq(cfg, pp, x, cp, positions=positions,
+                                 kv_start=kv_start, valid=valid,
+                                 enc_out=enc_out, mode="prefill")
+
+    x, new_cache, _ = _scan_stack(cfg, params["blocks"], x, cache, body)
+    logits = _head(cfg, params, x[:, -1:, :])[:, 0]
+    return logits, new_cache
+
+
+def decode_step(cfg: ModelConfig, params, tokens, cache, pos, *,
+                kv_start=None):
+    """One decode step. tokens (b,); pos: scalar absolute position of the
+    new token (uniform batch, left-padded prompts) or an int32 (b,) array of
+    per-row positions (continuous batching)."""
+    x = _embed(cfg, params, tokens[:, None])
+    if cfg.is_encoder_decoder and cfg.rope_theta == 0.0:
+        b = tokens.shape[0]
+        pos_a = jnp.asarray(pos)
+        posb = pos_a[:, None] if pos_a.ndim else jnp.full((b, 1), pos_a)
+        x = x + layers.sinusoidal_positions(posb, cfg.d_model).astype(x.dtype)
+
+    def f(x, per):
+        pp, cp = per
+        x, nc = _apply_period_decode(cfg, pp, x, cp, pos=pos,
+                                     kv_start=kv_start)
+        return x, nc
+
+    x, new_cache = jax.lax.scan(f, x, (params["blocks"], cache))
+    logits = _head(cfg, params, x)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,27 @@
+"""Ambient parallel context for model code running under the production
+mesh. Launchers (dryrun/train/serve) set this; CPU unit tests leave it
+unset and models take their local (GSPMD-free) paths.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Tuple
+
+MESH = None                         # jax.sharding.Mesh
+DATA_AXES: Tuple[str, ...] = ()     # ("data",) or ("pod", "data")
+MODEL_AXIS: Optional[str] = None    # "model"
+
+
+@contextlib.contextmanager
+def use_mesh(mesh, data_axes, model_axis):
+    global MESH, DATA_AXES, MODEL_AXIS
+    prev = (MESH, DATA_AXES, MODEL_AXIS)
+    MESH, DATA_AXES, MODEL_AXIS = mesh, tuple(data_axes), model_axis
+    try:
+        yield
+    finally:
+        MESH, DATA_AXES, MODEL_AXIS = prev
+
+
+def active() -> bool:
+    return MESH is not None

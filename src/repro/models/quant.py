@@ -1,0 +1,74 @@
+"""Weight-only int8 quantization (beyond-paper; HexGen economics lever:
+B_type=1 halves the cost model's memory limits, so the scheduler packs ~2x
+the replicas into the same pool — see benchmarks/bench_quant_economics.py).
+
+Per-output-channel symmetric int8: a 2-D+ matmul weight W (..., in, out)
+becomes {"q": int8, "s": f32 (out,)}. Dequantization fuses into the matmul
+as a post-scale: x @ W ≈ (x @ q) * s, exact for per-out-channel scales.
+layers/moe/mamba/xlstm route every weight matmul through `mm()` so the
+quantized pytree is a drop-in replacement for the bf16 one.
+
+Quantized leaves keep their Megatron PartitionSpec on "q" and shard "s"
+with the output channels.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# weight leaf names eligible for quantization (matmul weights only; norms,
+# biases, SSM dynamics (A_log, D, dt), conv taps, routers and the embedding
+# gather stay full)
+QUANT_LEAVES = {
+    "wq", "wk", "wv", "wo", "w_gate", "w_up", "w_down", "in_proj",
+    "out_proj", "x_proj", "dt_proj", "lm_head",
+    "w_z", "w_i", "w_f", "w_o",
+}
+
+
+def is_quantized(w) -> bool:
+    return isinstance(w, dict) and "q" in w and "s" in w
+
+
+def mm(x, w):
+    """x @ w for plain or quantized 2-D w (fused dequant post-scale)."""
+    if is_quantized(w):
+        y = x @ w["q"].astype(x.dtype)
+        return y * w["s"].astype(x.dtype)
+    return x @ w
+
+
+def quantize_leaf(w, contract_axis: int = -2):
+    """Symmetric int8 with scales over every non-contraction dim: 2-D
+    (in, out) -> s (out,); 3-D expert weights (E, in, out) -> s (E, out)."""
+    wf = jnp.asarray(w, jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=contract_axis, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": jnp.squeeze(scale, contract_axis).astype(jnp.float32)}
+
+
+def dequantize_leaf(wq, contract_axis: int = -2):
+    s = jnp.expand_dims(wq["s"], contract_axis)
+    return wq["q"].astype(jnp.float32) * s
+
+
+def quantize_params(params, cfg):
+    """Quantize every eligible matmul weight in the pytree."""
+
+    def walk(tree, path=()):
+        if isinstance(tree, dict) and not is_quantized(tree):
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        name = path[-1] if path else ""
+        if name in QUANT_LEAVES and hasattr(tree, "ndim") and tree.ndim >= 2:
+            return quantize_leaf(tree)
+        return tree
+
+    return walk(params)
+
+
+def quant_bytes(params) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(params):
+        total += leaf.size * leaf.dtype.itemsize
+    return total

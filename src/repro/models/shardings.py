@@ -1,0 +1,164 @@
+"""Parameter/activation PartitionSpec rules (Megatron-style TP) used by both
+the asymmetric pipeline executor (per-stage meshes) and the production-mesh
+dry-run.
+
+Column-parallel: wq/wk/wv, w_gate/w_up, mamba in_proj  -> shard output dim
+Row-parallel:    wo, w_down, mamba/mlstm out_proj      -> shard input dim
+Experts:         (E,d,f) shards E over 'model' when E % tp == 0, else d_ff
+Embedding:       vocab-sharded; lm_head vocab-sharded
+KV heads:        sharded only when num_kv_heads % tp == 0, else replicated
+                 (granite-20b MQA, granite-8b kv=8 on tp=16 -> replicated)
+Anything unmatched is replicated. The sublayer kind (attention vs mamba vs
+mLSTM vs sLSTM) is recovered from the ``subJ`` path element so shared leaf
+names (wq/wk/wv) resolve correctly.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ATTN, MAMBA, MLSTM, SLSTM, ModelConfig
+from repro.models.model import sub_kinds
+
+
+def _div(n: int, tp: int) -> bool:
+    return tp > 0 and n % tp == 0
+
+
+def param_specs(cfg: ModelConfig, params, *, model_axis: str = "model",
+                tp: int = 1):
+    """PartitionSpec pytree matching `params`. Leaves inside params["blocks"]
+    (and encoder blocks) carry a leading period axis -> prepend None."""
+    m = model_axis if tp > 1 else None
+    kinds = sub_kinds(cfg)
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim_
+    E, f = cfg.num_experts, cfg.d_ff
+    din = cfg.ssm_expand * cfg.d_model
+    qk = int(din * cfg.xlstm_qk_dim_factor)
+    heads = cfg.num_heads
+
+    def spec(path, leaf) -> P:
+        names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        name = names[-1]
+        stacked = "blocks" in names
+        in_moe = "moe" in names
+        in_mixer = "mixer" in names
+        kind = ATTN
+        for n in names:
+            if isinstance(n, str) and n.startswith("sub") and n != "sub":
+                if "encoder" not in names:
+                    kind = kinds[int(n[3:])][0]
+
+        def wrap(*dims):
+            dims = list(dims) + [None] * (leaf.ndim - len(dims)
+                                          - (1 if stacked else 0))
+            return P(*([None] + dims if stacked else dims))
+
+        if m is None:
+            return wrap()
+        if name == "embed":
+            return P(m if _div(cfg.vocab_size, tp) else None, None)
+        if name == "lm_head":
+            return P(None, m if _div(cfg.vocab_size, tp) else None)
+
+        if in_mixer and kind in (ATTN,) or name in ("wq", "wk", "wv", "wo",
+                                                    "bq", "bk", "bv") \
+                and kind == ATTN:
+            if name == "wq":
+                return wrap(None, m) if _div(hq * hd, tp) else wrap()
+            if name == "bq":
+                return wrap(m) if _div(hq * hd, tp) else wrap()
+            if name in ("wk", "wv"):
+                return wrap(None, m) if _div(hkv, tp) else wrap()
+            if name in ("bk", "bv"):
+                return wrap(m) if _div(hkv, tp) else wrap()
+            if name == "wo":
+                return wrap(m, None) if _div(hq * hd, tp) else wrap()
+
+        if in_mixer and kind == MAMBA:
+            sd = _div(din, tp)
+            if name == "in_proj":
+                return wrap(None, m) if sd else wrap()
+            if name in ("conv_w", "conv_b", "A_log", "D", "dt_bias",
+                        "x_proj"):
+                return wrap(m) if sd else wrap()
+            if name == "dt_proj":
+                return wrap(None, m) if sd else wrap()
+            if name == "out_proj":
+                return wrap(m, None) if sd else wrap()
+
+        if in_mixer and kind == MLSTM:
+            sd = _div(din, tp)
+            if name == "w_up":
+                return wrap(None, m) if sd else wrap()
+            if name in ("wq", "wk", "wv", "w_i", "w_f"):
+                return wrap(m, None) if sd else wrap()
+            if name == "out_proj":
+                return wrap()                 # y replicated after psum
+            return wrap()
+
+        if in_mixer and kind == SLSTM:
+            return wrap()                     # tiny; replicate
+
+        # MoE MLP
+        if in_moe:
+            if name == "router":
+                return wrap()
+            se = _div(E, tp)
+            sf = _div(f, tp)
+            if name in ("w_gate", "w_up"):
+                return wrap(m, None, None) if se else (
+                    wrap(None, None, m) if sf else wrap())
+            if name == "w_down":
+                return wrap(m, None, None) if se else (
+                    wrap(None, m, None) if sf else wrap())
+        # dense MLP
+        if name in ("w_gate", "w_up"):
+            return wrap(None, m) if _div(f, tp) else wrap()
+        if name == "w_down":
+            return wrap(m, None) if _div(f, tp) else wrap()
+        return wrap()
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def cache_specs(cfg: ModelConfig, cache, *, model_axis: str = "model",
+                data_axis=None, tp: int = 1,
+                shard_seq_over_data: bool = False,
+                seq_over_model_if_kv_replicated: bool = False):
+    """Specs for the KV/state cache pytree (leading period axis on leaves).
+
+    Batch shards over `data_axis`; KV heads / din over `model_axis` when
+    divisible; long-context (batch=1) shards the KV sequence over data
+    instead (context parallelism). When kv_heads % tp != 0 (MQA/GQA narrower
+    than the mesh) the head dim cannot shard — `seq_over_model_if_kv_
+    replicated` shards the cache SEQUENCE over the model axis instead
+    (flash-decode style), cutting per-chip cache 16x (EXPERIMENTS.md §Perf).
+    """
+    m = model_axis if tp > 1 else None
+    d = data_axis
+
+    def spec(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        name = names[-1]
+        nd = leaf.ndim
+        if name in ("k", "v", "cross_k", "cross_v"):
+            hkv = leaf.shape[3]
+            S = leaf.shape[2]
+            hshard = m if (m and hkv % tp == 0) else None
+            if shard_seq_over_data:
+                return P(None, None, d, hshard, None)
+            sshard = None
+            if (hshard is None and seq_over_model_if_kv_replicated
+                    and m and S % tp == 0):
+                sshard = m
+            return P(None, d, sshard, hshard, None)
+        if name == "conv":
+            din = leaf.shape[3]
+            return P(None, d, None, m if (m and din % tp == 0) else None)
+        if name == "h" and nd == 4:                       # mamba state
+            din = leaf.shape[2]
+            return P(None, d, m if (m and din % tp == 0) else None, None)
+        return P(*([None, d] + [None] * (nd - 2)))
+
+    return jax.tree_util.tree_map_with_path(spec, cache)

@@ -1,0 +1,196 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked linear attention) and sLSTM
+(scalar memory, sequential recurrence with exponential gating + stabilizer).
+
+mLSTM gating uses sigmoid i/f (softened vs the paper's exp input gate) so the
+chunked-parallel form stays numerically bounded -- see DESIGN.md §3.
+sLSTM keeps the paper's exponential gating with the m_t stabilizer since it is
+a sequential scan anyway. sLSTM recurrent matrices are block-diagonal per
+head (head-parallel under TP; no intra-timestep collective).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.quant import mm
+
+
+def m_d_inner(cfg):
+    return cfg.ssm_expand * cfg.d_model
+
+
+def m_qk_dim(cfg):
+    return int(m_d_inner(cfg) * cfg.xlstm_qk_dim_factor)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mlstm_qkv_gates(p, x, cfg, valid=None):
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    din = m_d_inner(cfg)
+    qk = m_qk_dim(cfg)
+    up = mm(x, p["w_up"])                                 # (b,s,2*din)
+    xi, z = jnp.split(up, 2, axis=-1)
+    q = mm(xi, p["wq"]).reshape(b, s, h, qk // h)
+    k = mm(xi, p["wk"]).reshape(b, s, h, qk // h)
+    v = mm(xi, p["wv"]).reshape(b, s, h, din // h)
+    ig = jax.nn.sigmoid(mm(xi, p["w_i"]))              # (b,s,h)
+    fg = jax.nn.sigmoid(mm(xi, p["w_f"]))
+    if valid is not None:
+        vm = valid.astype(ig.dtype)[..., None]
+        ig = ig * vm                                   # pad: i=0
+        fg = fg * vm + (1.0 - vm)                      # pad: f=1 (identity)
+    return q, k, v, ig, fg, z
+
+
+def mlstm_prefill(p, x, cfg, *, valid=None, cache=None):
+    q, k, v, ig, fg, z = _mlstm_qkv_gates(p, x, cfg, valid)
+    C0 = n0 = None
+    if cache is not None:
+        C0, n0 = cache["C"], cache["n"]
+    y, (C, n) = ops.mlstm_scan(q, k, v, ig, fg, C0=C0, n0=n0)
+    b, s = x.shape[:2]
+    y = y.reshape(b, s, -1)
+    out = mm(y * jax.nn.silu(z), p["out_proj"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {"C": C.astype(cache["C"].dtype),
+                     "n": n.astype(cache["n"].dtype)}
+    return out, new_cache
+
+
+def mlstm_decode(p, x, cfg, *, cache):
+    q, k, v, ig, fg, z = _mlstm_qkv_gates(p, x, cfg)
+    y, (C, n) = ops.mlstm_step(
+        q[:, 0], k[:, 0], v[:, 0], ig[:, 0], fg[:, 0],
+        cache["C"].astype(jnp.float32), cache["n"].astype(jnp.float32))
+    b = x.shape[0]
+    out = mm(y.reshape(b, 1, -1) * jax.nn.silu(z), p["out_proj"])
+    return out, {"C": C.astype(cache["C"].dtype),
+                 "n": n.astype(cache["n"].dtype)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_gates(p, x_t, h_prev, cfg):
+    """Per-step gate preactivations. x_t (b,d); h_prev (b,d).
+    Recurrent weights are block-diagonal per head: r_* (heads, dh, dh)."""
+    b = x_t.shape[0]
+    heads = cfg.num_heads
+    d = cfg.d_model
+    dh = d // heads
+    hp = h_prev.reshape(b, heads, dh)
+
+    def rec(name):
+        return jnp.einsum("bhk,hkj->bhj", hp, p[name]).reshape(b, d)
+
+    zi = mm(x_t, p["w_z"]) + rec("r_z") + p["b_z"]
+    ii = mm(x_t, p["w_i"]) + rec("r_i") + p["b_i"]
+    ff = mm(x_t, p["w_f"]) + rec("r_f") + p["b_f"]
+    oo = mm(x_t, p["w_o"]) + rec("r_o") + p["b_o"]
+    return zi, ii, ff, oo
+
+
+def _slstm_step_pre(p, g_t, state, cfg):
+    """One step given precomputed input projections g_t = {z,i,f,o: (b,d)}."""
+    c, n, m, h = state["c"], state["n"], state["m"], state["h"]
+    b, d = h.shape
+    heads = cfg.num_heads
+    hp = h.astype(g_t["z"].dtype).reshape(b, heads, d // heads)
+
+    def rec(name):
+        return jnp.einsum("bhk,hkj->bhj", hp, p[name]).reshape(b, d)
+
+    zi = g_t["z"] + rec("r_z")
+    ii = g_t["i"] + rec("r_i")
+    ff = g_t["f"] + rec("r_f")
+    oo = g_t["o"] + rec("r_o")
+    return _slstm_core(zi, ii, ff, oo, c, n, m)
+
+
+def _slstm_core(zi, ii, ff, oo, c, n, m):
+    zi, ii, ff, oo = (t.astype(jnp.float32) for t in (zi, ii, ff, oo))
+    z = jnp.tanh(zi)
+    o = jax.nn.sigmoid(oo)
+    logf = jax.nn.log_sigmoid(ff)
+    m_new = jnp.maximum(logf + m, ii)
+    i_s = jnp.exp(ii - m_new)
+    f_s = jnp.exp(logf + m - m_new)
+    c = f_s * c + i_s * z
+    n = f_s * n + i_s
+    h_new = o * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "m": m_new, "h": h_new}
+
+
+def slstm_step(p, x_t, state, cfg):
+    """One sLSTM step with exponential gating + stabilizer.
+    state: dict c,n,m,h each (b,d) float32."""
+    c, n, m, h = state["c"], state["n"], state["m"], state["h"]
+    zi, ii, ff, oo = slstm_gates(p, x_t, h.astype(x_t.dtype), cfg)
+    zi, ii, ff, oo = (t.astype(jnp.float32) for t in (zi, ii, ff, oo))
+    z = jnp.tanh(zi)
+    o = jax.nn.sigmoid(oo)
+    logf = jax.nn.log_sigmoid(ff)                      # exp-gate via sigmoid form
+    m_new = jnp.maximum(logf + m, ii)
+    i_s = jnp.exp(ii - m_new)
+    f_s = jnp.exp(logf + m - m_new)
+    c = f_s * c + i_s * z
+    n = f_s * n + i_s
+    h_new = o * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "m": m_new, "h": h_new}
+
+
+def slstm_prefill(p, x, cfg, *, valid=None, cache=None):
+    """Sequential scan over the sequence. x (b,s,d).
+
+    The input-side gate projections W_g x (4 gates x d^2 weights) are
+    hoisted OUT of the scan as one batched matmul, so the recurrence only
+    reads the precomputed (b,s,d) gate streams and the tiny per-head
+    recurrent blocks -- the weight matrices stream from HBM once instead of
+    once per timestep (EXPERIMENTS.md §Perf iteration 4)."""
+    b, s, d = x.shape
+    state = cache if cache is not None else slstm_init_state(b, d)
+    state = {k: v.astype(jnp.float32) for k, v in state.items()}
+
+    # hoisted input projections: (b, s, d) per gate
+    gx = {g: mm(x, p[f"w_{g}"]) + p[f"b_{g}"] for g in ("z", "i", "f", "o")}
+
+    def step(state, inp):
+        if valid is not None:
+            g_t, v_t = inp
+        else:
+            g_t, v_t = inp, None
+        new = _slstm_step_pre(p, g_t, state, cfg)
+        if v_t is not None:
+            vm = v_t.astype(jnp.float32)[:, None]
+            new = {k: vm * new[k] + (1 - vm) * state[k] for k in state}
+        return new, new["h"]
+
+    xs = {g: jnp.moveaxis(t, 1, 0) for g, t in gx.items()}
+    if valid is not None:
+        xs = (xs, jnp.moveaxis(valid, 1, 0))
+    state, hs = jax.lax.scan(step, state, xs)
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)         # (b,s,d)
+    out = mm(y, p["out_proj"])
+    new_cache = None
+    if cache is not None:
+        new_cache = {k: state[k].astype(cache[k].dtype) for k in state}
+    return out, new_cache
+
+
+def slstm_decode(p, x, cfg, *, cache):
+    state = {k: v.astype(jnp.float32) for k, v in cache.items()}
+    new = slstm_step(p, x[:, 0], state, cfg)
+    out = mm(new["h"].astype(x.dtype)[:, None, :], p["out_proj"])
+    return out, {k: new[k].astype(cache[k].dtype) for k in cache}
+
+
+def slstm_init_state(b, d):
+    z = jnp.zeros((b, d), jnp.float32)
+    return {"c": z, "n": z, "m": z, "h": z}

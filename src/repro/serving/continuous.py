@@ -1,0 +1,138 @@
+"""Continuous (iteration-level) batching — the paper's acknowledged
+limitation (Appendix D), implemented here as a beyond-paper extension.
+
+A replica owns a fixed pool of decode SLOTS backed by one pre-allocated
+cache. New requests are prefilled individually (batch=1) and their cache
+rows scattered into a free slot between decode iterations; every iteration
+decodes all active slots jointly with PER-SLOT positions; finished slots
+free immediately. Attention/MoE/SSM state is row-independent, so a
+request's outputs are bit-identical to isolated generation (tested).
+
+Works for full-KV and recurrent-state architectures; SWA ring caches
+require uniform positions and fall back to static batching (noted).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass
+class _Slot:
+    rid: int = -1
+    pos: int = 0               # next write position
+    remaining: int = 0
+    out: Optional[list] = None
+
+
+class ContinuousBatcher:
+    """Single-replica continuous batching on one jax device (monolithic
+    model apply; the asymmetric pipeline variant composes the same slot
+    logic per stage)."""
+
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 8,
+                 max_len: int = 256, key=None):
+        assert not cfg.swa_window, \
+            "SWA ring caches need uniform positions; use static batching"
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = M.init_cache(cfg, n_slots, max_len)
+        self.slots = [_Slot() for _ in range(n_slots)]
+        self._decode = jax.jit(
+            lambda p, t, c, pos: M.decode_step(cfg, p, t, c, pos))
+        self._prefill = jax.jit(
+            lambda p, batch, c: M.prefill(cfg, p, batch, c))
+        self._last_logits = np.zeros((n_slots, cfg.vocab_size), np.float32)
+
+    # ------------------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [i for i, s in enumerate(self.slots) if s.rid < 0]
+
+    @property
+    def active(self) -> bool:
+        return any(s.rid >= 0 for s in self.slots)
+
+    def insert(self, req: Request) -> int:
+        """Prefill req (batch=1) and scatter its cache row into a slot."""
+        free = self.free_slots()
+        assert free, "no free slot"
+        slot = free[0]
+        toks = jnp.asarray(req.prompt, jnp.int32)[None]
+        small = M.init_cache(self.cfg, 1, self.max_len)
+        logits, small = self._prefill(self.params, {"tokens": toks}, small)
+
+        def put(big, row):
+            return big.at[:, slot].set(row[:, 0])
+
+        self.cache = jax.tree.map(put, self.cache, small)
+        self._last_logits[slot] = np.asarray(logits[0])
+        self.slots[slot] = _Slot(rid=req.rid, pos=len(req.prompt),
+                                 remaining=req.max_new_tokens, out=[])
+        return slot
+
+    def step(self) -> Dict[int, List[int]]:
+        """One joint decode iteration. Returns {rid: finished tokens} for
+        requests that completed this step."""
+        toks = np.zeros((self.n_slots,), np.int32)
+        pos = np.zeros((self.n_slots,), np.int32)
+        for i, s in enumerate(self.slots):
+            if s.rid >= 0:
+                toks[i] = int(self._last_logits[i].argmax())
+                pos[i] = s.pos
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(toks), self.cache, jnp.asarray(pos))
+        logits = np.asarray(logits)
+        done = {}
+        for i, s in enumerate(self.slots):
+            if s.rid < 0:
+                continue
+            s.out.append(int(toks[i]))
+            s.pos += 1
+            s.remaining -= 1
+            self._last_logits[i] = logits[i]
+            if s.remaining <= 0 or s.pos >= self.max_len - 1:
+                done[s.rid] = s.out
+                self.slots[i] = _Slot()
+        return done
+
+    # ------------------------------------------------------------------
+    def serve(self, requests: Sequence[Request], *, deadline: float,
+              realtime: bool = False):
+        """Replays a workload. realtime=False: virtual clock (arrival order
+        respected, no sleeps) for deterministic tests."""
+        from repro.serving.router import ServeStats
+        pending = sorted(requests, key=lambda r: r.arrival)
+        idx = 0
+        t0 = time.monotonic()
+        while idx < len(pending) or self.active:
+            now = time.monotonic() - t0
+            while (idx < len(pending) and self.free_slots()
+                   and (pending[idx].arrival <= now or not realtime)):
+                self.insert(pending[idx])
+                idx += 1
+            if realtime and not self.active and idx < len(pending):
+                time.sleep(min(pending[idx].arrival - now, 0.05))
+                continue
+            if self.active:
+                done = self.step()
+                fin = time.monotonic() - t0
+                for r in pending:
+                    if r.rid in done:
+                        r.output = np.asarray(done[r.rid], np.int32)
+                        r.finish_time = fin
+        lats = [r.latency for r in pending]
+        att = float(np.mean([l <= deadline for l in lats])) if lats else 1.0
+        dur = max((r.finish_time for r in pending), default=1.0)
+        return ServeStats(latencies=lats, attainment=att,
+                          throughput=len(pending) / max(dur, 1e-9))

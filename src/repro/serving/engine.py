@@ -1,0 +1,64 @@
+"""Inference engine: builds replica pipelines from a scheduled Assignment and
+serves workloads through the Router.
+
+The Assignment's global device ids map onto actual jax devices: on a real
+heterogeneous deployment those are the pool's accelerators; in this repo's
+CPU demonstration they are host devices (tests spawn a subprocess with
+``--xla_force_host_platform_device_count`` to get several).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.plan import Assignment
+from repro.models import model as M
+from repro.serving.pipeline import AsymmetricPipeline
+from repro.serving.request import Request
+from repro.serving.router import Router, ServeStats
+
+
+class InferenceEngine:
+    def __init__(self, cfg: ModelConfig, assignment: Assignment, *,
+                 params=None, key=None, devices: Optional[Sequence] = None,
+                 max_batch: int = 4, quantize: bool = False):
+        self.cfg = cfg
+        devices = list(devices if devices is not None else jax.devices())
+        if params is None:
+            params = M.init_params(
+                cfg, key if key is not None else jax.random.PRNGKey(0))
+        if quantize:
+            from repro.models.quant import quantize_params
+            params = quantize_params(params, cfg)
+        self.replicas: List[AsymmetricPipeline] = []
+        for pipe in assignment.pipelines:
+            stage_devs = []
+            for st in pipe.stages:
+                mapped = [devices[d % len(devices)] for d in st.device_ids]
+                # fewer physical devices than the plan's TP degree: collapse
+                # duplicates (numerically identical; TP only changes layout)
+                uniq = list(dict.fromkeys(mapped))
+                stage_devs.append(uniq)
+            self.replicas.append(AsymmetricPipeline(
+                cfg, params, pipe.layer_split, stage_devs))
+        self.router = Router(self.replicas, max_batch=max_batch)
+
+    def generate(self, prompts: Sequence[np.ndarray], *, max_new: int = 16
+                 ) -> List[np.ndarray]:
+        """One-shot batched generation on replica 0."""
+        maxlen = max(len(p) for p in prompts)
+        toks = np.zeros((len(prompts), maxlen), np.int32)
+        kv_start = np.zeros(len(prompts), np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, maxlen - len(p):] = p
+            kv_start[i] = maxlen - len(p)
+        out = self.replicas[0].generate(toks, max_new=max_new,
+                                        kv_start=kv_start)
+        return [out[i] for i in range(len(prompts))]
+
+    def serve(self, requests: Sequence[Request], *, deadline: float
+              ) -> ServeStats:
+        return self.router.serve(requests, deadline)

@@ -1,0 +1,211 @@
+"""Asymmetric pipeline executor (Contribution 1, §3.2).
+
+Each stage owns a disjoint device subset with its OWN tensor-parallel degree
+and its OWN contiguous span of layers. Per stage we build a 1-axis
+``jax.sharding.Mesh`` ("model"), place that stage's parameters with the
+Megatron specs from models.shardings, and jit prefill/decode stage functions
+with in/out shardings. Activations move between stages with
+``jax.device_put`` onto the next stage's mesh — the paper's leader-GPU
+relay + intra-group broadcast falls out of the resharding copy (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models import layers, shardings
+
+
+def _rep(mesh):
+    return NamedSharding(mesh, P())
+
+
+class StageExecutor:
+    """One pipeline stage: layers [lo, hi) on `devices` with TP=len(devices)."""
+
+    def __init__(self, cfg: ModelConfig, params, lo: int, hi: int,
+                 devices: Sequence[jax.Device], *, is_first: bool,
+                 is_last: bool):
+        self.cfg = cfg
+        self.lo, self.hi = lo, hi
+        self.is_first, self.is_last = is_first, is_last
+        self.tp = len(devices)
+        self.mesh = Mesh(np.array(devices), ("model",))
+        self.kinds = [cfg.layer_kind(i) for i in range(lo, hi)]
+
+        # place per-layer params on this stage's mesh
+        self.layer_params = []
+        for i in range(lo, hi):
+            lp = M.slice_layer_params(cfg, params, i)
+            spec = shardings.param_specs(
+                cfg, {"blocks": {f"sub{M.layer_sub_index(cfg, i)[1]}":
+                                 jax.tree.map(lambda x: x[None], lp)}},
+                tp=self.tp)["blocks"][f"sub{M.layer_sub_index(cfg, i)[1]}"]
+            # strip the leading None of the stacked spec
+            spec = jax.tree.map(
+                lambda s: P(*s[1:]), spec,
+                is_leaf=lambda s: isinstance(s, P))
+            placed = jax.tree.map(
+                lambda x, s: jax.device_put(x, NamedSharding(self.mesh, s)),
+                lp, spec)
+            self.layer_params.append(placed)
+
+        self.head_params = None
+        if is_first or is_last:
+            hp = {"embed": params["embed"],
+                  "final_norm": params["final_norm"]}
+            if "lm_head" in params:
+                hp["lm_head"] = params["lm_head"]
+            if cfg.is_encoder_decoder and is_first:
+                hp["encoder"] = params["encoder"]
+            self.head_params = jax.device_put(hp, _rep(self.mesh))
+
+        self._prefill_jit = jax.jit(
+            partial(self._stage_seq, mode="prefill"),
+            static_argnames=())
+        self._decode_jit = jax.jit(self._stage_decode, donate_argnums=(1,))
+
+    # ---- stage bodies (pure) --------------------------------------------
+    def _stage_seq(self, x, caches, positions, kv_start, valid, enc_out, *,
+                   mode):
+        new_caches = []
+        for kind, lp, sc in zip(self.kinds, self.layer_params, caches):
+            x, nc, _ = M.apply_sublayer_seq(
+                self.cfg, kind, lp, x, sc, positions=positions,
+                kv_start=kv_start, valid=valid, enc_out=enc_out, mode=mode)
+            new_caches.append(nc)
+        return x, new_caches
+
+    def _stage_decode(self, x, caches, pos, kv_start, enc_out):
+        new_caches = []
+        for kind, lp, sc in zip(self.kinds, self.layer_params, caches):
+            x, nc = M.apply_sublayer_decode(self.cfg, kind, lp, x, sc,
+                                            pos=pos, kv_start=kv_start)
+            new_caches.append(nc)
+        return x, new_caches
+
+    # ---- cache ------------------------------------------------------------
+    def make_caches(self, batch: int, max_len: int):
+        out = []
+        for i in range(self.lo, self.hi):
+            c = M.init_layer_cache(self.cfg, i, batch, max_len)
+            out.append(jax.device_put(c, _rep(self.mesh)))
+        return out
+
+
+class AsymmetricPipeline:
+    """A full model replica as a chain of StageExecutors."""
+
+    def __init__(self, cfg: ModelConfig, params, stage_layers: Sequence[int],
+                 stage_devices: Sequence[Sequence[jax.Device]]):
+        assert sum(stage_layers) == cfg.num_layers
+        self.cfg = cfg
+        self.stages: List[StageExecutor] = []
+        lo = 0
+        for si, (nl, devs) in enumerate(zip(stage_layers, stage_devices)):
+            self.stages.append(StageExecutor(
+                cfg, params, lo, lo + nl, devs,
+                is_first=(si == 0), is_last=(si == len(stage_layers) - 1)))
+            lo += nl
+        self.caches = None
+        self._pos = 0
+        self._kv_start = None
+
+    # ---- embedding / head on first / last stage ---------------------------
+    def _embed(self, tokens, batch_extras):
+        s0 = self.stages[0]
+        hp = s0.head_params
+        x = hp["embed"][tokens]
+        if self.cfg.family == "vlm":
+            x = x * jnp.asarray(np.sqrt(self.cfg.d_model), x.dtype)
+        if self.cfg.num_image_tokens:
+            x = jnp.concatenate(
+                [batch_extras["image_embeds"].astype(x.dtype), x], axis=1)
+        return x
+
+    def _head(self, x):
+        sl = self.stages[-1]
+        hp = sl.head_params
+        x = M._norm(self.cfg, hp["final_norm"], x)
+        if self.cfg.tie_embeddings:
+            return x @ hp["embed"].T
+        return M.mm(x, hp["lm_head"])
+
+    # ---- public API --------------------------------------------------------
+    def prefill(self, tokens: np.ndarray, *, kv_start=None, max_new: int = 32,
+                batch_extras=None):
+        """tokens (b, s) left-padded; returns last-position logits (b, V)."""
+        cfg = self.cfg
+        b, s = tokens.shape
+        total = s + cfg.num_image_tokens
+        self.caches = [st.make_caches(b, total + max_new)
+                       for st in self.stages]
+        self._kv_start = None if kv_start is None else jnp.asarray(kv_start)
+        batch_extras = batch_extras or {}
+
+        enc_out = None
+        if cfg.is_encoder_decoder:
+            hp = self.stages[0].head_params
+            enc_out = M._encoder_forward(cfg, hp, batch_extras["enc_frames"])
+
+        x = self._embed(jnp.asarray(tokens), batch_extras)
+        positions = jnp.arange(total)[None].repeat(b, 0)
+        if cfg.is_encoder_decoder and cfg.rope_theta == 0.0:
+            x = x + layers.sinusoidal_positions(positions, cfg.d_model
+                                                ).astype(x.dtype)
+        valid = None
+        if self._kv_start is not None:
+            valid = (jnp.arange(total)[None, :]
+                     >= self._kv_start[:, None]).astype(jnp.int32)
+
+        for si, st in enumerate(self.stages):
+            with st.mesh:
+                x = jax.device_put(x, _rep(st.mesh))
+                eo = None
+                if enc_out is not None:
+                    eo = jax.device_put(enc_out, _rep(st.mesh))
+                x, self.caches[si] = st._prefill_jit(
+                    x, self.caches[si], positions, self._kv_start, valid, eo)
+        self._pos = total
+        return np.asarray(self._head(x[:, -1:, :])[:, 0])
+
+    def decode_step(self, tokens: np.ndarray):
+        """tokens (b,) -> next-position logits (b, V)."""
+        cfg = self.cfg
+        s0 = self.stages[0]
+        x = s0.head_params["embed"][jnp.asarray(tokens)[:, None]]
+        if cfg.family == "vlm":
+            x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
+        if cfg.is_encoder_decoder and cfg.rope_theta == 0.0:
+            posb = jnp.full((tokens.shape[0], 1), self._pos)
+            x = x + layers.sinusoidal_positions(posb, cfg.d_model
+                                                ).astype(x.dtype)
+        pos = jnp.int32(self._pos)       # traced: no retrace per step
+        for si, st in enumerate(self.stages):
+            with st.mesh:
+                x = jax.device_put(x, _rep(st.mesh))
+                x, self.caches[si] = st._decode_jit(
+                    x, self.caches[si], pos, self._kv_start, None)
+        self._pos += 1
+        return np.asarray(self._head(x)[:, 0])
+
+    def generate(self, tokens: np.ndarray, *, max_new: int, kv_start=None,
+                 batch_extras=None, greedy: bool = True):
+        """Returns (b, max_new) generated ids."""
+        logits = self.prefill(tokens, kv_start=kv_start, max_new=max_new,
+                              batch_extras=batch_extras)
+        out = []
+        for _ in range(max_new):
+            nxt = logits.argmax(-1).astype(np.int32)
+            out.append(nxt)
+            logits = self.decode_step(nxt)
+        return np.stack(out, axis=1)

@@ -1,0 +1,45 @@
+"""Requests and synthetic workloads (Poisson arrivals, §5.1)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (s,) int32 token ids
+    max_new_tokens: int
+    arrival: float = 0.0
+    # filled by the engine:
+    output: Optional[np.ndarray] = None
+    start_time: float = 0.0
+    finish_time: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        return self.finish_time - self.arrival
+
+
+def synth_workload(*, rate: float, duration: float, vocab: int,
+                   prompt_len: int = 32, prompt_jitter: int = 8,
+                   out_len: int = 16, seed: int = 0) -> List[Request]:
+    """Poisson arrivals with near-uniform prompt lengths."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    t = 0.0
+    rid = 0
+    while True:
+        t += rng.exponential(1.0 / rate)
+        if t > duration:
+            break
+        plen = prompt_len + int(rng.integers(0, prompt_jitter + 1))
+        reqs.append(Request(
+            rid=rid,
+            prompt=rng.integers(0, vocab, size=plen).astype(np.int32),
+            max_new_tokens=out_len,
+            arrival=t))
+        rid += 1
+    return reqs

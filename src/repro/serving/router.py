@@ -1,0 +1,78 @@
+"""Task coordinator (paper Appendix C): dispatches requests to the scheduled
+replica groups. Static batching per replica (Appendix D: HexGen has no
+continuous batching; we batch waiting requests up to max_batch with left
+padding)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Sequence
+
+import numpy as np
+
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass
+class ServeStats:
+    latencies: List[float]
+    attainment: float
+    throughput: float
+
+    def summary(self) -> str:
+        lat = np.asarray(self.latencies)
+        return (f"n={len(lat)} p50={np.percentile(lat, 50):.3f}s "
+                f"p99={np.percentile(lat, 99):.3f}s "
+                f"slo={self.attainment * 100:.1f}% thpt={self.throughput:.2f} req/s")
+
+
+class Router:
+    """Least-loaded dispatch over replicas, mirroring the SLO simulator."""
+
+    def __init__(self, replicas, *, max_batch: int = 4, pad_id: int = 0):
+        self.replicas = list(replicas)
+        self.max_batch = max_batch
+        self.pad_id = pad_id
+        self.next_free = [0.0] * len(self.replicas)
+
+    def _run_batch(self, replica, batch: List[Request]):
+        maxlen = max(len(r.prompt) for r in batch)
+        toks = np.full((len(batch), maxlen), self.pad_id, np.int32)
+        kv_start = np.zeros(len(batch), np.int32)
+        for i, r in enumerate(batch):
+            toks[i, maxlen - len(r.prompt):] = r.prompt        # left pad
+            kv_start[i] = maxlen - len(r.prompt)
+        max_new = max(r.max_new_tokens for r in batch)
+        out = replica.generate(toks, max_new=max_new, kv_start=kv_start)
+        for i, r in enumerate(batch):
+            r.output = out[i, :r.max_new_tokens]
+
+    def serve(self, requests: Sequence[Request], deadline: float) -> ServeStats:
+        """Replays a timed workload measuring wall-clock latencies."""
+        t0 = time.monotonic()
+        pending = sorted(requests, key=lambda r: r.arrival)
+        idx = 0
+        while idx < len(pending):
+            now = time.monotonic() - t0
+            # wait for the next arrival if nothing is due
+            if pending[idx].arrival > now:
+                time.sleep(min(pending[idx].arrival - now, 0.05))
+                continue
+            # batch everything that has arrived, up to max_batch
+            batch = []
+            while idx < len(pending) and len(batch) < self.max_batch \
+                    and pending[idx].arrival <= now:
+                batch.append(pending[idx])
+                idx += 1
+            r = int(np.argmin(self.next_free))
+            self._run_batch(self.replicas[r], batch)
+            fin = time.monotonic() - t0
+            self.next_free[r] = fin
+            for req in batch:
+                req.start_time = now
+                req.finish_time = fin
+        lats = [r.latency for r in pending]
+        att = float(np.mean([l <= deadline for l in lats])) if lats else 1.0
+        dur = max(r.finish_time for r in pending) if pending else 1.0
+        return ServeStats(latencies=lats, attainment=att,
+                          throughput=len(pending) / max(dur, 1e-9))

@@ -1,0 +1,21 @@
+"""Training step: loss / grad / AdamW update, donation-friendly."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.training import optimizer
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: optimizer.AdamWConfig):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: M.loss_fn(cfg, p, batch))(params)
+        new_params, new_state = optimizer.apply(opt_cfg, grads, opt_state,
+                                                params)
+        return new_params, new_state, loss
+    return train_step

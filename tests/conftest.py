@@ -1,0 +1,9 @@
+import os
+
+# smoke tests and benches must see ONE device (the dry-run sets its own
+# 512-device flag inside launch/dryrun.py, never globally)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,62 @@
+"""Config registry + published-size sanity."""
+import pytest
+
+from repro.configs import get_config, list_archs
+
+ASSIGNED = ["granite-8b", "jamba-v0.1-52b", "h2o-danube-1.8b",
+            "granite-moe-3b-a800m", "granite-20b", "xlstm-125m",
+            "paligemma-3b", "codeqwen1.5-7b", "phi3.5-moe-42b-a6.6b",
+            "whisper-base"]
+
+# (total params, active params) bounds in billions, from the cited sources
+PUBLISHED = {
+    "granite-8b": (7.0, 9.5),
+    "jamba-v0.1-52b": (48.0, 55.0),
+    "h2o-danube-1.8b": (1.5, 2.1),
+    "granite-20b": (18.0, 22.0),
+    "llama2-70b": (65.0, 72.0),
+    "phi3.5-moe-42b-a6.6b": (39.0, 45.0),
+    "whisper-base": (0.05, 0.09),
+    "xlstm-125m": (0.1, 0.2),
+}
+
+
+def test_all_assigned_registered():
+    archs = list_archs()
+    for a in ASSIGNED:
+        assert a in archs
+
+
+@pytest.mark.parametrize("arch", ASSIGNED + ["llama2-70b"])
+def test_param_counts(arch):
+    cfg = get_config(arch)
+    total = cfg.total_params / 1e9
+    if arch in PUBLISHED:
+        lo, hi = PUBLISHED[arch]
+        assert lo <= total <= hi, (arch, total)
+    assert cfg.active_params <= cfg.total_params
+
+
+def test_active_params_moe():
+    phi = get_config("phi3.5-moe-42b-a6.6b")
+    assert 5.5 <= phi.active_params / 1e9 <= 7.5      # ~6.6B active
+    jamba = get_config("jamba-v0.1-52b")
+    assert jamba.active_params < 0.35 * jamba.total_params
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_reduced_contract(arch):
+    r = get_config(arch).reduced()
+    assert r.num_layers <= 4
+    assert r.d_model <= 512
+    assert r.num_experts <= 4
+    assert r.num_layers % (len(r.layer_pattern) if r.layer_pattern else 1) == 0
+
+
+def test_layer_kinds_jamba():
+    cfg = get_config("jamba-v0.1-52b")
+    kinds = [cfg.layer_kind(i) for i in range(cfg.num_layers)]
+    assert kinds.count("attn") == 4                  # 1:7 over 32 layers
+    assert kinds.count("mamba") == 28
+    moe_layers = [i for i in range(cfg.num_layers) if cfg.is_moe_layer(i)]
+    assert len(moe_layers) == 16                     # every other layer

@@ -1,0 +1,58 @@
+"""Dry-run machinery on a small in-subprocess mesh: every arch x shape must
+lower and compile on a (2,2) (data, model) mesh of 4 host devices, and the
+roofline extraction must produce sane terms. (The production 512-device
+sweep is scripts/run_dryruns.py; this guards the machinery in CI.)"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+CODE = textwrap.dedent("""
+    import os, json, sys
+    import jax
+    from repro.launch import specs, roofline
+    from repro.configs.base import INPUT_SHAPES
+
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    out = {}
+    for arch, shape in [("xlstm-125m", "decode_32k"),
+                        ("whisper-base", "decode_32k"),
+                        ("h2o-danube-1.8b", "long_500k"),
+                        ("granite-moe-3b-a800m", "decode_32k")]:
+        fn, structs, shs, jkw, cfg = specs.build_dryrun(arch, shape, mesh,
+                                                        False)
+        compiled = jax.jit(fn, in_shardings=shs, **jkw).lower(
+            *structs).compile()
+        rl = roofline.extract(
+            compiled,
+            model_flops=roofline.model_flops_estimate(
+                cfg, INPUT_SHAPES[shape]),
+            chips=4)
+        out[f"{arch}/{shape}"] = {
+            "flops": rl.flops, "bytes": rl.hbm_bytes,
+            "dominant": rl.dominant,
+            "uf": rl.useful_flops_frac,
+        }
+    print("JSON" + json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_dryrun_small_mesh():
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4",
+               PYTHONPATH="src")
+    p = subprocess.run([sys.executable, "-c", CODE], capture_output=True,
+                       text=True, env=env,
+                       cwd=os.path.dirname(os.path.dirname(
+                           os.path.abspath(__file__))), timeout=560)
+    assert p.returncode == 0, p.stderr[-3000:]
+    payload = [l for l in p.stdout.splitlines() if l.startswith("JSON")][0]
+    out = json.loads(payload[4:])
+    for tag, rec in out.items():
+        assert rec["flops"] > 0, tag
+        assert rec["bytes"] > 0, tag
+        assert 0 < rec["uf"] <= 2.0, (tag, rec["uf"])

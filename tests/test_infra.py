@@ -1,0 +1,115 @@
+"""Infrastructure: HLO analyzer trip-count accounting, sharding spec trees,
+checkpoint round-trip, data pipeline determinism, optimizer."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch import hlo_analysis
+from repro.models import model as M
+from repro.models import shardings
+from repro.training import optimizer
+from repro.training.data import DataConfig, SyntheticStream
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_hlo_analyzer_counts_scan_trips():
+    W = jax.random.normal(KEY, (64, 64))
+
+    def body(x, _):
+        return jnp.tanh(x @ W), None
+
+    x0 = jax.random.normal(KEY, (4, 64))
+    f = jax.jit(lambda x: jax.lax.scan(body, x, None, length=10)[0])
+    c = hlo_analysis.analyze(f.lower(x0).compile().as_text())
+    expect = 10 * 2 * 4 * 64 * 64
+    assert 0.9 * expect <= c.flops <= 1.3 * expect
+
+    # nested scan multiplies
+    def outer(x, _):
+        return jax.lax.scan(body, x, None, length=5)[0], None
+
+    f2 = jax.jit(lambda x: jax.lax.scan(outer, x, None, length=10)[0])
+    c2 = hlo_analysis.analyze(f2.lower(x0).compile().as_text())
+    assert 0.9 * 5 * expect <= c2.flops <= 1.3 * 5 * expect
+
+
+def test_hlo_shape_parse():
+    b, dims = hlo_analysis._shape_info("bf16[16,4096]{1,0}")
+    assert b == 16 * 4096 * 2 and dims == [16, 4096]
+    b, _ = hlo_analysis._shape_info("(f32[8], s32[], pred[2,2])")
+    assert b == 32 + 4 + 4
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "jamba-v0.1-52b",
+                                  "phi3.5-moe-42b-a6.6b", "xlstm-125m",
+                                  "whisper-base", "paligemma-3b"])
+def test_param_specs_cover_tree(arch):
+    """Spec tree is congruent with the param tree and every spec rank
+    matches its leaf rank."""
+    cfg = get_config(arch).reduced()
+    params = jax.eval_shape(lambda: M.init_params(cfg, KEY))
+    specs = shardings.param_specs(cfg, params, tp=2)
+    jax.tree.map(lambda l, s: None, params, specs)       # same structure
+    for (path, leaf), (_, spec) in zip(
+            jax.tree_util.tree_flatten_with_path(params)[0],
+            jax.tree_util.tree_flatten_with_path(
+                specs, is_leaf=lambda x: hasattr(x, "_normalized_spec")
+                or type(x).__name__ == "PartitionSpec")[0]):
+        assert len(spec) <= leaf.ndim, (path, spec, leaf.shape)
+
+
+def test_cache_specs_cover_tree():
+    cfg = get_config("jamba-v0.1-52b").reduced()
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, 4, 32))
+    specs = shardings.cache_specs(cfg, cache, tp=2, data_axis="data")
+    jax.tree.map(lambda l, s: None, cache, specs)
+
+
+def test_checkpoint_roundtrip():
+    from repro.checkpoint import ckpt
+    cfg = get_config("xlstm-125m").reduced()
+    params = M.init_params(cfg, KEY)
+    opt = optimizer.init(params)
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 7, params, opt, extra={"loss": 1.5})
+        assert ckpt.latest_step(d) == 7
+        p2, o2, meta = ckpt.restore(d, 7, params, opt)
+        assert meta["step"] == 7 and meta["loss"] == 1.5
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_data_deterministic_and_learnable_structure():
+    cfg = DataConfig(vocab_size=512, seq_len=64, batch_size=4, seed=3)
+    s1, s2 = SyntheticStream(cfg), SyntheticStream(cfg)
+    b1, b2 = s1.batch(5), s2.batch(5)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert b1["tokens"].shape == (4, 64)
+    # tokens restricted to the active Markov set
+    assert len(np.unique(b1["tokens"])) <= cfg.markov_states
+
+
+def test_adamw_decreases_quadratic():
+    cfg = optimizer.AdamWConfig(lr=0.1, warmup_steps=1, total_steps=200,
+                                weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = optimizer.init(params)
+    for _ in range(100):
+        grads = {"w": 2 * params["w"]}
+        params, state = optimizer.apply(cfg, grads, state, params)
+    assert float(jnp.abs(params["w"]).max()) < 0.5
+
+
+def test_lr_schedule():
+    cfg = optimizer.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(optimizer.lr_at(cfg, jnp.int32(s))) for s in (0, 5, 10, 100)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert lrs[3] == pytest.approx(cfg.min_lr_frac)

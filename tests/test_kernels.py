@@ -1,0 +1,232 @@
+"""Kernel validation: XLA chunked paths and Pallas (interpret=True) against
+the pure-jnp oracles, swept over shapes/dtypes, plus hypothesis properties.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.decode_attention import decode_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ssm_scan import ssm_scan_pallas
+
+KEY = jax.random.PRNGKey(0)
+
+
+def rn(i, *shape, dtype=jnp.float32):
+    x = jax.random.normal(jax.random.fold_in(KEY, i), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+ATTN_SHAPES = [
+    # b, sq, hq, hkv, d
+    (1, 64, 2, 2, 16),        # MHA
+    (2, 128, 4, 2, 32),       # GQA
+    (2, 128, 4, 1, 32),       # MQA
+]
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [0, 48])
+def test_flash_xla_vs_ref(shape, dtype, window):
+    b, sq, hq, hkv, d = shape
+    q = rn(1, b, sq, hq, d, dtype=dtype)
+    k = rn(2, b, sq, hkv, d, dtype=dtype)
+    v = rn(3, b, sq, hkv, d, dtype=dtype)
+    o1 = ops.flash_attention(q, k, v, causal=True, window=window,
+                             q_block=32, kv_block=32)
+    o2 = ref.attention_ref(q, k, v, causal=True, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("shape", ATTN_SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("window", [0, 48])
+def test_flash_pallas_vs_ref(shape, dtype, window):
+    b, sq, hq, hkv, d = shape
+    q = rn(1, b, sq, hq, d, dtype=dtype)
+    k = rn(2, b, sq, hkv, d, dtype=dtype)
+    v = rn(3, b, sq, hkv, d, dtype=dtype)
+    o1 = flash_attention_pallas(q, k, v, causal=True, window=window,
+                                q_block=32, kv_block=32, interpret=True)
+    o2 = ref.attention_ref(q, k, v, causal=True, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), atol=tol)
+
+
+def test_flash_masks():
+    b, sq, hq, hkv, d = 2, 128, 4, 2, 16
+    q, k, v = rn(1, b, sq, hq, d), rn(2, b, sq, hkv, d), rn(3, b, sq, hkv, d)
+    kv_len = jnp.array([100, 128])
+    kv_start = jnp.array([17, 0])
+    for kw in ({"kv_len": kv_len}, {"kv_start": kv_start},
+               {"kv_len": kv_len, "kv_start": kv_start}):
+        o1 = ops.flash_attention(q, k, v, causal=True, q_block=32,
+                                 kv_block=32, **kw)
+        o2 = ref.attention_ref(q, k, v, causal=True, **kw)
+        o3 = flash_attention_pallas(q, k, v, causal=True, q_block=32,
+                                    kv_block=32, interpret=True, **kw)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+        np.testing.assert_allclose(np.asarray(o3), np.asarray(o2), atol=2e-5)
+
+
+def test_flash_grad_vs_ref():
+    b, sq, hq, hkv, d = 2, 96, 4, 2, 16
+    q, k, v = rn(1, b, sq, hq, d), rn(2, b, sq, hkv, d), rn(3, b, sq, hkv, d)
+    kv_len = jnp.array([80, 96])
+
+    def f_flash(q, k, v):
+        return (ops.flash_attention(q, k, v, causal=True, kv_len=kv_len,
+                                    q_block=32, kv_block=32) * 0.01).sum()
+
+    def f_ref(q, k, v):
+        return (ref.attention_ref(q, k, v, causal=True, kv_len=kv_len)
+                .astype(jnp.float32) * 0.01).sum()
+
+    g1 = jax.grad(f_flash, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-5)
+
+
+@pytest.mark.parametrize("skv,kvb", [(128, 32), (256, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_pallas_vs_ref(skv, kvb, dtype):
+    b, hq, hkv, d = 2, 4, 2, 32
+    q = rn(1, b, 1, hq, d, dtype=dtype)
+    k = rn(2, b, skv, hkv, d, dtype=dtype)
+    v = rn(3, b, skv, hkv, d, dtype=dtype)
+    kv_len = jnp.array([skv - 29, skv])
+    o1 = decode_attention_pallas(q, k, v, kv_len=kv_len, kv_block=kvb,
+                                 interpret=True)
+    o2 = ref.decode_attention_ref(q, k, v, kv_len=kv_len)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o1, np.float32),
+                               np.asarray(o2, np.float32), atol=tol)
+
+
+@pytest.mark.parametrize("s,chunk,din,ds", [(64, 16, 16, 8), (100, 32, 8, 4)])
+def test_ssm_xla_vs_ref(s, chunk, din, ds):
+    b = 2
+    x, dt = rn(1, b, s, din), jax.nn.softplus(rn(2, b, s, din))
+    A = -jnp.exp(rn(3, din, ds) * 0.5)
+    B, C, D = rn(4, b, s, ds), rn(5, b, s, ds), rn(6, din)
+    h0 = rn(7, b, din, ds) * 0.1
+    y1, h1 = ops.ssm_scan(x, dt, A, B, C, D, h0=h0, chunk=chunk)
+    y2, h2 = ref.ssm_scan_ref(x, dt, A, B, C, D, h0=h0)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssm_pallas_vs_ref(dtype):
+    b, s, din, ds = 2, 64, 16, 8
+    x = rn(1, b, s, din, dtype=dtype)
+    dt = jax.nn.softplus(rn(2, b, s, din)).astype(dtype)
+    A = -jnp.exp(rn(3, din, ds) * 0.5)
+    B, C, D = rn(4, b, s, ds), rn(5, b, s, ds), rn(6, din)
+    y1, h1 = ssm_scan_pallas(x, dt, A, B, C, D, chunk=16, d_block=8,
+                             interpret=True)
+    y2, h2 = ref.ssm_scan_ref(x, dt, A, B, C, D)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32), atol=tol)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=tol)
+
+
+def test_ssm_grad_vs_ref():
+    b, s, din, ds = 2, 48, 8, 4
+    x, dt = rn(1, b, s, din), jax.nn.softplus(rn(2, b, s, din))
+    A = -jnp.exp(rn(3, din, ds) * 0.5)
+    B, C, D = rn(4, b, s, ds), rn(5, b, s, ds), rn(6, din)
+
+    def f(impl):
+        def loss(x, dt, A, B, C, D):
+            y, h = impl(x, dt, A, B, C, D)
+            return (y * 0.01).sum() + (h * 0.02).sum()
+        return loss
+
+    g1 = jax.grad(f(lambda *a: ops.ssm_scan(*a, chunk=16)),
+                  argnums=tuple(range(6)))(x, dt, A, B, C, D)
+    g2 = jax.grad(f(ref.ssm_scan_ref), argnums=tuple(range(6)))(
+        x, dt, A, B, C, D)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=1e-5)
+
+
+def test_mlstm_chunked_vs_ref():
+    b, s, h, dk, dv = 2, 96, 4, 16, 24
+    q, k = rn(1, b, s, h, dk), rn(2, b, s, h, dk)
+    v = rn(3, b, s, h, dv)
+    ig = jax.nn.sigmoid(rn(4, b, s, h))
+    fg = jax.nn.sigmoid(rn(5, b, s, h) + 2)
+    y1, (C1, n1) = ops.mlstm_scan(q, k, v, ig, fg, chunk=16)
+    y2, (C2, n2) = ref.mlstm_scan_ref(q, k, v, ig, fg)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(C1), np.asarray(C2), atol=1e-4)
+
+
+def test_decode_steps_match_scan():
+    """ssm/mlstm single-step chains == chunked scan prefix."""
+    b, s, din, ds = 2, 12, 8, 4
+    x, dt = rn(1, b, s, din), jax.nn.softplus(rn(2, b, s, din))
+    A = -jnp.exp(rn(3, din, ds) * 0.5)
+    B, C, D = rn(4, b, s, ds), rn(5, b, s, ds), rn(6, din)
+    y_ref, _ = ref.ssm_scan_ref(x, dt, A, B, C, D)
+    h = jnp.zeros((b, din, ds))
+    for t in range(s):
+        y, h = ops.ssm_step(x[:, t], dt[:, t], A, B[:, t], C[:, t], D, h)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref[:, t]),
+                                   atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: online softmax == softmax for arbitrary block splits
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 64), st.integers(1, 8), st.data())
+def test_online_softmax_invariant(n, nblocks, data):
+    xs = data.draw(st.lists(
+        st.floats(-30, 30, allow_nan=False), min_size=n, max_size=n))
+    x = np.asarray(xs, np.float32)
+    # reference
+    p_ref = np.exp(x - x.max())
+    p_ref /= p_ref.sum()
+    # online over nblocks pieces
+    m, l, acc = -np.inf, 0.0, np.zeros_like(x)
+    bounds = np.linspace(0, n, nblocks + 1).astype(int)
+    for i in range(nblocks):
+        blk = x[bounds[i]:bounds[i + 1]]
+        if len(blk) == 0:
+            continue
+        m_new = max(m, blk.max())
+        corr = np.exp(m - m_new) if np.isfinite(m) else 0.0
+        l = l * corr + np.exp(blk - m_new).sum()
+        acc *= corr
+        acc[bounds[i]:bounds[i + 1]] = np.exp(blk - m_new)
+        m = m_new
+    np.testing.assert_allclose(acc / l, p_ref, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 3), st.integers(4, 32), st.integers(2, 6),
+       st.integers(1, 4))
+def test_ssm_chunk_invariance(b, s, din, ds):
+    """Chunked scan result is independent of the chunk size (property)."""
+    x, dt = rn(1, b, s, din), jax.nn.softplus(rn(2, b, s, din))
+    A = -jnp.exp(rn(3, din, ds) * 0.5)
+    B, C, D = rn(4, b, s, ds), rn(5, b, s, ds), rn(6, din)
+    outs = []
+    for chunk in (1, 2, s):
+        y, h = ops.ssm_scan(x, dt, A, B, C, D, chunk=chunk)
+        outs.append((np.asarray(y), np.asarray(h)))
+    for y, h in outs[1:]:
+        np.testing.assert_allclose(y, outs[0][0], atol=1e-4)
+        np.testing.assert_allclose(h, outs[0][1], atol=1e-4)

@@ -1,0 +1,63 @@
+"""Weight-only int8 quantization: fidelity, compression, decode path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.models.quant import (dequantize_leaf, mm, quant_bytes,
+                                quantize_leaf, quantize_params)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_leaf_roundtrip():
+    w = jax.random.normal(KEY, (64, 32)) * 0.05
+    q = quantize_leaf(w)
+    back = dequantize_leaf(q)
+    assert q["q"].dtype == jnp.int8
+    assert q["s"].shape == (32,)
+    # max error bounded by half a quantization step per out channel
+    step = np.asarray(q["s"])
+    assert (np.abs(np.asarray(back - w)).max(0) <= step * 0.51).all()
+
+
+def test_mm_matches_dequant():
+    w = jax.random.normal(KEY, (64, 32)) * 0.05
+    x = jax.random.normal(jax.random.fold_in(KEY, 1), (4, 64))
+    q = quantize_leaf(w)
+    np.testing.assert_allclose(np.asarray(mm(x, q)),
+                               np.asarray(x @ dequantize_leaf(q)),
+                               atol=1e-5)
+
+
+def test_expert_leaf_scales_per_expert():
+    w = jax.random.normal(KEY, (4, 16, 8)) * jnp.array(
+        [0.01, 0.1, 1.0, 10.0])[:, None, None]
+    q = quantize_leaf(w)
+    assert q["s"].shape == (4, 8)
+    # scales track the per-expert magnitudes
+    assert float(q["s"][3].mean()) > 100 * float(q["s"][0].mean())
+
+
+@pytest.mark.parametrize("arch", ["granite-8b", "phi3.5-moe-42b-a6.6b",
+                                  "xlstm-125m"])
+def test_quantized_model_fidelity(arch):
+    cfg = dataclasses.replace(get_config(arch).reduced(), dtype="float32")
+    params = M.init_params(cfg, KEY)
+    qparams = quantize_params(params, cfg)
+    batch = {"tokens": jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)}
+    lg_f, _ = M.train_forward(cfg, params, batch)
+    lg_q, _ = M.train_forward(cfg, qparams, batch)
+    pf, pq = np.asarray(lg_f[:, -1]), np.asarray(lg_q[:, -1])
+    assert (pf.argmax(-1) == pq.argmax(-1)).all()
+    assert np.abs(pq - pf).max() / (np.abs(pf).max() + 1e-9) < 0.05
+    assert quant_bytes(qparams) < 0.45 * quant_bytes(params)
+    # decode path
+    cache = M.init_cache(cfg, 2, 20)
+    lg, cache = M.prefill(cfg, qparams, batch, cache)
+    lg2, _ = M.decode_step(cfg, qparams, jnp.argmax(lg, -1), cache, 16)
+    assert bool(jnp.isfinite(lg2).all())
