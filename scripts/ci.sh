@@ -1,0 +1,51 @@
+#!/usr/bin/env bash
+# CI entry point: tier-1 tests + a multi-device serving smoke.
+#
+# The smoke runs the continuous-batching serve path on an asymmetric
+# pipeline with real tensor-parallel stages over 4 virtual host devices —
+# the configuration a GPU-less CI would otherwise never execute.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "=== tier-1 pytest ==="
+# deliberately the exact command ROADMAP.md names as the tier-1 gate
+# (includes @slow; deselect locally with -m "not slow" for a fast loop)
+python -m pytest -x -q
+
+echo "=== serving smoke (4 virtual devices, ~30s) ==="
+XLA_FLAGS="--xla_force_host_platform_device_count=4" JAX_PLATFORMS=cpu \
+python - <<'PY'
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.plan import Assignment, PipelinePlan, StagePlan
+from repro.serving.engine import InferenceEngine
+from repro.serving.request import synth_workload
+
+t0 = time.monotonic()
+devs = jax.devices()
+assert len(devs) == 4, devs
+cfg = get_config("granite-8b").reduced()
+L = cfg.num_layers
+# a TP=2 -> TP=2 two-stage asymmetric pipeline over all 4 devices —
+# the multi-device path a GPU-less CI would otherwise never run
+asg = Assignment([
+    PipelinePlan([StagePlan([0, 1], 1), StagePlan([2, 3], L - 1)],
+                 cost=0.1, bottleneck=0.1),
+])
+eng = InferenceEngine(cfg, asg, key=jax.random.PRNGKey(0),
+                      policy="continuous", n_slots=4, max_len=48)
+reqs = synth_workload(rate=40.0, duration=0.25, vocab=cfg.vocab_size,
+                      prompt_len=8, prompt_jitter=5, out_len=4, seed=1)
+stats = eng.serve(reqs, deadline=120.0)
+assert len(stats.latencies) == len(reqs) and len(reqs) > 0
+assert stats.attainment == 1.0, stats.summary()
+for r in reqs:
+    assert r.output is not None and len(r.output) == 4, r.rid
+print(f"smoke OK: {stats.summary()} ({time.monotonic()-t0:.1f}s)")
+PY
+echo "=== ci.sh OK ==="

@@ -169,9 +169,8 @@ class HloModule:
         for d in ins.dims:
             out_elems *= d
         # contraction size from lhs shape + lhs_contracting_dims
-        ops = [o.strip().lstrip("%") for o in
-               ins.rest.split(")")[0].split(",")]
-        lhs = scope.get(ops[0].strip())
+        ops = self._operands(ins)
+        lhs = scope.get(ops[0]) if ops else None
         mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.rest)
         k = 1
         if lhs is not None and mc:
@@ -184,9 +183,8 @@ class HloModule:
         out_elems = 1
         for d in ins.dims:
             out_elems *= d
-        ops = [o.strip().lstrip("%") for o in
-               ins.rest.split(")")[0].split(",")]
-        ker = scope.get(ops[1].strip()) if len(ops) > 1 else None
+        ops = self._operands(ins)
+        ker = scope.get(ops[1]) if len(ops) > 1 else None
         k = 1
         if ker is not None:
             for d in ker.dims:
@@ -321,8 +319,36 @@ class HloModule:
 
     @staticmethod
     def _operands(ins: Instr) -> List[str]:
-        inner = ins.rest.split(")")[0]
-        return [o.strip().lstrip("%") for o in inner.split(",") if o.strip()]
+        # The operand region runs to the close paren matching the op's open
+        # paren. Depending on the XLA version, operands print bare
+        # ("%name") or with inline types ("f32[4,64]{1,0} %name", possibly
+        # tuple types with nested parens/commas) — take the last token of
+        # each depth-0 comma segment.
+        s = ins.rest
+        depth = 1
+        end = len(s)
+        for i, ch in enumerate(s):
+            if ch in "([{":
+                depth += 1
+            elif ch in ")]}":
+                depth -= 1
+                if depth == 0:
+                    end = i
+                    break
+        out = []
+        seg_start, seg_depth = 0, 0
+        inner = s[:end] + ","
+        for i, ch in enumerate(inner):
+            if ch in "([{":
+                seg_depth += 1
+            elif ch in ")]}":
+                seg_depth -= 1
+            elif ch == "," and seg_depth == 0:
+                part = inner[seg_start:i].strip()
+                seg_start = i + 1
+                if part:
+                    out.append(part.split()[-1].lstrip("%"))
+        return out
 
     def entry_cost(self) -> Cost:
         assert self.entry is not None, "no ENTRY computation found"

@@ -72,6 +72,10 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--search-iters", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--policy", default="continuous",
+                    choices=("continuous", "static"),
+                    help="iteration-level slot batching vs the paper's "
+                         "static whole-batch engine")
     args = ap.parse_args()
 
     pool = CLUSTERS[args.cluster]()
@@ -87,7 +91,9 @@ def main() -> None:
     cfg = cfg_full.reduced() if args.reduced else cfg_full
     asg = scale_assignment(res.assignment, cfg_full.num_layers,
                            cfg.num_layers) if args.reduced else res.assignment
-    engine = InferenceEngine(cfg, asg, key=jax.random.PRNGKey(args.seed))
+    engine = InferenceEngine(cfg, asg, key=jax.random.PRNGKey(args.seed),
+                             policy=args.policy,
+                             max_len=args.prompt_len + 8 + args.out_len)
     reqs = synth_workload(rate=args.rate, duration=args.duration,
                           vocab=cfg.vocab_size, prompt_len=args.prompt_len,
                           prompt_jitter=4, out_len=args.out_len,

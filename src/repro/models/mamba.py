@@ -42,9 +42,12 @@ def _ssm_inputs(p, xi, cfg, valid=None):
     return dt, A, B, C
 
 
-def mamba_prefill(p, x, cfg, *, valid=None, cache=None):
-    """x (b,s,d); valid (b,s) 0/1 mask for left-padding.
-    Returns (out, new_cache) where cache = {"conv": (b,w-1,din), "h": (b,din,ds)}."""
+def mamba_prefill(p, x, cfg, *, valid=None, lens=None, cache=None):
+    """x (b,s,d); valid (b,s) 0/1 mask for padded rows (pad steps become
+    identity state updates). lens (b,) marks RIGHT padding (slot insertion):
+    the conv cache tail must then be each row's last `w-1` REAL inputs, not
+    the trailing pads. Returns (out, new_cache) where
+    cache = {"conv": (b,w-1,din), "h": (b,din,ds)}."""
     b, s, _ = x.shape
     xi, z = _project(p, x, cfg)
     if valid is not None:
@@ -59,7 +62,16 @@ def mamba_prefill(p, x, cfg, *, valid=None, cache=None):
     out = mm(y * jax.nn.silu(z), p["out_proj"])
     new_cache = None
     if cache is not None:
-        conv_tail = xpad[:, -(w - 1):] if w > 1 else xpad[:, :0]
+        if w <= 1:
+            conv_tail = xpad[:, :0]
+        elif lens is not None:
+            # row i's real inputs sit at xpad[(w-1)+j], j < lens[i]; the tail
+            # [lens[i], lens[i]+w-1) spans its last real inputs plus the
+            # conv's implicit leading zeros when lens[i] < w-1.
+            idx = lens[:, None] + jnp.arange(w - 1)[None, :]
+            conv_tail = jnp.take_along_axis(xpad, idx[..., None], axis=1)
+        else:
+            conv_tail = xpad[:, -(w - 1):]
         new_cache = {"conv": conv_tail.astype(cache["conv"].dtype),
                      "h": h.astype(cache["h"].dtype)}
     return out, new_cache

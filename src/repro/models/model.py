@@ -271,10 +271,11 @@ def _norm(cfg, p, x):
 
 
 def apply_sublayer_seq(cfg, kind, sp, x, sc, *, positions, kv_start, valid,
-                       enc_out, mode):
+                       enc_out, mode, lens=None):
     """One block (mixer [+ cross-attn] [+ MLP/MoE]) over a full sequence.
     mode: 'train' (no cache) | 'prefill' (write cache).
-    Returns (x, new_cache, aux)."""
+    lens (b,) marks RIGHT-padded rows (slot insertion); kv_start marks
+    LEFT-padded rows (static batching). Returns (x, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     h = _norm(cfg, sp["ln1"], x)
     if kind == ATTN:
@@ -286,6 +287,7 @@ def apply_sublayer_seq(cfg, kind, sp, x, sc, *, positions, kv_start, valid,
         nc = dict(mc) if mc is not None else {}
     elif kind == MAMBA:
         o, mc = mamba.mamba_prefill(sp["mixer"], h, cfg, valid=valid,
+                                    lens=lens,
                                     cache=sc if mode == "prefill" else None)
         nc = mc or {}
     elif kind == MLSTM:
@@ -347,14 +349,15 @@ def apply_sublayer_decode(cfg, kind, sp, x, sc, *, pos, kv_start):
 
 
 def _apply_period_seq(cfg, pp, x, cache_p, *, positions, kv_start, valid,
-                      enc_out, mode):
+                      enc_out, mode, lens=None):
     new_cache = {}
     aux = jnp.zeros((), jnp.float32)
     for j, (kind, _) in enumerate(sub_kinds(cfg)):
         sc = cache_p.get(f"sub{j}") if cache_p is not None else None
         x, nc, a = apply_sublayer_seq(cfg, kind, pp[f"sub{j}"], x, sc,
                                       positions=positions, kv_start=kv_start,
-                                      valid=valid, enc_out=enc_out, mode=mode)
+                                      valid=valid, enc_out=enc_out, mode=mode,
+                                      lens=lens)
         aux = aux + a
         new_cache[f"sub{j}"] = nc
     return x, new_cache, aux
@@ -420,6 +423,27 @@ def init_layer_cache(cfg: ModelConfig, i: int, batch: int, max_len: int,
     p, j = layer_sub_index(cfg, i)
     full = init_cache(cfg, batch, max_len, dtype)
     return jax.tree.map(lambda l: l[0], full[f"sub{j}"])
+
+
+# ---------------------------------------------------------------------------
+# Slot cache pools (continuous batching): a replica owns one pre-allocated
+# cache whose batch rows are SLOTS; inserting a request scatters its freshly
+# prefilled cache rows over the free slots, fully replacing whatever a
+# previous occupant left there. batch_axis=0 covers the per-layer caches of
+# the asymmetric pipeline; batch_axis=1 the period-stacked monolithic cache.
+# ---------------------------------------------------------------------------
+
+def scatter_cache_rows(pool, rows, slot_ids, *, batch_axis=0):
+    """Write `rows` (cache pytree, batch = len(slot_ids)) into `pool` at the
+    given slot indices. Row seq lengths must match the pool's."""
+    idx = jnp.asarray(slot_ids, jnp.int32)
+
+    def put(big, small):
+        if batch_axis == 0:
+            return big.at[idx].set(small.astype(big.dtype))
+        return big.at[:, idx].set(small.astype(big.dtype))
+
+    return jax.tree.map(put, pool, rows)
 
 
 # ---------------------------------------------------------------------------
@@ -510,14 +534,27 @@ def loss_fn(cfg: ModelConfig, params, batch):
     return nll.mean() + aux
 
 
-def prefill(cfg: ModelConfig, params, batch, cache, *, kv_start=None):
+def prefill(cfg: ModelConfig, params, batch, cache, *, kv_start=None,
+            lens=None):
     """Prompt pass; fills cache; returns (last-position logits (b,V), cache).
-    Prompts are left-padded to uniform length; kv_start (b,) = pad amounts."""
+
+    Two padding conventions:
+      * kv_start (b,): LEFT-padded rows (static batching) — pads consume the
+        leading positions; logits read at the uniform last position.
+      * lens (b,): RIGHT-padded rows (continuous-batching slot insertion) —
+        row i's prompt occupies [0, lens[i]); trailing pads are masked to
+        identity steps and the logits are gathered at each row's own last
+        real token. Token positions then match isolated generation exactly,
+        so a row's computation is independent of its batch-mates.
+    """
+    assert kv_start is None or lens is None, "pick one padding convention"
     x, positions, _ = _prep_input_seq(cfg, params, batch)
     b, s = x.shape[:2]
     valid = None
     if kv_start is not None:
         valid = (jnp.arange(s)[None, :] >= kv_start[:, None]).astype(jnp.int32)
+    if lens is not None:
+        valid = (jnp.arange(s)[None, :] < lens[:, None]).astype(jnp.int32)
     enc_out = None
     if cfg.is_encoder_decoder:
         enc_out = _encoder_forward(cfg, params, batch["enc_frames"])
@@ -525,10 +562,14 @@ def prefill(cfg: ModelConfig, params, batch, cache, *, kv_start=None):
     def body(x, pp, cp):
         return _apply_period_seq(cfg, pp, x, cp, positions=positions,
                                  kv_start=kv_start, valid=valid,
-                                 enc_out=enc_out, mode="prefill")
+                                 enc_out=enc_out, mode="prefill", lens=lens)
 
     x, new_cache, _ = _scan_stack(cfg, params["blocks"], x, cache, body)
-    logits = _head(cfg, params, x[:, -1:, :])[:, 0]
+    if lens is not None:
+        x_last = x[jnp.arange(b), lens - 1][:, None]
+    else:
+        x_last = x[:, -1:, :]
+    logits = _head(cfg, params, x_last)[:, 0]
     return logits, new_cache
 
 

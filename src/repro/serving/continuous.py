@@ -1,20 +1,33 @@
 """Continuous (iteration-level) batching — the paper's acknowledged
 limitation (Appendix D), implemented here as a beyond-paper extension.
 
-A replica owns a fixed pool of decode SLOTS backed by one pre-allocated
-cache. New requests are prefilled individually (batch=1) and their cache
-rows scattered into a free slot between decode iterations; every iteration
-decodes all active slots jointly with PER-SLOT positions; finished slots
-free immediately. Attention/MoE/SSM state is row-independent, so a
+A replica owns a fixed pool of decode SLOTS backed by pre-allocated caches.
+Requests admitted by the serve loop are buffered until the next iteration
+boundary, then prefilled JOINTLY (one right-padded batch with per-row real
+lengths) and their cache rows scattered into free slots; every iteration
+decodes all slots jointly with PER-SLOT positions; finished slots free
+immediately. Right padding keeps each row's token positions identical to
+isolated generation and attention/MoE/SSM state is row-independent, so a
 request's outputs are bit-identical to isolated generation (tested).
+
+Two executors share the slot engine:
+
+  * ``ContinuousBatcher``  — the monolithic single-process model apply
+    (one cache pool for the whole stack);
+  * ``PipelineBatcher``    — an ``AsymmetricPipeline`` replica (per-STAGE
+    cache pools, so a multi-stage heterogeneous replica serves at iteration
+    granularity end to end).
 
 Works for full-KV and recurrent-state architectures; SWA ring caches
 require uniform positions and fall back to static batching (noted).
+
+Both implement the replica port of ``serving.loop`` — scheduling, clocking
+and accounting live there, not here.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
+import warnings
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -23,116 +36,233 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
+from repro.serving.loop import (ServeStats, VirtualClock, WallClock,
+                                run_serve_loop)
 from repro.serving.request import Request
 
 
 @dataclasses.dataclass
 class _Slot:
-    rid: int = -1
+    req: Optional[Request] = None
     pos: int = 0               # next write position
     remaining: int = 0
     out: Optional[list] = None
 
+    @property
+    def free(self) -> bool:
+        return self.req is None
 
-class ContinuousBatcher:
-    """Single-replica continuous batching on one jax device (monolithic
-    model apply; the asymmetric pipeline variant composes the same slot
-    logic per stage)."""
 
-    def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 8,
-                 max_len: int = 256, key=None):
-        assert not cfg.swa_window, \
-            "SWA ring caches need uniform positions; use static batching"
-        self.cfg = cfg
-        self.params = params
+class SlotEngine:
+    """Slot bookkeeping + the joint insert/decode iteration, shared by the
+    monolithic and pipeline executors. Subclasses provide:
+
+      _prefill_insert(toks (b,P), lens (b,), slot_ids) -> logits (m, V)
+          where m = len(slot_ids) <= b; rows beyond m are compile-shape
+          padding to be dropped before the cache scatter
+      _decode_all(toks (n_slots,), pos (n_slots,))     -> logits (n_slots, V)
+    """
+
+    def __init__(self, *, n_slots: int, max_len: int, vocab_size: int,
+                 pad_id: int = 0, virtual_step_cost: float = 1.0):
         self.n_slots = n_slots
         self.max_len = max_len
-        self.cache = M.init_cache(cfg, n_slots, max_len)
+        self.pad_id = pad_id
+        self.virtual_step_cost = virtual_step_cost
         self.slots = [_Slot() for _ in range(n_slots)]
-        self._decode = jax.jit(
-            lambda p, t, c, pos: M.decode_step(cfg, p, t, c, pos))
-        self._prefill = jax.jit(
-            lambda p, batch, c: M.prefill(cfg, p, batch, c))
-        self._last_logits = np.zeros((n_slots, cfg.vocab_size), np.float32)
+        self._queue: List[Request] = []
+        self._last_logits = np.zeros((n_slots, vocab_size), np.float32)
 
-    # ------------------------------------------------------------------
+    # ---- slot state ------------------------------------------------------
     def free_slots(self) -> List[int]:
-        return [i for i, s in enumerate(self.slots) if s.rid < 0]
+        return [i for i, s in enumerate(self.slots) if s.free]
 
     @property
     def active(self) -> bool:
-        return any(s.rid >= 0 for s in self.slots)
+        return any(not s.free for s in self.slots)
 
-    def insert(self, req: Request) -> int:
-        """Prefill req (batch=1) and scatter its cache row into a slot."""
+    # ---- replica port (serving.loop) -------------------------------------
+    def capacity(self, now: float) -> int:
+        return max(len(self.free_slots()) - len(self._queue), 0)
+
+    def load(self, now: float) -> float:
+        return (self.n_slots - len(self.free_slots())) + len(self._queue)
+
+    def admit(self, reqs: Sequence[Request], now: float) -> None:
+        self._queue.extend(reqs)
+
+    def busy(self, now: float) -> bool:
+        return bool(self._queue) or self.active
+
+    def inflight(self) -> int:
+        return len(self._queue) + (self.n_slots - len(self.free_slots()))
+
+    def next_event(self, now: float):
+        return None                # compute worker: work runs when busy
+
+    def run_iteration(self, now: float):
+        """Insert buffered admissions, then one joint decode iteration."""
+        comps = []
         free = self.free_slots()
-        assert free, "no free slot"
-        slot = free[0]
-        toks = jnp.asarray(req.prompt, jnp.int32)[None]
-        small = M.init_cache(self.cfg, 1, self.max_len)
-        logits, small = self._prefill(self.params, {"tokens": toks}, small)
+        if self._queue and free:
+            batch = []
+            while self._queue and len(batch) < len(free):
+                r = self._queue.pop(0)
+                # a request must fit prompt + all its decode steps in one
+                # slot; reject it alone (empty output) instead of crashing
+                # the serve loop and losing every in-flight request
+                if len(r.prompt) + r.max_new_tokens > self.max_len - 1:
+                    warnings.warn(
+                        f"request {r.rid}: prompt {len(r.prompt)} + "
+                        f"max_new {r.max_new_tokens} exceeds slot length "
+                        f"{self.max_len}; rejected with empty output")
+                    comps.append((r, np.zeros(0, np.int32), None))
+                    continue
+                batch.append(r)
+            if batch:
+                self._insert_batch(batch, free[:len(batch)])
+        # nothing active (e.g. a rejection-only cycle): no decode to run —
+        # and possibly no caches allocated yet to run it on
+        done = self._decode_iteration() if self.active else []
+        comps.extend((req, np.asarray(out, np.int32), None)
+                     for req, out in done)
+        return comps, self.virtual_step_cost
 
-        def put(big, row):
-            return big.at[:, slot].set(row[:, 0])
+    # ---- engine internals ------------------------------------------------
+    def _insert_batch(self, reqs: Sequence[Request],
+                      slot_ids: Sequence[int]) -> None:
+        m = len(reqs)
+        lens = np.asarray([len(r.prompt) for r in reqs], np.int32)
+        assert int(lens.max()) < self.max_len, "prompt exceeds slot length"
+        # bucket BOTH jit shape axes — padded width to multiples of 16,
+        # insert count to the next power of two (capped at n_slots) — so a
+        # bursty serve window compiles O(log) prefill shapes instead of one
+        # per distinct (m, P) pair. Pad rows (and right pads) are masked in
+        # the model and dropped by _prefill_insert before the scatter.
+        P = min(-(-int(lens.max()) // 16) * 16, self.max_len - 1)
+        m_pad = min(1 << (m - 1).bit_length(), self.n_slots)
+        toks = np.full((m_pad, P), self.pad_id, np.int32)
+        plens = np.ones((m_pad,), np.int32)
+        plens[:m] = lens
+        for i, r in enumerate(reqs):
+            toks[i, :lens[i]] = r.prompt                   # right pad
+        logits = self._prefill_insert(toks, plens, list(slot_ids))
+        for i, (r, slot) in enumerate(zip(reqs, slot_ids)):
+            self._last_logits[slot] = np.asarray(logits[i])
+            self.slots[slot] = _Slot(req=r, pos=int(lens[i]),
+                                     remaining=r.max_new_tokens, out=[])
 
-        self.cache = jax.tree.map(put, self.cache, small)
-        self._last_logits[slot] = np.asarray(logits[0])
-        self.slots[slot] = _Slot(rid=req.rid, pos=len(req.prompt),
-                                 remaining=req.max_new_tokens, out=[])
-        return slot
-
-    def step(self) -> Dict[int, List[int]]:
-        """One joint decode iteration. Returns {rid: finished tokens} for
-        requests that completed this step."""
+    def _decode_iteration(self):
         toks = np.zeros((self.n_slots,), np.int32)
         pos = np.zeros((self.n_slots,), np.int32)
         for i, s in enumerate(self.slots):
-            if s.rid >= 0:
+            if not s.free:
                 toks[i] = int(self._last_logits[i].argmax())
                 pos[i] = s.pos
-        logits, self.cache = self._decode(
-            self.params, jnp.asarray(toks), self.cache, jnp.asarray(pos))
-        logits = np.asarray(logits)
-        done = {}
+        logits = self._decode_all(toks, pos)
+        done = []
         for i, s in enumerate(self.slots):
-            if s.rid < 0:
+            if s.free:
                 continue
             s.out.append(int(toks[i]))
             s.pos += 1
             s.remaining -= 1
             self._last_logits[i] = logits[i]
             if s.remaining <= 0 or s.pos >= self.max_len - 1:
-                done[s.rid] = s.out
+                done.append((s.req, s.out))
                 self.slots[i] = _Slot()
         return done
 
-    # ------------------------------------------------------------------
+    def _prefill_insert(self, toks, lens, slot_ids):
+        raise NotImplementedError
+
+    def _decode_all(self, toks, pos):
+        raise NotImplementedError
+
+    # ---- single-replica convenience (shared loop underneath) --------------
     def serve(self, requests: Sequence[Request], *, deadline: float,
-              realtime: bool = False):
-        """Replays a workload. realtime=False: virtual clock (arrival order
-        respected, no sleeps) for deterministic tests."""
-        from repro.serving.router import ServeStats
-        pending = sorted(requests, key=lambda r: r.arrival)
-        idx = 0
-        t0 = time.monotonic()
-        while idx < len(pending) or self.active:
-            now = time.monotonic() - t0
-            while (idx < len(pending) and self.free_slots()
-                   and (pending[idx].arrival <= now or not realtime)):
-                self.insert(pending[idx])
-                idx += 1
-            if realtime and not self.active and idx < len(pending):
-                time.sleep(min(pending[idx].arrival - now, 0.05))
-                continue
-            if self.active:
-                done = self.step()
-                fin = time.monotonic() - t0
-                for r in pending:
-                    if r.rid in done:
-                        r.output = np.asarray(done[r.rid], np.int32)
-                        r.finish_time = fin
-        lats = [r.latency for r in pending]
-        att = float(np.mean([l <= deadline for l in lats])) if lats else 1.0
-        dur = max((r.finish_time for r in pending), default=1.0)
-        return ServeStats(latencies=lats, attainment=att,
-                          throughput=len(pending) / max(dur, 1e-9))
+              realtime: bool = False) -> ServeStats:
+        """Replays a workload on this replica alone. realtime=False uses the
+        virtual clock: deterministic latencies in iteration units."""
+        clock = WallClock() if realtime else VirtualClock()
+        return run_serve_loop([self], requests, deadline=deadline,
+                              clock=clock)
+
+    # seed-API shims (tests, notebooks) ------------------------------------
+    def insert(self, req: Request) -> int:
+        """Immediate single insert; returns the slot index."""
+        free = self.free_slots()
+        assert free, "no free slot"
+        self._insert_batch([req], free[:1])
+        return free[0]
+
+    def step(self) -> Dict[int, List[int]]:
+        """One joint decode iteration. Returns {rid: finished tokens}."""
+        return {req.rid: out for req, out in self._decode_iteration()}
+
+
+class ContinuousBatcher(SlotEngine):
+    """Slot-based continuous batching on the monolithic model apply (single
+    jit over the full stack; the asymmetric-pipeline variant is
+    ``PipelineBatcher``)."""
+
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 8,
+                 max_len: int = 256, pad_id: int = 0, key=None,
+                 virtual_step_cost: float = 1.0):
+        from repro.serving.pipeline import slot_mode_supported
+        assert slot_mode_supported(cfg), \
+            "slot mode needs uniform text decode; use static batching"
+        super().__init__(n_slots=n_slots, max_len=max_len,
+                         vocab_size=cfg.vocab_size, pad_id=pad_id,
+                         virtual_step_cost=virtual_step_cost)
+        self.cfg = cfg
+        self.params = params
+        self.cache = M.init_cache(cfg, n_slots, max_len)
+        self._decode = jax.jit(
+            lambda p, t, c, pos: M.decode_step(cfg, p, t, c, pos))
+        self._prefill = jax.jit(
+            lambda p, toks, lens, c: M.prefill(cfg, p, {"tokens": toks}, c,
+                                               lens=lens))
+
+    def _prefill_insert(self, toks, lens, slot_ids):
+        m = len(slot_ids)          # toks may carry compile-padding rows > m
+        scratch = M.init_cache(self.cfg, toks.shape[0], self.max_len)
+        logits, scratch = self._prefill(self.params, jnp.asarray(toks),
+                                        jnp.asarray(lens), scratch)
+        # monolithic cache leaves are period-stacked: batch axis is 1
+        rows = jax.tree.map(lambda l: l[:, :m], scratch)
+        self.cache = M.scatter_cache_rows(self.cache, rows, slot_ids,
+                                          batch_axis=1)
+        return np.asarray(logits)[:m]
+
+    def _decode_all(self, toks, pos):
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(toks), self.cache, jnp.asarray(pos))
+        return np.asarray(logits)
+
+
+class PipelineBatcher(SlotEngine):
+    """Slot-based continuous batching over an ``AsymmetricPipeline``
+    replica: per-stage cache pools, iteration-level joint decode with
+    per-slot positions, joint right-padded insert prefill."""
+
+    def __init__(self, pipeline, *, n_slots: int = 8, max_len: int = 256,
+                 pad_id: int = 0, virtual_step_cost: float = 1.0):
+        from repro.serving.pipeline import slot_mode_supported
+        assert slot_mode_supported(pipeline.cfg), \
+            "slot mode needs uniform text decode; use StaticBatcher"
+        super().__init__(n_slots=n_slots, max_len=max_len,
+                         vocab_size=pipeline.cfg.vocab_size, pad_id=pad_id,
+                         virtual_step_cost=virtual_step_cost)
+        self.pipeline = pipeline
+
+    def _prefill_insert(self, toks, lens, slot_ids):
+        # pools allocate lazily so generate()-only engines never pay for them
+        if (self.pipeline.slot_caches is None
+                or self.pipeline.n_slots != self.n_slots
+                or self.pipeline.slot_len != self.max_len):
+            self.pipeline.init_slot_caches(self.n_slots, self.max_len)
+        return self.pipeline.insert_slots(toks, lens, slot_ids)
+
+    def _decode_all(self, toks, pos):
+        return self.pipeline.decode_slots(toks, pos)

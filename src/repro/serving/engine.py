@@ -8,6 +8,7 @@ CPU demonstration they are host devices (tests spawn a subprocess with
 """
 from __future__ import annotations
 
+import warnings
 from typing import List, Optional, Sequence
 
 import jax
@@ -16,7 +17,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.plan import Assignment
 from repro.models import model as M
-from repro.serving.pipeline import AsymmetricPipeline
+from repro.serving.pipeline import AsymmetricPipeline, slot_mode_supported
 from repro.serving.request import Request
 from repro.serving.router import Router, ServeStats
 
@@ -24,7 +25,9 @@ from repro.serving.router import Router, ServeStats
 class InferenceEngine:
     def __init__(self, cfg: ModelConfig, assignment: Assignment, *,
                  params=None, key=None, devices: Optional[Sequence] = None,
-                 max_batch: int = 4, quantize: bool = False):
+                 max_batch: int = 4, quantize: bool = False,
+                 policy: str = "continuous", n_slots: int = 8,
+                 max_len: int = 256):
         self.cfg = cfg
         devices = list(devices if devices is not None else jax.devices())
         if params is None:
@@ -44,7 +47,14 @@ class InferenceEngine:
                 stage_devs.append(uniq)
             self.replicas.append(AsymmetricPipeline(
                 cfg, params, pipe.layer_split, stage_devs))
-        self.router = Router(self.replicas, max_batch=max_batch)
+        if policy != "static" and not slot_mode_supported(cfg):
+            warnings.warn(
+                f"{cfg.name}: slot mode needs uniform text decode "
+                "(SWA ring cache / encoder-decoder / VLM); serving with "
+                "policy='static'", stacklevel=2)
+            policy = "static"
+        self.router = Router(self.replicas, max_batch=max_batch,
+                             policy=policy, n_slots=n_slots, max_len=max_len)
 
     def generate(self, prompts: Sequence[np.ndarray], *, max_new: int = 16
                  ) -> List[np.ndarray]:
@@ -59,6 +69,6 @@ class InferenceEngine:
                                         kv_start=kv_start)
         return [out[i] for i in range(len(prompts))]
 
-    def serve(self, requests: Sequence[Request], *, deadline: float
-              ) -> ServeStats:
-        return self.router.serve(requests, deadline)
+    def serve(self, requests: Sequence[Request], *, deadline: float,
+              clock=None) -> ServeStats:
+        return self.router.serve(requests, deadline, clock=clock)

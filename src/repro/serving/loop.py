@@ -1,0 +1,186 @@
+"""The one serving loop (beyond-paper substrate for iteration-level
+scheduling over heterogeneous replicas, cf. HexGen-2 / Helix).
+
+Every serving path in the repo — the multi-replica Router, the
+single-replica continuous batcher, and the analytic SLO simulator — drives
+the same event loop with the same admission policy and the same accounting.
+The loop is event-driven at ITERATION granularity: each cycle it (1) admits
+due arrivals one at a time onto the least-loaded worker with capacity,
+(2) runs one iteration on every busy worker, and (3) when nothing is
+runnable, advances the clock to the next event (arrival or completion).
+
+Time is pluggable:
+
+  * ``WallClock``   — real time; idle waits sleep. Benchmarks and live
+    serving.
+  * ``VirtualClock`` — deterministic simulated time; idle waits jump, and
+    each worker iteration advances time by the worker's reported cost.
+    Tests and the analytic SLO simulator (identical workload in → identical
+    ``ServeStats`` out, bit for bit).
+
+Workers duck-type the replica port below. A worker may be a real engine
+(slot-based continuous batcher over a monolithic model or an asymmetric
+pipeline), a static whole-batch engine, or a closed-form analytic model:
+
+  capacity(now) -> int        admissible request count right now
+  load(now) -> float          least-loaded dispatch key (lower = preferred)
+  admit(reqs, now) -> None    hand over requests (may buffer internally)
+  busy(now) -> bool           has runnable work at `now`
+  run_iteration(now) -> (completions, cost)
+                              one iteration; completions are
+                              (request, output | None, finish_time | None)
+                              tuples — finish_time None means "stamp with
+                              the clock after this iteration"; cost is the
+                              virtual-clock advance for the iteration
+  next_event(now) -> float | None
+                              earliest future event when idle (analytic
+                              completions, etc.); None if none
+  inflight() -> int           admitted but unfinished request count
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Clocks
+# ---------------------------------------------------------------------------
+
+class WallClock:
+    """Monotonic wall time, zeroed at construction. Idle waits sleep."""
+
+    def __init__(self):
+        self._t0 = time.monotonic()
+
+    def now(self) -> float:
+        return time.monotonic() - self._t0
+
+    def sleep_until(self, t: float) -> None:
+        dt = t - self.now()
+        if dt > 0:
+            time.sleep(dt)
+
+    def tick(self, cost: float) -> None:
+        pass                       # real work advanced real time already
+
+
+class VirtualClock:
+    """Deterministic simulated time. Idle waits jump; iterations advance by
+    the worker-reported cost."""
+
+    def __init__(self, t0: float = 0.0):
+        self._t = t0
+
+    def now(self) -> float:
+        return self._t
+
+    def sleep_until(self, t: float) -> None:
+        self._t = max(self._t, t)
+
+    def tick(self, cost: float) -> None:
+        self._t += cost
+
+
+# ---------------------------------------------------------------------------
+# Accounting — the single ServeStats path
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ServeStats:
+    latencies: List[float]
+    attainment: float
+    throughput: float
+    iterations: int = 0            # worker iterations the loop ran
+    queue_delays: List[float] = dataclasses.field(default_factory=list)
+
+    def summary(self) -> str:
+        lat = np.asarray(self.latencies)
+        return (f"n={len(lat)} p50={np.percentile(lat, 50):.3f}s "
+                f"p99={np.percentile(lat, 99):.3f}s "
+                f"slo={self.attainment * 100:.1f}% thpt={self.throughput:.2f} req/s")
+
+    @classmethod
+    def from_requests(cls, requests: Sequence, deadline: float,
+                      *, iterations: int = 0) -> "ServeStats":
+        lats = [r.latency for r in requests]
+        att = float(np.mean([l <= deadline for l in lats])) if lats else 1.0
+        dur = max((r.finish_time for r in requests), default=1.0)
+        qd = [r.start_time - r.arrival for r in requests]
+        return cls(latencies=lats, attainment=att,
+                   throughput=len(requests) / max(dur, 1e-9),
+                   iterations=iterations, queue_delays=qd)
+
+
+# ---------------------------------------------------------------------------
+# The loop
+# ---------------------------------------------------------------------------
+
+def run_serve_loop(workers: Sequence, requests: Sequence, *, deadline: float,
+                   clock=None) -> ServeStats:
+    """Replay a timed workload over `workers` and account the outcome.
+
+    Mutates each request in place (`start_time`, `finish_time`, `output`)
+    and returns the ServeStats. Dispatch is iteration-level least-loaded:
+    every request is routed individually when it becomes due, not glued to
+    whatever batch happened to be forming.
+    """
+    clock = clock if clock is not None else WallClock()
+    pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
+    idx = 0
+    iterations = 0
+    while idx < len(pending) or any(w.inflight() for w in workers):
+        now = clock.now()
+        progressed = False
+
+        # -- admission: due arrivals onto the least-loaded worker ---------
+        while idx < len(pending) and pending[idx].arrival <= now:
+            cands = [w for w in workers if w.capacity(now) > 0]
+            if not cands:
+                break
+            w = min(cands, key=lambda c: c.load(now))
+            req = pending[idx]
+            req.start_time = now
+            w.admit([req], now)
+            idx += 1
+            progressed = True
+
+        # -- one iteration on every busy worker ---------------------------
+        # Workers are parallel replicas: in virtual time a cycle costs the
+        # SLOWEST busy worker's iteration, not the sum, so the clock ticks
+        # once per cycle and completions are stamped after the tick.
+        max_cost = 0.0
+        completed = []
+        for w in workers:
+            if not w.busy(now):
+                continue
+            done, cost = w.run_iteration(now)
+            iterations += 1
+            progressed = True
+            max_cost = max(max_cost, cost)
+            completed.extend(done)
+        if max_cost:
+            clock.tick(max_cost)
+        stamp = clock.now()
+        for req, out, when in completed:
+            if out is not None:
+                req.output = out
+            req.finish_time = when if when is not None else stamp
+
+        if progressed:
+            continue
+
+        # -- idle: advance the clock to the next event --------------------
+        targets = [pending[idx].arrival] if idx < len(pending) else []
+        for w in workers:
+            t = w.next_event(now)
+            if t is not None:
+                targets.append(t)
+        if not targets:            # nothing runnable, nothing scheduled
+            break
+        clock.sleep_until(min(targets))
+
+    return ServeStats.from_requests(pending, deadline, iterations=iterations)

@@ -75,13 +75,14 @@ class StageExecutor:
         self._decode_jit = jax.jit(self._stage_decode, donate_argnums=(1,))
 
     # ---- stage bodies (pure) --------------------------------------------
-    def _stage_seq(self, x, caches, positions, kv_start, valid, enc_out, *,
-                   mode):
+    def _stage_seq(self, x, caches, positions, kv_start, valid, enc_out,
+                   lens=None, *, mode):
         new_caches = []
         for kind, lp, sc in zip(self.kinds, self.layer_params, caches):
             x, nc, _ = M.apply_sublayer_seq(
                 self.cfg, kind, lp, x, sc, positions=positions,
-                kv_start=kv_start, valid=valid, enc_out=enc_out, mode=mode)
+                kv_start=kv_start, valid=valid, enc_out=enc_out, mode=mode,
+                lens=lens)
             new_caches.append(nc)
         return x, new_caches
 
@@ -102,6 +103,14 @@ class StageExecutor:
         return out
 
 
+def slot_mode_supported(cfg) -> bool:
+    """Slot-based continuous batching drives uniform text decoders; SWA
+    ring caches need uniform positions and encoder-decoder/VLM prompts
+    carry per-request modality state."""
+    return not (cfg.swa_window or cfg.is_encoder_decoder
+                or cfg.num_image_tokens)
+
+
 class AsymmetricPipeline:
     """A full model replica as a chain of StageExecutors."""
 
@@ -119,6 +128,10 @@ class AsymmetricPipeline:
         self.caches = None
         self._pos = 0
         self._kv_start = None
+        # slot-mode state (init_slot_caches): per-stage cache pools
+        self.slot_caches = None
+        self.n_slots = 0
+        self.slot_len = 0
 
     # ---- embedding / head on first / last stage ---------------------------
     def _embed(self, tokens, batch_extras):
@@ -178,17 +191,23 @@ class AsymmetricPipeline:
         self._pos = total
         return np.asarray(self._head(x[:, -1:, :])[:, 0])
 
-    def decode_step(self, tokens: np.ndarray):
-        """tokens (b,) -> next-position logits (b, V)."""
+    def _embed_decode_tokens(self, tokens, positions):
+        """Single-token decode embedding (b,1,d): embed lookup + family
+        scaling + sinusoidal positions where the architecture uses them."""
         cfg = self.cfg
-        s0 = self.stages[0]
-        x = s0.head_params["embed"][jnp.asarray(tokens)[:, None]]
+        x = self.stages[0].head_params["embed"][tokens[:, None]]
         if cfg.family == "vlm":
             x = x * jnp.asarray(np.sqrt(cfg.d_model), x.dtype)
         if cfg.is_encoder_decoder and cfg.rope_theta == 0.0:
-            posb = jnp.full((tokens.shape[0], 1), self._pos)
-            x = x + layers.sinusoidal_positions(posb, cfg.d_model
-                                                ).astype(x.dtype)
+            x = x + layers.sinusoidal_positions(positions[:, None],
+                                                cfg.d_model).astype(x.dtype)
+        return x
+
+    def decode_step(self, tokens: np.ndarray):
+        """tokens (b,) -> next-position logits (b, V)."""
+        tokens = jnp.asarray(tokens)
+        x = self._embed_decode_tokens(
+            tokens, jnp.full((tokens.shape[0],), self._pos))
         pos = jnp.int32(self._pos)       # traced: no retrace per step
         for si, st in enumerate(self.stages):
             with st.mesh:
@@ -209,3 +228,67 @@ class AsymmetricPipeline:
             out.append(nxt)
             logits = self.decode_step(nxt)
         return np.stack(out, axis=1)
+
+    # ---- slot mode (continuous batching) -----------------------------------
+    # Each stage owns a pre-allocated cache POOL whose batch rows are decode
+    # slots (allocated lazily on first insert). Arriving requests are prefilled jointly (right-padded, per-row
+    # lengths) through the stage chain on scratch caches and their rows
+    # scattered into free pool slots; decode iterations carry per-slot
+    # positions so slots at different depths share one jitted step.
+
+    def init_slot_caches(self, n_slots: int, max_len: int) -> None:
+        assert slot_mode_supported(self.cfg), \
+            "slot mode needs uniform text decode (SWA ring cache / " \
+            "encoder-decoder / VLM); use static batching"
+        self.n_slots = n_slots
+        self.slot_len = max_len
+        self.slot_caches = [st.make_caches(n_slots, max_len)
+                            for st in self.stages]
+
+    def insert_slots(self, tokens: np.ndarray, lens: np.ndarray,
+                     slot_ids: Sequence[int]) -> np.ndarray:
+        """Joint prefill of right-padded prompts `tokens` (m, P) with real
+        lengths `lens` (m,), scattering each row's caches into pool slot
+        `slot_ids[i]`. Returns each row's last-real-token logits (m, V).
+
+        Right padding keeps every row's token positions identical to
+        isolated generation (bit-identity), and leaves recurrent-state
+        caches holding exactly the post-prompt state; trailing garbage in
+        attention K/V beyond lens[i] is masked by kv_len during decode and
+        progressively overwritten as the slot decodes.
+        """
+        assert self.slot_caches is not None, "call init_slot_caches first"
+        m = len(slot_ids)          # rows beyond m are compile-shape padding
+        b, P = tokens.shape
+        lens = jnp.asarray(lens, jnp.int32)
+        x = self._embed(jnp.asarray(tokens), {})
+        positions = jnp.arange(P)[None].repeat(b, 0)
+        valid = (jnp.arange(P)[None, :] < lens[:, None]).astype(jnp.int32)
+        for si, st in enumerate(self.stages):
+            with st.mesh:
+                x = jax.device_put(x, _rep(st.mesh))
+                scratch = st.make_caches(b, self.slot_len)
+                x, rows = st._prefill_jit(x, scratch, positions, None,
+                                          valid, None, lens)
+                self.slot_caches[si] = [
+                    M.scatter_cache_rows(pool,
+                                         jax.tree.map(lambda r: r[:m], row),
+                                         slot_ids)
+                    for pool, row in zip(self.slot_caches[si], rows)]
+        x_last = x[jnp.arange(m), lens[:m] - 1][:, None]
+        return np.asarray(self._head(x_last)[:, 0])
+
+    def decode_slots(self, tokens: np.ndarray,
+                     positions: np.ndarray) -> np.ndarray:
+        """One decode iteration over ALL slots. tokens (n_slots,) next input
+        token per slot; positions (n_slots,) its absolute position. Free
+        slots decode garbage that is simply discarded. Returns (n_slots, V).
+        """
+        pos = jnp.asarray(positions, jnp.int32)
+        x = self._embed_decode_tokens(jnp.asarray(tokens), pos)
+        for si, st in enumerate(self.stages):
+            with st.mesh:
+                x = jax.device_put(x, _rep(st.mesh))
+                x, self.slot_caches[si] = st._decode_jit(
+                    x, self.slot_caches[si], pos, None, None)
+        return np.asarray(self._head(x)[:, 0])

@@ -1,41 +1,60 @@
-"""Task coordinator (paper Appendix C): dispatches requests to the scheduled
-replica groups. Static batching per replica (Appendix D: HexGen has no
-continuous batching; we batch waiting requests up to max_batch with left
-padding)."""
+"""Task coordinator (paper Appendix C), upgraded beyond the paper: requests
+are dispatched to replicas at ITERATION granularity through the shared
+serving loop. Each replica runs slot-based continuous batching (the paper's
+Appendix-D limitation), so a request admits as soon as any replica frees a
+slot instead of waiting for a whole static batch to drain.
+
+``policy="static"`` keeps the paper's own engine (left-padded whole-batch
+``generate`` per dispatch) as a worker on the SAME loop, for before/after
+measurement — there is exactly one serve-loop implementation either way.
+"""
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import List, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.serving.continuous import PipelineBatcher
+from repro.serving.loop import ServeStats, WallClock, run_serve_loop
 from repro.serving.request import Request
 
-
-@dataclasses.dataclass
-class ServeStats:
-    latencies: List[float]
-    attainment: float
-    throughput: float
-
-    def summary(self) -> str:
-        lat = np.asarray(self.latencies)
-        return (f"n={len(lat)} p50={np.percentile(lat, 50):.3f}s "
-                f"p99={np.percentile(lat, 99):.3f}s "
-                f"slo={self.attainment * 100:.1f}% thpt={self.throughput:.2f} req/s")
+__all__ = ["Router", "ServeStats", "StaticBatcher"]
 
 
-class Router:
-    """Least-loaded dispatch over replicas, mirroring the SLO simulator."""
+class StaticBatcher:
+    """The paper's engine as a loop worker: admitted requests accumulate up
+    to max_batch and one iteration runs the whole left-padded batch to
+    completion via ``replica.generate``."""
 
-    def __init__(self, replicas, *, max_batch: int = 4, pad_id: int = 0):
-        self.replicas = list(replicas)
+    def __init__(self, replica, *, max_batch: int = 4, pad_id: int = 0,
+                 virtual_step_cost: float = 1.0):
+        self.replica = replica
         self.max_batch = max_batch
         self.pad_id = pad_id
-        self.next_free = [0.0] * len(self.replicas)
+        self.virtual_step_cost = virtual_step_cost
+        self._queue: List[Request] = []
 
-    def _run_batch(self, replica, batch: List[Request]):
+    # ---- replica port (serving.loop) -------------------------------------
+    def capacity(self, now: float) -> int:
+        return self.max_batch - len(self._queue)
+
+    def load(self, now: float) -> float:
+        return len(self._queue)
+
+    def admit(self, reqs: Sequence[Request], now: float) -> None:
+        self._queue.extend(reqs)
+
+    def busy(self, now: float) -> bool:
+        return bool(self._queue)
+
+    def inflight(self) -> int:
+        return len(self._queue)
+
+    def next_event(self, now: float):
+        return None
+
+    def run_iteration(self, now: float):
+        batch, self._queue = self._queue, []
         maxlen = max(len(r.prompt) for r in batch)
         toks = np.full((len(batch), maxlen), self.pad_id, np.int32)
         kv_start = np.zeros(len(batch), np.int32)
@@ -43,36 +62,34 @@ class Router:
             toks[i, maxlen - len(r.prompt):] = r.prompt        # left pad
             kv_start[i] = maxlen - len(r.prompt)
         max_new = max(r.max_new_tokens for r in batch)
-        out = replica.generate(toks, max_new=max_new, kv_start=kv_start)
-        for i, r in enumerate(batch):
-            r.output = out[i, :r.max_new_tokens]
+        out = self.replica.generate(toks, max_new=max_new, kv_start=kv_start)
+        comps = [(r, out[i, :r.max_new_tokens], None)
+                 for i, r in enumerate(batch)]
+        return comps, self.virtual_step_cost * max_new
 
-    def serve(self, requests: Sequence[Request], deadline: float) -> ServeStats:
-        """Replays a timed workload measuring wall-clock latencies."""
-        t0 = time.monotonic()
-        pending = sorted(requests, key=lambda r: r.arrival)
-        idx = 0
-        while idx < len(pending):
-            now = time.monotonic() - t0
-            # wait for the next arrival if nothing is due
-            if pending[idx].arrival > now:
-                time.sleep(min(pending[idx].arrival - now, 0.05))
-                continue
-            # batch everything that has arrived, up to max_batch
-            batch = []
-            while idx < len(pending) and len(batch) < self.max_batch \
-                    and pending[idx].arrival <= now:
-                batch.append(pending[idx])
-                idx += 1
-            r = int(np.argmin(self.next_free))
-            self._run_batch(self.replicas[r], batch)
-            fin = time.monotonic() - t0
-            self.next_free[r] = fin
-            for req in batch:
-                req.start_time = now
-                req.finish_time = fin
-        lats = [r.latency for r in pending]
-        att = float(np.mean([l <= deadline for l in lats])) if lats else 1.0
-        dur = max(r.finish_time for r in pending) if pending else 1.0
-        return ServeStats(latencies=lats, attainment=att,
-                          throughput=len(pending) / max(dur, 1e-9))
+
+class Router:
+    """Least-loaded dispatch over replicas, sharing the serve loop (and its
+    admission policy) with the SLO simulator."""
+
+    def __init__(self, replicas, *, max_batch: int = 4, pad_id: int = 0,
+                 policy: str = "continuous", n_slots: int = 8,
+                 max_len: int = 256):
+        assert policy in ("continuous", "static"), policy
+        self.replicas = list(replicas)
+        self.policy = policy
+        if policy == "continuous":
+            self.workers = [PipelineBatcher(r, n_slots=n_slots,
+                                            max_len=max_len, pad_id=pad_id)
+                            for r in self.replicas]
+        else:
+            self.workers = [StaticBatcher(r, max_batch=max_batch,
+                                          pad_id=pad_id)
+                            for r in self.replicas]
+
+    def serve(self, requests: Sequence[Request], deadline: float, *,
+              clock=None) -> ServeStats:
+        """Replays a timed workload; wall-clock by default, or any Clock
+        (e.g. VirtualClock for deterministic replay)."""
+        return run_serve_loop(self.workers, requests, deadline=deadline,
+                              clock=clock if clock is not None else WallClock())

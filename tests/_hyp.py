@@ -1,0 +1,34 @@
+"""Optional-hypothesis shim: property tests collect-and-skip on a bare
+environment instead of breaking collection for the whole suite."""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    def settings(**kw):           # decoration-time stand-ins so modules
+        return lambda f: f        # collect; the tests themselves skip
+
+    def given(*a, **kw):
+        def deco(f):
+            @pytest.mark.skip(reason="hypothesis not installed")
+            def _skipped():
+                pass
+            _skipped.__name__ = f.__name__
+            return _skipped
+        return deco
+
+    class st:                     # only what @given lines evaluate eagerly
+        @staticmethod
+        def integers(*a, **kw):
+            return None
+
+        @staticmethod
+        def floats(*a, **kw):
+            return None
+
+        @staticmethod
+        def data():
+            return None

@@ -4,7 +4,8 @@ import itertools
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hyp import given, settings, st  # noqa: F401 (skips when absent)
 
 from repro.configs import get_config
 from repro.core import cluster as cl
