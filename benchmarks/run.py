@@ -12,8 +12,8 @@ from benchmarks import (bench_case_study, bench_continuous,
                         bench_convergence, bench_cost_model,
                         bench_dryrun_table, bench_kernels,
                         bench_layout_breakdown, bench_offline_resilience,
-                        bench_quant_economics, bench_slo_attainment,
-                        bench_swarm_compare)
+                        bench_paged, bench_quant_economics,
+                        bench_slo_attainment, bench_swarm_compare)
 
 SUITES = {
     "case_study": bench_case_study.run,             # Fig. 1
@@ -25,6 +25,7 @@ SUITES = {
     "layout_breakdown": bench_layout_breakdown.run,  # Table 4
     "kernels": bench_kernels.run,                   # substrate
     "continuous": bench_continuous.run,             # beyond-paper (Appx D)
+    "paged": bench_paged.run,                       # beyond-paper (paged KV)
     "quant_economics": bench_quant_economics.run,   # beyond-paper (int8)
     "dryrun_table": bench_dryrun_table.run,         # deliverable (g)
 }

@@ -123,17 +123,30 @@ def comm_pp_cost(cluster: Cluster, stage: Sequence[int],
         + best(task.batch * H * B) * task.s_out
 
 
+def _kv_tokens_per_seq(task: Task, block_size: int = 0) -> int:
+    """Cache tokens one sequence occupies. block_size == 0 is the contiguous
+    layout (a full s_in + s_out row is reserved up front); block_size > 0 is
+    the paged layout, which rounds ACTUAL usage up to whole blocks — the
+    only over-reservation left is the partial tail block."""
+    s_total = task.s_in + task.s_out
+    if block_size:
+        return -(-s_total // block_size) * block_size
+    return s_total
+
+
 def mem_bytes_per_device(cluster: Cluster, devices: Sequence[int],
                          layers: int, model: ModelProfile,
-                         task: Task) -> float:
+                         task: Task, block_size: int = 0) -> float:
     """C_mem^d: params + KV cache (sharded over the TP group) + 4 activation
-    buffers."""
+    buffers. block_size > 0 accounts the KV term at paged-block granularity
+    (serving.block_manager) instead of contiguous rows."""
     n = len(devices)
     B = task.bytes_per_el
     H = model.d_model
     s_total = task.s_in + task.s_out
+    s_kv = _kv_tokens_per_seq(task, block_size)
     per_layer = model.params_per_layer * B / n \
-        + model.kv_bytes_per_token_per_layer * task.batch * s_total / n
+        + model.kv_bytes_per_token_per_layer * task.batch * s_kv / n
     return per_layer * layers + 4 * task.batch * s_total * H * B
 
 
@@ -143,10 +156,42 @@ MEM_UTIL = 0.9
 
 
 def mem_ok(cluster: Cluster, devices: Sequence[int], layers: int,
-           model: ModelProfile, task: Task) -> bool:
-    need = mem_bytes_per_device(cluster, devices, layers, model, task)
+           model: ModelProfile, task: Task, block_size: int = 0) -> bool:
+    need = mem_bytes_per_device(cluster, devices, layers, model, task,
+                                block_size)
     return all(need <= MEM_UTIL * cluster.devices[d].spec.mem_bytes
                for d in devices)
+
+
+def concurrent_capacity(cluster: Cluster, devices: Sequence[int],
+                        layers: int, model: ModelProfile, task: Task, *,
+                        max_len: int = 0, block_size: int = 0) -> int:
+    """How many sequences of `task`'s shape fit in the memory left after
+    parameters and activation buffers on this stage's TP group — the
+    scheduler-facing capacity number behind the paged refactor.
+
+    Contiguous (block_size == 0) reserves ``max_len`` tokens per sequence
+    (worst case, defaulting to s_in + s_out); paged reserves only the
+    blocks the sequence actually fills. The gap between the two IS the
+    slots-vs-reservation win measured by benchmarks/bench_paged.py.
+    """
+    n = len(devices)
+    B = task.bytes_per_el
+    free = min(MEM_UTIL * cluster.devices[d].spec.mem_bytes
+               for d in devices)
+    free -= model.params_per_layer * B / n * layers
+    s_total = task.s_in + task.s_out
+    free -= 4 * task.batch * s_total * model.d_model * B   # activations
+    if free <= 0:
+        return 0
+    if block_size:
+        toks = _kv_tokens_per_seq(task, block_size)
+    else:
+        toks = max(max_len, s_total)
+    per_seq = model.kv_bytes_per_token_per_layer * toks * layers / n
+    if per_seq <= 0:
+        return 1 << 30              # recurrent-only stacks: O(1) state
+    return int(free // per_seq)
 
 
 # ---------------------------------------------------------------------------

@@ -152,7 +152,7 @@ class Evaluator:
     def __init__(self, cluster: Cluster, model: cm.ModelProfile,
                  task: cm.Task, *, deadline: float, rate: float,
                  sim_duration: float = 60.0, seed: int = 0,
-                 max_stages: int = 8):
+                 max_stages: int = 8, kv_block_size: Optional[int] = None):
         self.cluster = cluster
         self.model = model
         self.task = task
@@ -161,6 +161,11 @@ class Evaluator:
         self.sim_duration = sim_duration
         self.seed = seed
         self.max_stages = max_stages
+        # None -> idealized unbounded replicas (the paper's sim); an int
+        # bounds each replica's in-flight requests by its KV capacity at
+        # that block granularity (0 = contiguous rows), so paged capacity
+        # shows up in simulated attainment
+        self.kv_block_size = kv_block_size
         self._plan_cache: Dict[FrozenSet[int], Optional[PipelinePlan]] = {}
         self._fit_cache: Dict[Individual, Tuple[float, float]] = {}
         self.evaluations = 0
@@ -186,13 +191,25 @@ class Evaluator:
         plans = [self.plan(g) for g in ind]
         return Assignment([p for p in plans if p is not None])
 
+    def _max_concurrent(self, plan: PipelinePlan) -> int:
+        """KV-capacity bound of one replica: the tightest stage's
+        concurrent-sequence count at the configured block granularity
+        (0 when capacity is idealized as unbounded)."""
+        if self.kv_block_size is None:
+            return 0
+        return min(cm.concurrent_capacity(
+            self.cluster, st.device_ids, st.num_layers, self.model,
+            self.task, block_size=self.kv_block_size)
+            for st in plan.stages)
+
     def fitness(self, ind: Individual) -> Tuple[float, float]:
         """(SLO attainment, -mean latency) to maximize lexicographically."""
         if ind in self._fit_cache:
             return self._fit_cache[ind]
         self.evaluations += 1
         asg = self.assignment(ind)
-        reps = [slo_sim.ReplicaModel(p.cost, p.bottleneck)
+        reps = [slo_sim.ReplicaModel(p.cost, p.bottleneck,
+                                     max_concurrent=self._max_concurrent(p))
                 for p in asg.pipelines]
         att = slo_sim.simulate(reps, self.rate, self.deadline,
                                duration=self.sim_duration, seed=self.seed)
@@ -207,12 +224,13 @@ def search(cluster: Cluster, model: cm.ModelProfile, task: cm.Task, *,
            deadline: float, rate: float, iters: int = 60,
            pop_size: int = 10, seed: int = 0, mutation: str = "hexgen",
            sim_duration: float = 60.0, max_stages: int = 8,
+           kv_block_size: Optional[int] = None,
            init: Optional[List[Individual]] = None) -> SearchResult:
     """The full two-phase search: genetic over partitions, DP inside."""
     rng = np.random.default_rng(seed)
     ev = Evaluator(cluster, model, task, deadline=deadline, rate=rate,
                    sim_duration=sim_duration, seed=seed,
-                   max_stages=max_stages)
+                   max_stages=max_stages, kv_block_size=kv_block_size)
     if init is None:
         if mutation == "hexgen":
             pop = kmeans_init(cluster, rng)

@@ -14,17 +14,21 @@ def schedule(cluster: Cluster, arch: str, task: cm.Task, *,
              deadline: float, rate: float, iters: int = 60,
              seed: int = 0, mutation: str = "hexgen",
              paper_exact: bool = False,
-             max_stages: int = 8) -> SearchResult:
+             max_stages: int = 8, kv_block_size=None) -> SearchResult:
     """Find an assignment of `cluster` serving `arch` replicas.
 
     deadline: SLO latency bound (s); rate: request rate (req/s).
     mutation="random" reproduces the paper's strawman baseline.
+    kv_block_size (None = idealized unbounded replicas) bounds each
+    simulated replica's in-flight requests by its KV capacity at that
+    paged-block granularity (0 = contiguous rows).
     """
     cfg = get_config(arch)
     profile = cm.ModelProfile.from_config(cfg, paper_exact=paper_exact,
                                           bytes_per_el=task.bytes_per_el)
     res = genetic.search(cluster, profile, task, deadline=deadline,
                          rate=rate, iters=iters, seed=seed,
-                         mutation=mutation, max_stages=max_stages)
+                         mutation=mutation, max_stages=max_stages,
+                         kv_block_size=kv_block_size)
     res.assignment.validate(cfg.num_layers)
     return res

@@ -29,6 +29,11 @@ from repro.serving.request import Request
 class ReplicaModel:
     latency: float        # end-to-end time of one request on this pipeline
     bottleneck: float     # min inter-admission gap (max stage time)
+    # in-flight request bound from KV-cache capacity (0 = unbounded, the
+    # paper's idealized queue). cost_model.concurrent_capacity derives it
+    # for either layout; the paged layout's larger bound shows up directly
+    # as simulated attainment.
+    max_concurrent: int = 0
 
 
 def poisson_arrivals(rate: float, duration: float, seed: int = 0) -> np.ndarray:
@@ -55,6 +60,8 @@ class AnalyticWorker:
 
     # ---- replica port (serving.loop) -------------------------------------
     def capacity(self, now: float) -> int:
+        if self.model.max_concurrent:
+            return max(self.model.max_concurrent - len(self._events), 0)
         return 1 << 30             # unbounded queue, like the paper's sim
 
     def load(self, now: float) -> float:

@@ -69,7 +69,16 @@ def decode_attention_pallas(q, k, v, *, kv_len=None, kv_start=None,
     g = hq // hkv
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
     kv_block = min(kv_block, skv)
-    assert skv % kv_block == 0
+    pad = (-skv) % kv_block
+    if pad:
+        # ragged final block: pad the cache to a whole block and mask the
+        # tail via kv_len (positions >= the true skv are never attended)
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        tail = jnp.full((b,), skv, jnp.int32)
+        kv_len = tail if kv_len is None else jnp.minimum(
+            jnp.asarray(kv_len, jnp.int32), tail)
+        skv += pad
     nk = skv // kv_block
 
     qt = jnp.moveaxis(q, 2, 1)                          # (b,hq,1,d)

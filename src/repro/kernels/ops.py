@@ -367,6 +367,38 @@ def _decode_attention_xla(q, k, v, *, kv_len, kv_start, scale):
 
 
 # ---------------------------------------------------------------------------
+# Paged decode attention (one new token against a block-paged cache)
+# ---------------------------------------------------------------------------
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, *, kv_len=None,
+                           scale=None):
+    """q (b,1,hq,d) against a paged cache: k_pages/v_pages
+    (n_blocks, block_size, hkv, d) shared by all sequences, block_tables
+    (b, max_blocks) int32 mapping logical block j of row i to a physical
+    page, kv_len (b,) valid lengths.
+
+    The XLA path gathers each row's pages into a contiguous (b, S, hkv, d)
+    view and reuses the contiguous decode kernel — with S equal to the
+    contiguous slot length this is BIT-IDENTICAL to contiguous decode (the
+    gathered values match everywhere attention can look, and masked tail
+    positions contribute exact zeros either way). The Pallas path streams
+    pages directly through the block table (kernels.paged_attention) and
+    never materializes the gather.
+    """
+    if _BACKEND in ("pallas", "pallas_interpret"):
+        from repro.kernels import paged_attention as pa
+        return pa.paged_decode_attention_pallas(
+            q, k_pages, v_pages, block_tables, kv_len=kv_len, scale=scale,
+            interpret=(_BACKEND == "pallas_interpret"))
+    k = ref.gather_pages(k_pages, block_tables)
+    v = ref.gather_pages(v_pages, block_tables)
+    if kv_len is None:
+        kv_len = jnp.full((q.shape[0],), k.shape[1], jnp.int32)
+    return _decode_attention_xla(q, k, v, kv_len=kv_len, kv_start=None,
+                                 scale=scale)
+
+
+# ---------------------------------------------------------------------------
 # Selective scan (Mamba S6)
 # ---------------------------------------------------------------------------
 

@@ -1,0 +1,113 @@
+"""Pallas TPU paged flash-decode: one query token against a BLOCK-PAGED KV
+cache, gathered through a per-sequence block table.
+
+The cache is a pool of physical pages ``k_pages/v_pages
+(n_blocks, block_size, h_kv, d)`` shared by every in-flight sequence; a
+sequence's logical KV positions [0, kv_len) live at
+``pages[table[p // block_size], p % block_size]``. The grid is
+(batch, q_head, logical_blocks) with the logical-block axis innermost and
+sequential, carrying online-softmax scratch in VMEM exactly like the
+contiguous flash-decode kernel — the only difference is WHERE each KV tile
+comes from: the block table is a scalar-prefetch operand
+(PrefetchScalarGridSpec) so the index map can route each grid step's DMA to
+the right physical page before the kernel body runs.
+
+Ragged tails need no special casing: the final logical block is simply
+masked by kv_len, and unallocated table entries point at the reserved null
+page (never unmasked).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tbl_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+            acc_ref, m_ref, l_ref, *, scale, nb, block_size):
+    ib = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kpos = ik * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_size), 1)
+    mask = kpos < len_ref[ib]
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (1, d)
+    k = k_ref[0, :, 0].astype(jnp.float32)              # (block_size, d)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m_new[:, None]))
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == nb - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(q, k_pages, v_pages, block_tables, *,
+                                  kv_len=None, scale=None, interpret=False):
+    """q (b,1,hq,d); k_pages,v_pages (n_blocks,block_size,hkv,d);
+    block_tables (b,max_blocks) int32; kv_len (b,) valid lengths
+    (default: every table slot full). Returns (b,1,hq,d)."""
+    b, one, hq, d = q.shape
+    assert one == 1
+    n_blocks, block_size, hkv, _ = k_pages.shape
+    g = hq // hkv
+    nb = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    if kv_len is None:
+        kv_len = jnp.full((b,), nb * block_size, jnp.int32)
+    tbl = jnp.asarray(block_tables, jnp.int32)
+    lens = jnp.asarray(kv_len, jnp.int32)
+
+    kern = functools.partial(_kernel, scale=scale, nb=nb,
+                             block_size=block_size)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hq, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d),
+                         lambda ib, ih, ik, tbl, lens: (ib, 0, ih, 0)),
+            pl.BlockSpec((1, block_size, 1, d),
+                         lambda ib, ih, ik, tbl, lens:
+                         (tbl[ib, ik], 0, ih // g, 0)),
+            pl.BlockSpec((1, block_size, 1, d),
+                         lambda ib, ih, ik, tbl, lens:
+                         (tbl[ib, ik], 0, ih // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d),
+                               lambda ib, ih, ik, tbl, lens: (ib, 0, ih, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, 1, hq, d), q.dtype),
+        interpret=interpret,
+    )(tbl, lens, q, k_pages, v_pages)

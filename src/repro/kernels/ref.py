@@ -85,6 +85,28 @@ def decode_attention_ref(q, k, v, *, kv_len=None, kv_start=None, window=0,
                          kv_start=kv_start, scale=scale)
 
 
+def gather_pages(pages, block_tables):
+    """(n_blocks, bs, h, d) pages + (b, nb) tables -> contiguous
+    (b, nb * bs, h, d) per-sequence caches (unallocated table entries
+    gather the null page; callers mask them via kv_len)."""
+    b, nb = block_tables.shape
+    _, bs, h, d = pages.shape
+    return pages[block_tables].reshape(b, nb * bs, h, d)
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, *,
+                               kv_len=None, scale=None):
+    """Paged decode oracle: gather each sequence's pages into a contiguous
+    cache, then run the contiguous decode oracle. q (b,1,hq,d);
+    k_pages/v_pages (n_blocks, block_size, hkv, d); block_tables (b, nb)."""
+    k = gather_pages(k_pages, block_tables)
+    v = gather_pages(v_pages, block_tables)
+    b = q.shape[0]
+    if kv_len is None:
+        kv_len = jnp.full((b,), k.shape[1], jnp.int32)
+    return decode_attention_ref(q, k, v, kv_len=kv_len, scale=scale)
+
+
 def ssm_scan_ref(x, dt, A, B, C, D, *, h0=None):
     """Sequential selective-scan oracle (Mamba S6).
 

@@ -76,6 +76,11 @@ def main() -> None:
                     choices=("continuous", "static"),
                     help="iteration-level slot batching vs the paper's "
                          "static whole-batch engine")
+    ap.add_argument("--cache-layout", default="contiguous",
+                    choices=("contiguous", "paged"),
+                    help="per-slot max_len cache rows vs block-paged KV "
+                         "with per-stage pools (docs/memory.md)")
+    ap.add_argument("--block-size", type=int, default=16)
     args = ap.parse_args()
 
     pool = CLUSTERS[args.cluster]()
@@ -91,9 +96,13 @@ def main() -> None:
     cfg = cfg_full.reduced() if args.reduced else cfg_full
     asg = scale_assignment(res.assignment, cfg_full.num_layers,
                            cfg.num_layers) if args.reduced else res.assignment
+    max_len = args.prompt_len + 8 + args.out_len
+    if args.cache_layout == "paged":
+        max_len += (-max_len) % args.block_size    # whole blocks
     engine = InferenceEngine(cfg, asg, key=jax.random.PRNGKey(args.seed),
-                             policy=args.policy,
-                             max_len=args.prompt_len + 8 + args.out_len)
+                             policy=args.policy, max_len=max_len,
+                             cache_layout=args.cache_layout,
+                             block_size=args.block_size)
     reqs = synth_workload(rate=args.rate, duration=args.duration,
                           vocab=cfg.vocab_size, prompt_len=args.prompt_len,
                           prompt_jitter=4, out_len=args.out_len,

@@ -161,6 +161,37 @@ def attn_decode(p, x, cfg, *, pos, kv_start=None, cache=None, window=None):
     return out, {"k": nk, "v": nv}
 
 
+def attn_decode_paged(p, x, cfg, *, pos, block_tables, cache):
+    """One-token decode against a BLOCK-PAGED cache. x (b,1,d); pos (b,)
+    per-row absolute positions; block_tables (b, max_blocks) int32;
+    cache {"k","v"}: (n_blocks, block_size, hkv, hd) page pools shared by
+    every row. The new token's K/V are scattered into the page holding
+    position pos (block_tables[i, pos // bs], offset pos % bs) and
+    attention gathers through the table (ops.paged_decode_attention).
+
+    Rows whose table is all-null (free slots riding a joint iteration)
+    write into the reserved trash page and read garbage that the caller
+    discards — exactly like free slots in the contiguous path.
+    """
+    q, k, v = _qkv(p, x, cfg)
+    b = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    assert pos.ndim == 1, "paged decode is per-row by construction"
+    posb = pos[:, None]
+    q = rope(q, posb, cfg.rope_theta)
+    k = rope(k, posb, cfg.rope_theta)
+    bs = cache["k"].shape[1]
+    ridx = jnp.arange(b)
+    blk = jnp.asarray(block_tables, jnp.int32)[ridx, pos // bs]
+    off = pos % bs
+    nk = cache["k"].at[blk, off].set(k[:, 0].astype(cache["k"].dtype))
+    nv = cache["v"].at[blk, off].set(v[:, 0].astype(cache["v"].dtype))
+    kv_len = pos + 1
+    o = ops.paged_decode_attention(q, nk, nv, block_tables, kv_len=kv_len)
+    out = mm(o.reshape(b, 1, -1), p["wo"])
+    return out, {"k": nk, "v": nv}
+
+
 def cross_attn(p, x, cfg, *, enc_kv=None, enc_out=None):
     """Whisper cross-attention. enc_kv: precomputed {"k","v"} over encoder
     frames (cached at prefill); or compute from enc_out."""

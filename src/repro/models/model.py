@@ -260,6 +260,43 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
     return cache
 
 
+def init_paged_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
+                     n_slots: int, dtype=None):
+    """Stacked (n_periods, ...) PAGED cache pytree.
+
+    Attention sublayers get page pools ``(P, n_blocks, block_size, hkv, hd)``
+    shared by every in-flight sequence and addressed through per-request
+    block tables (serving.block_manager); recurrent-state sublayers
+    (Mamba/xLSTM) keep their O(1) per-slot states exactly as in the
+    contiguous layout — there is nothing to page. Block 0 of each pool is
+    the reserved null/trash page.
+
+    SWA ring caches and encoder-decoder cross-KV stay on the contiguous
+    path (slot mode already excludes them — serving.pipeline.
+    slot_mode_supported).
+    """
+    assert not (cfg.swa_window or cfg.is_encoder_decoder), \
+        "paged layout covers full-KV text decoders"
+    P = n_periods(cfg)
+    dt = dtype or _pdt(cfg)
+    hd = cfg.head_dim_
+    kinds = sub_kinds(cfg)
+    slot_states = None
+    if any(kind != ATTN for kind, _ in kinds):
+        slot_states = init_cache(cfg, n_slots, 1, dtype)
+    cache = {}
+    for j, (kind, _) in enumerate(kinds):
+        if kind == ATTN:
+            c = {"k": jnp.zeros((P, n_blocks, block_size, cfg.num_kv_heads,
+                                 hd), dt),
+                 "v": jnp.zeros((P, n_blocks, block_size, cfg.num_kv_heads,
+                                 hd), dt)}
+        else:
+            c = slot_states[f"sub{j}"]
+        cache[f"sub{j}"] = c
+    return cache
+
+
 # ---------------------------------------------------------------------------
 # Stack application
 # ---------------------------------------------------------------------------
@@ -348,6 +385,31 @@ def apply_sublayer_decode(cfg, kind, sp, x, sc, *, pos, kv_start):
     return x, nc
 
 
+def apply_sublayer_decode_paged(cfg, kind, sp, x, sc, *, pos,
+                                block_tables):
+    """One block for a single decode token against a PAGED cache.
+    Attention sublayers address page pools through `block_tables`;
+    recurrent-state sublayers are identical to the contiguous path (their
+    cache rows ARE the slots). Returns (x, new_cache)."""
+    h = _norm(cfg, sp["ln1"], x)
+    if kind == ATTN:
+        o, nc = layers.attn_decode_paged(sp["mixer"], h, cfg, pos=pos,
+                                         block_tables=block_tables,
+                                         cache={"k": sc["k"], "v": sc["v"]})
+    elif kind == MAMBA:
+        o, nc = mamba.mamba_decode(sp["mixer"], h, cfg, cache=sc)
+    elif kind == MLSTM:
+        o, nc = xlstm.mlstm_decode(sp["mixer"], h, cfg, cache=sc)
+    elif kind == SLSTM:
+        o, nc = xlstm.slstm_decode(sp["mixer"], h, cfg, cache=sc)
+    x = x + o
+    if "mlp" in sp:
+        x = x + layers.mlp(sp["mlp"], _norm(cfg, sp["ln2"], x), cfg)
+    elif "moe" in sp:
+        x = x + moe.moe_mlp(sp["moe"], _norm(cfg, sp["ln2"], x), cfg)
+    return x, nc
+
+
 def _apply_period_seq(cfg, pp, x, cache_p, *, positions, kv_start, valid,
                       enc_out, mode, lens=None):
     new_cache = {}
@@ -369,6 +431,16 @@ def _apply_period_decode(cfg, pp, x, cache_p, *, pos, kv_start):
         x, nc = apply_sublayer_decode(cfg, kind, pp[f"sub{j}"], x,
                                       cache_p[f"sub{j}"], pos=pos,
                                       kv_start=kv_start)
+        new_cache[f"sub{j}"] = nc
+    return x, new_cache
+
+
+def _apply_period_decode_paged(cfg, pp, x, cache_p, *, pos, block_tables):
+    new_cache = {}
+    for j, (kind, _) in enumerate(sub_kinds(cfg)):
+        x, nc = apply_sublayer_decode_paged(cfg, kind, pp[f"sub{j}"], x,
+                                            cache_p[f"sub{j}"], pos=pos,
+                                            block_tables=block_tables)
         new_cache[f"sub{j}"] = nc
     return x, new_cache
 
@@ -425,6 +497,15 @@ def init_layer_cache(cfg: ModelConfig, i: int, batch: int, max_len: int,
     return jax.tree.map(lambda l: l[0], full[f"sub{j}"])
 
 
+def init_layer_paged_cache(cfg: ModelConfig, i: int, n_blocks: int,
+                           block_size: int, n_slots: int, dtype=None):
+    """Single-layer PAGED cache (no period axis): attention layers get a
+    page pool, recurrent layers their per-slot states."""
+    p, j = layer_sub_index(cfg, i)
+    full = init_paged_cache(cfg, n_blocks, block_size, n_slots, dtype)
+    return jax.tree.map(lambda l: l[0], full[f"sub{j}"])
+
+
 # ---------------------------------------------------------------------------
 # Slot cache pools (continuous batching): a replica owns one pre-allocated
 # cache whose batch rows are SLOTS; inserting a request scatters its freshly
@@ -444,6 +525,54 @@ def scatter_cache_rows(pool, rows, slot_ids, *, batch_axis=0):
         return big.at[:, idx].set(small.astype(big.dtype))
 
     return jax.tree.map(put, pool, rows)
+
+
+def scatter_rows_to_pages(pages, rows, dest_blocks, *, batch_axis=0):
+    """Write freshly prefilled contiguous cache rows into a PAGED pool.
+
+    pages: {"k","v"} page pools (n_blocks, bs, h, d), or period-stacked
+        (P, n_blocks, bs, h, d) with batch_axis=1.
+    rows:  {"k","v"} contiguous rows (m, S, h, d) (resp. (P, m, S, h, d))
+        with S a multiple of the block size.
+    dest_blocks: (m * S // bs,) int32 physical page of each (row, logical
+        block) pair, row-major; unallocated tail entries point at the null
+        page and their (garbage, past-lens) contents are never unmasked.
+    """
+    dest = jnp.asarray(dest_blocks, jnp.int32)
+
+    def put(pool, row):
+        if batch_axis == 0:
+            m, S, h, d = row.shape
+            bs = pool.shape[1]
+            blocks = row.reshape(m * (S // bs), bs, h, d)
+            return pool.at[dest].set(blocks.astype(pool.dtype))
+        P, m, S, h, d = row.shape
+        bs = pool.shape[2]
+        blocks = row.reshape(P, m * (S // bs), bs, h, d)
+        return pool.at[:, dest].set(blocks.astype(pool.dtype))
+
+    return jax.tree.map(put, pages, rows)
+
+
+def scatter_cache_rows_paged(pool, rows, slot_ids, dest_blocks, *,
+                             batch_axis=0):
+    """Paged counterpart of ``scatter_cache_rows`` for one sublayer's cache:
+    attention K/V leaves scatter into pages via `dest_blocks`; every other
+    leaf (recurrent states) scatters by slot id exactly as the contiguous
+    path does."""
+    if "k" in pool and "v" in pool:
+        paged_part = scatter_rows_to_pages(
+            {"k": pool["k"], "v": pool["v"]},
+            {"k": rows["k"], "v": rows["v"]},
+            dest_blocks, batch_axis=batch_axis)
+        rest_pool = {n: l for n, l in pool.items() if n not in ("k", "v")}
+        rest_rows = {n: l for n, l in rows.items() if n not in ("k", "v")}
+        out = dict(paged_part)
+        if rest_pool:
+            out.update(scatter_cache_rows(rest_pool, rest_rows, slot_ids,
+                                          batch_axis=batch_axis))
+        return out
+    return scatter_cache_rows(pool, rows, slot_ids, batch_axis=batch_axis)
 
 
 # ---------------------------------------------------------------------------
@@ -589,6 +718,26 @@ def decode_step(cfg: ModelConfig, params, tokens, cache, pos, *,
         pp, cp = per
         x, nc = _apply_period_decode(cfg, pp, x, cp, pos=pos,
                                      kv_start=kv_start)
+        return x, nc
+
+    x, new_cache = jax.lax.scan(f, x, (params["blocks"], cache))
+    logits = _head(cfg, params, x)[:, 0]
+    return logits, new_cache
+
+
+def decode_step_paged(cfg: ModelConfig, params, tokens, cache, pos,
+                      block_tables):
+    """One decode step against the PAGED cache (init_paged_cache layout).
+    tokens (b,); pos (b,) per-row absolute positions; block_tables
+    (b, max_blocks) int32, shared by every layer (each period's page pools
+    are indexed with the same table)."""
+    x = _embed(cfg, params, tokens[:, None])
+    bt = jnp.asarray(block_tables, jnp.int32)
+
+    def f(x, per):
+        pp, cp = per
+        x, nc = _apply_period_decode_paged(cfg, pp, x, cp, pos=pos,
+                                           block_tables=bt)
         return x, nc
 
     x, new_cache = jax.lax.scan(f, x, (params["blocks"], cache))

@@ -1,0 +1,149 @@
+"""Paged KV-cache bookkeeping: a fixed pool of cache BLOCKS per stage and a
+per-request BlockTable mapping logical token positions to physical blocks.
+
+The paper's engine (and our PR-1 slot engine) pre-allocated one contiguous
+``max_len`` cache row per slot, so a replica's concurrency was capped by the
+WORST-CASE sequence length — a large-HBM stage could not hold more in-flight
+requests than its smallest peer. Paging (vLLM-style; cf. the HexGen-2 view
+of KV state as a movable first-class resource) allocates fixed-size blocks
+on demand: admission needs only the prompt's blocks plus headroom, decode
+grows tables one block at a time, and when the pool runs dry the engine
+preempts a slot by recompute (free its blocks, requeue the request).
+
+Block ids are plain ints into per-stage page arrays
+``(n_blocks, block_size, heads, head_dim)`` (models.model.init_paged_cache).
+Block 0 is reserved as the NULL/trash block: unallocated table entries point
+at it, compile-shape padding rows scatter into it, and it is never read
+(attention masks positions >= kv_len). Refcounts exist so a future
+prefix-sharing / fork path can alias blocks copy-on-write; the serving
+engine today only ever holds one reference per block.
+
+Everything here is host-side Python — no jax. The arrays handed to jitted
+stage functions come from ``BlockTable.as_array``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List, Optional
+
+import numpy as np
+
+NULL_BLOCK = 0
+
+
+def blocks_for_tokens(n_tokens: int, block_size: int) -> int:
+    """Blocks needed to hold n_tokens (>= 0)."""
+    return -(-max(n_tokens, 0) // block_size)
+
+
+class BlockPool:
+    """Fixed pool of cache blocks with a free list and per-block refcounts.
+
+    Block 0 is reserved (NULL/trash) and never handed out; ``n_blocks``
+    counts it, so a pool of n_blocks has n_blocks - 1 usable blocks.
+    """
+
+    def __init__(self, n_blocks: int, block_size: int):
+        assert n_blocks >= 2, "pool needs at least the null block + one"
+        assert block_size >= 1
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self._free: deque = deque(range(1, n_blocks))
+        self._ref = np.zeros(n_blocks, np.int32)
+        self._ref[NULL_BLOCK] = 1          # pinned forever
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return (self.n_blocks - 1) - len(self._free)
+
+    def can_allocate(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int = 1) -> Optional[List[int]]:
+        """All-or-nothing allocation of n blocks; None when the pool is dry."""
+        if n > len(self._free):
+            return None
+        out = [self._free.popleft() for _ in range(n)]
+        for b in out:
+            assert self._ref[b] == 0, b
+            self._ref[b] = 1
+        return out
+
+    def incref(self, bid: int) -> None:
+        assert bid != NULL_BLOCK and self._ref[bid] > 0, bid
+        self._ref[bid] += 1
+
+    def free(self, bid: int) -> None:
+        """Drop one reference; the block returns to the free list at zero."""
+        if bid == NULL_BLOCK:
+            return
+        assert self._ref[bid] > 0, f"double free of block {bid}"
+        self._ref[bid] -= 1
+        if self._ref[bid] == 0:
+            self._free.append(bid)
+
+    def ref(self, bid: int) -> int:
+        return int(self._ref[bid])
+
+
+@dataclasses.dataclass
+class BlockTable:
+    """One request's logical->physical block map within a single pool."""
+
+    pool: BlockPool
+    blocks: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def n_blocks(self) -> int:
+        return len(self.blocks)
+
+    def capacity_tokens(self) -> int:
+        return len(self.blocks) * self.pool.block_size
+
+    def allocate_tokens(self, n_tokens: int) -> bool:
+        """Grow the table to hold n_tokens total; all-or-nothing."""
+        need = blocks_for_tokens(n_tokens, self.pool.block_size) \
+            - len(self.blocks)
+        if need <= 0:
+            return True
+        got = self.pool.alloc(need)
+        if got is None:
+            return False
+        self.blocks.extend(got)
+        return True
+
+    def ensure(self, pos: int) -> bool:
+        """Make position `pos` writable (allocate-on-decode growth)."""
+        return self.allocate_tokens(pos + 1)
+
+    def release(self) -> None:
+        for b in self.blocks:
+            self.pool.free(b)
+        self.blocks.clear()
+
+    def fork(self) -> "BlockTable":
+        """Alias every block (refcount++) — the prefix-sharing enabler.
+        Callers must copy-on-write before mutating a shared block."""
+        for b in self.blocks:
+            self.pool.incref(b)
+        return BlockTable(self.pool, list(self.blocks))
+
+    def as_array(self, max_blocks: int) -> np.ndarray:
+        """(max_blocks,) int32 padded with the NULL block."""
+        assert len(self.blocks) <= max_blocks, (len(self.blocks), max_blocks)
+        out = np.full(max_blocks, NULL_BLOCK, np.int32)
+        out[:len(self.blocks)] = self.blocks
+        return out
+
+    def gather_positions(self, n_tokens: int) -> np.ndarray:
+        """Flat physical slot index (block * block_size + offset) of each of
+        the first n_tokens logical positions — the host-side round-trip
+        oracle the property tests check gather/scatter against."""
+        bs = self.pool.block_size
+        pos = np.arange(n_tokens)
+        return np.asarray(self.blocks, np.int64)[pos // bs] * bs + pos % bs

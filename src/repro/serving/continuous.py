@@ -28,7 +28,8 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import Dict, List, Optional, Sequence
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -36,6 +37,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
+from repro.serving.block_manager import (BlockPool, BlockTable,
+                                         blocks_for_tokens)
 from repro.serving.loop import (ServeStats, VirtualClock, WallClock,
                                 run_serve_loop)
 from repro.serving.request import Request
@@ -47,6 +50,7 @@ class _Slot:
     pos: int = 0               # next write position
     remaining: int = 0
     out: Optional[list] = None
+    seq: int = 0               # admission order (paged preemption victims)
 
     @property
     def free(self) -> bool:
@@ -70,8 +74,11 @@ class SlotEngine:
         self.pad_id = pad_id
         self.virtual_step_cost = virtual_step_cost
         self.slots = [_Slot() for _ in range(n_slots)]
-        self._queue: List[Request] = []
+        self._queue: Deque[Request] = deque()
         self._last_logits = np.zeros((n_slots, vocab_size), np.float32)
+        self.rejected = 0          # oversized requests turned away
+        self.preemptions = 0       # paged: slots recomputed after eviction
+        self._admit_seq = 0
 
     # ---- slot state ------------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -107,17 +114,26 @@ class SlotEngine:
         if self._queue and free:
             batch = []
             while self._queue and len(batch) < len(free):
-                r = self._queue.pop(0)
-                # a request must fit prompt + all its decode steps in one
-                # slot; reject it alone (empty output) instead of crashing
-                # the serve loop and losing every in-flight request
-                if len(r.prompt) + r.max_new_tokens > self.max_len - 1:
+                r = self._queue[0]
+                # a request must fit prompt + all its decode steps on this
+                # engine (slot length, and for the paged engine the whole
+                # block pool); reject it alone (empty output, counted in
+                # ServeStats.rejected) instead of crashing the serve loop
+                # and losing every in-flight request
+                if not self._fits(r):
+                    self._queue.popleft()
+                    self.rejected += 1
                     warnings.warn(
                         f"request {r.rid}: prompt {len(r.prompt)} + "
-                        f"max_new {r.max_new_tokens} exceeds slot length "
-                        f"{self.max_len}; rejected with empty output")
+                        f"max_new {r.max_new_tokens} cannot fit this "
+                        "engine; rejected with empty output")
                     comps.append((r, np.zeros(0, np.int32), None))
                     continue
+                # admissible later but not right now (paged: not enough
+                # free blocks yet) — keep it queued, FIFO order intact
+                if not self._can_admit(r, batch):
+                    break
+                self._queue.popleft()
                 batch.append(r)
             if batch:
                 self._insert_batch(batch, free[:len(batch)])
@@ -127,6 +143,19 @@ class SlotEngine:
         comps.extend((req, np.asarray(out, np.int32), None)
                      for req, out in done)
         return comps, self.virtual_step_cost
+
+    # ---- admission / paging hooks (overridden by the paged engine) --------
+    def _fits(self, r: Request) -> bool:
+        return len(r.prompt) + r.max_new_tokens <= self.max_len - 1
+
+    def _can_admit(self, r: Request, batch: Sequence[Request]) -> bool:
+        return True
+
+    def _before_decode(self) -> None:
+        pass                       # paged: allocate-on-decode / preemption
+
+    def _on_slot_free(self, i: int) -> None:
+        pass                       # paged: release the slot's block tables
 
     # ---- engine internals ------------------------------------------------
     def _insert_batch(self, reqs: Sequence[Request],
@@ -150,9 +179,12 @@ class SlotEngine:
         for i, (r, slot) in enumerate(zip(reqs, slot_ids)):
             self._last_logits[slot] = np.asarray(logits[i])
             self.slots[slot] = _Slot(req=r, pos=int(lens[i]),
-                                     remaining=r.max_new_tokens, out=[])
+                                     remaining=r.max_new_tokens, out=[],
+                                     seq=self._admit_seq)
+            self._admit_seq += 1
 
     def _decode_iteration(self):
+        self._before_decode()      # paged: grow tables, maybe preempt
         toks = np.zeros((self.n_slots,), np.int32)
         pos = np.zeros((self.n_slots,), np.int32)
         for i, s in enumerate(self.slots):
@@ -170,6 +202,7 @@ class SlotEngine:
             self._last_logits[i] = logits[i]
             if s.remaining <= 0 or s.pos >= self.max_len - 1:
                 done.append((s.req, s.out))
+                self._on_slot_free(i)
                 self.slots[i] = _Slot()
         return done
 
@@ -266,3 +299,200 @@ class PipelineBatcher(SlotEngine):
 
     def _decode_all(self, toks, pos):
         return self.pipeline.decode_slots(toks, pos)
+
+
+class PagedPipelineBatcher(SlotEngine):
+    """Slot-based continuous batching over an ``AsymmetricPipeline`` with a
+    PAGED KV cache: each stage owns a block pool sized independently
+    (``stage_blocks``, ∝ its devices' memory — the asymmetric-capacity
+    point), requests hold per-stage BlockTables, admission requires enough
+    free blocks for the prompt plus headroom rather than a worst-case
+    ``max_len`` row, decode grows tables one block at a time, and a dry
+    pool preempts the youngest slot by recompute (blocks freed, request
+    requeued at the front; greedy decode regenerates the same tokens).
+
+    ``max_len`` remains the per-request ceiling (block tables hold
+    max_len / block_size entries); what paging removes is the RESERVATION:
+    a slot only ever occupies the blocks its tokens actually fill, so a
+    pool sized for actual usage serves far more concurrent slots than
+    max_len-row pre-allocation (benchmarks/bench_paged.py).
+    """
+
+    def __init__(self, pipeline, *, n_slots: int = 8, max_len: int = 256,
+                 block_size: int = 16,
+                 stage_blocks: Optional[Sequence[int]] = None,
+                 admit_headroom: Optional[int] = None, pad_id: int = 0,
+                 virtual_step_cost: float = 1.0):
+        from repro.serving.pipeline import slot_mode_supported
+        assert slot_mode_supported(pipeline.cfg), \
+            "slot mode needs uniform text decode; use StaticBatcher"
+        assert max_len % block_size == 0, (max_len, block_size)
+        super().__init__(n_slots=n_slots, max_len=max_len,
+                         vocab_size=pipeline.cfg.vocab_size, pad_id=pad_id,
+                         virtual_step_cost=virtual_step_cost)
+        self.pipeline = pipeline
+        self.block_size = block_size
+        self.max_blocks = max_len // block_size
+        # tokens of decode headroom a request must find free at admission
+        self.admit_headroom = (block_size if admit_headroom is None
+                               else admit_headroom)
+        full = n_slots * self.max_blocks + 1
+        if stage_blocks is None:
+            stage_blocks = [full] * len(pipeline.stages)
+        self.stage_blocks = list(stage_blocks)
+        assert len(self.stage_blocks) == len(pipeline.stages)
+        # host-side bookkeeping exists from construction (capacity() needs
+        # it before any insert); device page arrays allocate lazily
+        self._pools: List[Optional[BlockPool]] = []
+        self._tables: List[Optional[List[BlockTable]]] = []
+        for st, nb in zip(pipeline.stages, self.stage_blocks):
+            if st.has_attn:
+                pool = BlockPool(nb, block_size)
+                self._pools.append(pool)
+                self._tables.append([BlockTable(pool)
+                                     for _ in range(n_slots)])
+            else:
+                self._pools.append(None)
+                self._tables.append(None)
+        # typical next-request footprint for the capacity() port, learned
+        # from admitted traffic (start at one block)
+        self._need_sum = 0
+        self._need_cnt = 0
+        # per-stage stacked block-table arrays for the decode hot path;
+        # rebuilt only when a table mutates (insert / growth / release)
+        self._bt_cache: Optional[List[np.ndarray]] = None
+
+    # ---- block accounting -------------------------------------------------
+    def _min_pool_free(self) -> int:
+        frees = [p.n_free for p in self._pools if p is not None]
+        return min(frees) if frees else 1 << 30
+
+    def _usable_blocks(self) -> int:
+        sizes = [p.n_blocks - 1 for p in self._pools if p is not None]
+        return min(sizes) if sizes else 1 << 30
+
+    def _blocks_needed(self, r: Request) -> int:
+        """Admission footprint: prompt + decode headroom (not worst case)."""
+        toks = len(r.prompt) + min(self.admit_headroom, r.max_new_tokens)
+        return blocks_for_tokens(toks, self.block_size)
+
+    def _typical_blocks(self) -> int:
+        if self._need_cnt == 0:
+            return 1
+        return -(-self._need_sum // self._need_cnt)
+
+    # ---- replica port -----------------------------------------------------
+    def capacity(self, now: float) -> int:
+        """Admission switches from "free slot" to "enough blocks": the loop
+        may only hand us another request if, beyond the queued ones' needs,
+        a typical request's prompt + headroom still fits every stage
+        pool."""
+        slots = len(self.free_slots()) - len(self._queue)
+        if slots <= 0:
+            return 0
+        queued = sum(self._blocks_needed(r) for r in self._queue)
+        if self._min_pool_free() < queued + self._typical_blocks():
+            return 0
+        return slots
+
+    # ---- SlotEngine hooks --------------------------------------------------
+    def _fits(self, r: Request) -> bool:
+        if len(r.prompt) + r.max_new_tokens > self.max_len - 1:
+            return False
+        # a request whose full generation cannot fit the pool even alone
+        # would preempt itself forever; turn it away instead
+        need = blocks_for_tokens(len(r.prompt) + r.max_new_tokens,
+                                 self.block_size)
+        return need <= self._usable_blocks()
+
+    def _can_admit(self, r: Request, batch: Sequence[Request]) -> bool:
+        # prompt + headroom, same footprint capacity() advertises: admitting
+        # on bare prompt blocks would prefill a request only to have its
+        # first growth block evict it again (insert/preempt thrash)
+        pending = sum(self._blocks_needed(q) for q in batch)
+        if self._min_pool_free() < pending + self._blocks_needed(r):
+            return False
+        self._need_sum += self._blocks_needed(r)
+        self._need_cnt += 1
+        return True
+
+    def _prefill_insert(self, toks, lens, slot_ids):
+        if (self.pipeline.paged_caches is None
+                or self.pipeline.n_slots != self.n_slots
+                or self.pipeline.slot_len != self.max_len
+                or self.pipeline.block_size != self.block_size
+                or self.pipeline.stage_blocks != self.stage_blocks):
+            self.pipeline.init_paged_caches(
+                self.n_slots, self.max_len, block_size=self.block_size,
+                stage_blocks=self.stage_blocks)
+        self._bt_cache = None
+        m = len(slot_ids)
+        stage_dest = []
+        for tabs in self._tables:
+            if tabs is None:
+                stage_dest.append(
+                    np.zeros(m * self.max_blocks, np.int32))
+                continue
+            dest = np.zeros((m, self.max_blocks), np.int32)
+            for row, slot in enumerate(slot_ids):
+                t = tabs[slot]
+                assert not t.blocks, "slot freed without releasing blocks"
+                ok = t.allocate_tokens(int(lens[row]))
+                assert ok, "admission admitted more blocks than the pool has"
+                dest[row] = t.as_array(self.max_blocks)
+            stage_dest.append(dest.reshape(-1))
+        return self.pipeline.insert_slots_paged(toks, lens, slot_ids,
+                                                stage_dest)
+
+    def _ensure_blocks(self, i: int) -> bool:
+        pos = self.slots[i].pos
+        for tabs in self._tables:
+            if tabs is None:
+                continue
+            before = tabs[i].n_blocks
+            ok = tabs[i].ensure(pos)
+            if tabs[i].n_blocks != before:
+                self._bt_cache = None
+            if not ok:
+                return False
+        return True
+
+    def _before_decode(self) -> None:
+        """Allocate-on-decode growth; preempt-by-recompute when a pool runs
+        dry. Oldest slots grow first and the YOUNGEST active slot is
+        evicted — possibly the requester itself — so the head of the line
+        always makes progress (no livelock: a request that cannot fit even
+        alone was rejected by _fits)."""
+        order = sorted((i for i, s in enumerate(self.slots) if not s.free),
+                       key=lambda i: self.slots[i].seq)
+        for i in order:
+            while not self.slots[i].free and not self._ensure_blocks(i):
+                active = [j for j in order if not self.slots[j].free]
+                self._preempt(max(active, key=lambda j: self.slots[j].seq))
+
+    def _preempt(self, i: int) -> None:
+        s = self.slots[i]
+        for tabs in self._tables:
+            if tabs is not None:
+                tabs[i].release()
+        self._bt_cache = None
+        # recompute: the request restarts from its prompt (greedy decode
+        # regenerates the same prefix), at the FRONT of the queue
+        self._queue.appendleft(s.req)
+        self.slots[i] = _Slot()
+        self.preemptions += 1
+
+    def _on_slot_free(self, i: int) -> None:
+        for tabs in self._tables:
+            if tabs is not None:
+                tabs[i].release()
+        self._bt_cache = None
+
+    def _decode_all(self, toks, pos):
+        if self._bt_cache is None:
+            self._bt_cache = [
+                np.zeros((self.n_slots, self.max_blocks), np.int32)
+                if tabs is None else
+                np.stack([t.as_array(self.max_blocks) for t in tabs])
+                for tabs in self._tables]
+        return self.pipeline.decode_slots_paged(toks, pos, self._bt_cache)

@@ -27,7 +27,8 @@ class InferenceEngine:
                  params=None, key=None, devices: Optional[Sequence] = None,
                  max_batch: int = 4, quantize: bool = False,
                  policy: str = "continuous", n_slots: int = 8,
-                 max_len: int = 256):
+                 max_len: int = 256, cache_layout: str = "contiguous",
+                 block_size: int = 16, stage_blocks=None):
         self.cfg = cfg
         devices = list(devices if devices is not None else jax.devices())
         if params is None:
@@ -54,7 +55,10 @@ class InferenceEngine:
                 "policy='static'", stacklevel=2)
             policy = "static"
         self.router = Router(self.replicas, max_batch=max_batch,
-                             policy=policy, n_slots=n_slots, max_len=max_len)
+                             policy=policy, n_slots=n_slots, max_len=max_len,
+                             cache_layout=cache_layout,
+                             block_size=block_size,
+                             stage_blocks=stage_blocks)
 
     def generate(self, prompts: Sequence[np.ndarray], *, max_new: int = 16
                  ) -> List[np.ndarray]:

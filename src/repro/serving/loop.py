@@ -96,18 +96,29 @@ class ServeStats:
     throughput: float
     iterations: int = 0            # worker iterations the loop ran
     queue_delays: List[float] = dataclasses.field(default_factory=list)
+    rejected: int = 0              # oversized requests turned away
+    preemptions: int = 0           # paged slots evicted + recomputed
 
     def summary(self) -> str:
         lat = np.asarray(self.latencies)
         return (f"n={len(lat)} p50={np.percentile(lat, 50):.3f}s "
                 f"p99={np.percentile(lat, 99):.3f}s "
-                f"slo={self.attainment * 100:.1f}% thpt={self.throughput:.2f} req/s")
+                f"slo={self.attainment * 100:.1f}% thpt={self.throughput:.2f} req/s "
+                f"rej={self.rejected} preempt={self.preemptions}")
 
     @classmethod
     def from_requests(cls, requests: Sequence, deadline: float,
                       *, iterations: int = 0) -> "ServeStats":
         lats = [r.latency for r in requests]
-        att = float(np.mean([l <= deadline for l in lats])) if lats else 1.0
+        # a rejected request (empty output despite wanting tokens) finished
+        # fast but served nobody — it can never count as SLO-attained
+        def attained(r):
+            if (r.output is not None and len(r.output) == 0
+                    and r.max_new_tokens > 0):
+                return False
+            return r.latency <= deadline
+        att = (float(np.mean([attained(r) for r in requests]))
+               if lats else 1.0)
         dur = max((r.finish_time for r in requests), default=1.0)
         qd = [r.start_time - r.arrival for r in requests]
         return cls(latencies=lats, attainment=att,
@@ -132,6 +143,9 @@ def run_serve_loop(workers: Sequence, requests: Sequence, *, deadline: float,
     pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
     idx = 0
     iterations = 0
+    # workers persist across serve() calls: report this replay's deltas
+    rej0 = sum(getattr(w, "rejected", 0) for w in workers)
+    pre0 = sum(getattr(w, "preemptions", 0) for w in workers)
     while idx < len(pending) or any(w.inflight() for w in workers):
         now = clock.now()
         progressed = False
@@ -173,14 +187,25 @@ def run_serve_loop(workers: Sequence, requests: Sequence, *, deadline: float,
         if progressed:
             continue
 
-        # -- idle: advance the clock to the next event --------------------
-        targets = [pending[idx].arrival] if idx < len(pending) else []
+        # -- idle: advance the clock to the next FUTURE event -------------
+        # (a due-but-unadmittable arrival is not a target: with every
+        # worker at zero capacity it cannot progress, and sleeping to a
+        # past instant would spin the loop forever — it gets admitted
+        # when a worker completion frees capacity)
+        targets = []
+        if idx < len(pending) and pending[idx].arrival > now:
+            targets.append(pending[idx].arrival)
         for w in workers:
             t = w.next_event(now)
-            if t is not None:
+            if t is not None and t > now:
                 targets.append(t)
         if not targets:            # nothing runnable, nothing scheduled
             break
         clock.sleep_until(min(targets))
 
-    return ServeStats.from_requests(pending, deadline, iterations=iterations)
+    stats = ServeStats.from_requests(pending, deadline,
+                                     iterations=iterations)
+    stats.rejected = sum(getattr(w, "rejected", 0) for w in workers) - rej0
+    stats.preemptions = sum(getattr(w, "preemptions", 0)
+                            for w in workers) - pre0
+    return stats

@@ -20,7 +20,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ATTN, ModelConfig
 from repro.models import model as M
 from repro.models import layers, shardings
 
@@ -73,6 +73,12 @@ class StageExecutor:
             partial(self._stage_seq, mode="prefill"),
             static_argnames=())
         self._decode_jit = jax.jit(self._stage_decode, donate_argnums=(1,))
+        self._decode_paged_jit = jax.jit(self._stage_decode_paged,
+                                         donate_argnums=(1,))
+
+    @property
+    def has_attn(self) -> bool:
+        return ATTN in self.kinds
 
     # ---- stage bodies (pure) --------------------------------------------
     def _stage_seq(self, x, caches, positions, kv_start, valid, enc_out,
@@ -94,11 +100,32 @@ class StageExecutor:
             new_caches.append(nc)
         return x, new_caches
 
+    def _stage_decode_paged(self, x, caches, pos, block_tables):
+        new_caches = []
+        for kind, lp, sc in zip(self.kinds, self.layer_params, caches):
+            x, nc = M.apply_sublayer_decode_paged(
+                self.cfg, kind, lp, x, sc, pos=pos,
+                block_tables=block_tables)
+            new_caches.append(nc)
+        return x, new_caches
+
     # ---- cache ------------------------------------------------------------
     def make_caches(self, batch: int, max_len: int):
         out = []
         for i in range(self.lo, self.hi):
             c = M.init_layer_cache(self.cfg, i, batch, max_len)
+            out.append(jax.device_put(c, _rep(self.mesh)))
+        return out
+
+    def make_paged_caches(self, n_blocks: int, block_size: int,
+                          n_slots: int):
+        """Per-layer paged caches; this stage's attention layers all share
+        ONE physical pool id-space of `n_blocks` blocks (each layer holds
+        its own page arrays, addressed by the same block table)."""
+        out = []
+        for i in range(self.lo, self.hi):
+            c = M.init_layer_paged_cache(self.cfg, i, n_blocks, block_size,
+                                         n_slots)
             out.append(jax.device_put(c, _rep(self.mesh)))
         return out
 
@@ -132,6 +159,10 @@ class AsymmetricPipeline:
         self.slot_caches = None
         self.n_slots = 0
         self.slot_len = 0
+        # paged slot-mode state (init_paged_caches): per-stage page pools
+        self.paged_caches = None
+        self.block_size = 0
+        self.stage_blocks: List[int] = []
 
     # ---- embedding / head on first / last stage ---------------------------
     def _embed(self, tokens, batch_extras):
@@ -291,4 +322,83 @@ class AsymmetricPipeline:
                 x = jax.device_put(x, _rep(st.mesh))
                 x, self.slot_caches[si] = st._decode_jit(
                     x, self.slot_caches[si], pos, None, None)
+        return np.asarray(self._head(x)[:, 0])
+
+    # ---- paged slot mode ---------------------------------------------------
+    # Same joint-iteration contract as slot mode, but each stage owns a
+    # BLOCK pool sized independently (∝ its devices' memory — the
+    # asymmetric-capacity point) instead of n_slots pre-cut max_len rows.
+    # Block allocation/preemption policy lives in the engine
+    # (serving.continuous.PagedPipelineBatcher + serving.block_manager);
+    # the pipeline only moves tensors.
+
+    def init_paged_caches(self, n_slots: int, max_len: int, *,
+                          block_size: int = 16,
+                          stage_blocks: Optional[Sequence[int]] = None
+                          ) -> None:
+        """Per-stage page pools. `stage_blocks[si]` is stage si's pool size
+        in blocks (including the reserved null block); None sizes every
+        stage for full occupancy (n_slots * max_len tokens), which makes
+        paged serving a drop-in replacement with zero preemptions."""
+        assert slot_mode_supported(self.cfg), \
+            "paged slot mode needs uniform text decode (SWA ring cache / " \
+            "encoder-decoder / VLM); use static batching"
+        assert max_len % block_size == 0, (max_len, block_size)
+        self.n_slots = n_slots
+        self.slot_len = max_len
+        self.block_size = block_size
+        full = n_slots * (max_len // block_size) + 1
+        if stage_blocks is None:
+            stage_blocks = [full] * len(self.stages)
+        self.stage_blocks = list(stage_blocks)
+        assert len(self.stage_blocks) == len(self.stages)
+        self.paged_caches = [
+            st.make_paged_caches(nb, block_size, n_slots)
+            for st, nb in zip(self.stages, self.stage_blocks)]
+
+    def insert_slots_paged(self, tokens: np.ndarray, lens: np.ndarray,
+                           slot_ids: Sequence[int],
+                           stage_dest: Sequence[np.ndarray]) -> np.ndarray:
+        """Joint right-padded prefill (same compile shapes and math as
+        ``insert_slots``) whose attention rows scatter into stage si's pages
+        at ``stage_dest[si]`` ((m * max_blocks,) physical page per logical
+        block, row-major; null-page entries absorb the padding) and whose
+        recurrent rows scatter by slot id. Returns last-real-token logits
+        (m, V)."""
+        assert self.paged_caches is not None, "call init_paged_caches first"
+        m = len(slot_ids)          # rows beyond m are compile-shape padding
+        b, P = tokens.shape
+        lens = jnp.asarray(lens, jnp.int32)
+        x = self._embed(jnp.asarray(tokens), {})
+        positions = jnp.arange(P)[None].repeat(b, 0)
+        valid = (jnp.arange(P)[None, :] < lens[:, None]).astype(jnp.int32)
+        for si, st in enumerate(self.stages):
+            with st.mesh:
+                x = jax.device_put(x, _rep(st.mesh))
+                scratch = st.make_caches(b, self.slot_len)
+                x, rows = st._prefill_jit(x, scratch, positions, None,
+                                          valid, None, lens)
+                dest = jnp.asarray(stage_dest[si], jnp.int32)
+                self.paged_caches[si] = [
+                    M.scatter_cache_rows_paged(
+                        pool, jax.tree.map(lambda r: r[:m], row),
+                        slot_ids, dest)
+                    for pool, row in zip(self.paged_caches[si], rows)]
+        x_last = x[jnp.arange(m), lens[:m] - 1][:, None]
+        return np.asarray(self._head(x_last)[:, 0])
+
+    def decode_slots_paged(self, tokens: np.ndarray, positions: np.ndarray,
+                           stage_tables: Sequence[np.ndarray]) -> np.ndarray:
+        """One decode iteration over ALL slots through the paged caches.
+        stage_tables[si]: (n_slots, max_blocks) int32 block table for stage
+        si (rows of free slots are all-null and decode into the trash
+        page). Returns (n_slots, V)."""
+        pos = jnp.asarray(positions, jnp.int32)
+        x = self._embed_decode_tokens(jnp.asarray(tokens), pos)
+        for si, st in enumerate(self.stages):
+            with st.mesh:
+                x = jax.device_put(x, _rep(st.mesh))
+                bt = jnp.asarray(stage_tables[si], jnp.int32)
+                x, self.paged_caches[si] = st._decode_paged_jit(
+                    x, self.paged_caches[si], pos, bt)
         return np.asarray(self._head(x)[:, 0])

@@ -10,11 +10,12 @@ measurement — there is exactly one serve-loop implementation either way.
 """
 from __future__ import annotations
 
+import warnings
 from typing import List, Optional, Sequence
 
 import numpy as np
 
-from repro.serving.continuous import PipelineBatcher
+from repro.serving.continuous import PagedPipelineBatcher, PipelineBatcher
 from repro.serving.loop import ServeStats, WallClock, run_serve_loop
 from repro.serving.request import Request
 
@@ -74,15 +75,29 @@ class Router:
 
     def __init__(self, replicas, *, max_batch: int = 4, pad_id: int = 0,
                  policy: str = "continuous", n_slots: int = 8,
-                 max_len: int = 256):
+                 max_len: int = 256, cache_layout: str = "contiguous",
+                 block_size: int = 16, stage_blocks=None):
         assert policy in ("continuous", "static"), policy
+        assert cache_layout in ("contiguous", "paged"), cache_layout
         self.replicas = list(replicas)
         self.policy = policy
-        if policy == "continuous":
+        self.cache_layout = cache_layout
+        if policy == "continuous" and cache_layout == "paged":
+            self.workers = [PagedPipelineBatcher(
+                r, n_slots=n_slots, max_len=max_len, pad_id=pad_id,
+                block_size=block_size, stage_blocks=stage_blocks)
+                for r in self.replicas]
+        elif policy == "continuous":
             self.workers = [PipelineBatcher(r, n_slots=n_slots,
                                             max_len=max_len, pad_id=pad_id)
                             for r in self.replicas]
         else:
+            if cache_layout == "paged":
+                warnings.warn(
+                    "cache_layout='paged' has no effect with "
+                    "policy='static' (the whole-batch engine allocates "
+                    "per-generate caches); serving contiguous",
+                    stacklevel=2)
             self.workers = [StaticBatcher(r, max_batch=max_batch,
                                           pad_id=pad_id)
                             for r in self.replicas]

@@ -119,7 +119,7 @@ def test_oversized_request_rejected_not_fatal():
                                               ).astype(np.int32),
                     max_new_tokens=3, arrival=0.0)
             for i, n in enumerate(lens)]
-    with pytest.warns(UserWarning, match="exceeds slot length"):
+    with pytest.warns(UserWarning, match="rejected with empty output"):
         stats = run_serve_loop([worker], reqs, deadline=1e9,
                                clock=VirtualClock())
     assert len(stats.latencies) == 3
