@@ -13,10 +13,10 @@ echo "=== tier-1 pytest ==="
 # (includes @slow; deselect locally with -m "not slow" for a fast loop)
 python -m pytest -x -q
 
-echo "=== paged-attention kernel (Pallas interpret mode) ==="
-# the paged decode kernel + the full-stack paged decode path with the
-# Pallas backend engaged in interpret mode (GPU-less CI's only route
-# through the block-table index maps)
+echo "=== paged-attention kernels (Pallas interpret mode) ==="
+# the paged decode + context-prefill kernels with the Pallas backend
+# engaged in interpret mode (GPU-less CI's only route through the
+# block-table index maps)
 python - <<'PY'
 import jax
 import jax.numpy as jnp
@@ -32,14 +32,22 @@ rn = lambda i, *s: jax.random.normal(jax.random.fold_in(key, i), s)
 q, kp, vp = rn(1, b, 1, hq, d), rn(2, nblk, bs, hkv, d), rn(3, nblk, bs, hkv, d)
 bt = jnp.asarray(np.array([[3, 1, 4, 0], [5, 9, 2, 6]], np.int32))
 kv_len = jnp.array([41, 64])
+qc = rn(4, b, 8, hq, d)                      # 8-token context chunk
+q_start = jnp.array([17, 40])
+ctx_len = jnp.array([17 + 8, 40 + 5])
 ops.set_backend("pallas_interpret")
 try:
     out = ops.paged_decode_attention(q, kp, vp, bt, kv_len=kv_len)
+    out_c = ops.paged_context_attention(qc, kp, vp, bt, q_start=q_start,
+                                        kv_len=ctx_len)
 finally:
     ops.set_backend("xla")
 want = ref.paged_decode_attention_ref(q, kp, vp, bt, kv_len=kv_len)
 np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
-print("paged kernel interpret-mode OK")
+want_c = ref.paged_context_attention_ref(qc, kp, vp, bt, q_start=q_start,
+                                         kv_len=ctx_len)
+np.testing.assert_allclose(np.asarray(out_c), np.asarray(want_c), atol=2e-5)
+print("paged decode + context kernels interpret-mode OK")
 PY
 
 echo "=== serving smoke (4 virtual devices, ~30s) ==="
@@ -89,5 +97,32 @@ assert stats_p.attainment == 1.0, stats_p.summary()
 for r, rp in zip(reqs, reqs_p):
     assert list(r.output) == list(rp.output), (r.rid, r.output, rp.output)
 print(f"paged smoke OK: {stats_p.summary()} ({time.monotonic()-t0:.1f}s)")
+
+# prefix-cache smoke: a shared-system-prompt workload served twice on the
+# paged engine — cold, then with copy-on-write prefix caching + chunked
+# prefill; tokens must match and the cache must actually hit
+from repro.serving.request import shared_prefix_workload
+
+def wl():
+    return shared_prefix_workload(rate=4.0, duration=2.0,
+                                  vocab=cfg.vocab_size, shared_len=24,
+                                  unique_len=6, out_len=4, seed=3)
+
+eng_c = InferenceEngine(cfg, asg, key=jax.random.PRNGKey(0),
+                        policy="continuous", n_slots=4, max_len=48,
+                        cache_layout="paged", block_size=8)
+reqs_cold = wl()
+eng_c.serve(reqs_cold, deadline=120.0)
+eng_w = InferenceEngine(cfg, asg, key=jax.random.PRNGKey(0),
+                        policy="continuous", n_slots=4, max_len=48,
+                        cache_layout="paged", block_size=8,
+                        prefix_caching=True, prefill_chunk=16)
+reqs_warm = wl()
+stats_w = eng_w.serve(reqs_warm, deadline=120.0)
+assert stats_w.prefix_hits > 0, stats_w.summary()
+assert stats_w.prefill_tokens < sum(len(r.prompt) for r in reqs_warm)
+for rc, rw in zip(reqs_cold, reqs_warm):
+    assert list(rc.output) == list(rw.output), (rc.rid,)
+print(f"prefix smoke OK: {stats_w.summary()} ({time.monotonic()-t0:.1f}s)")
 PY
 echo "=== ci.sh OK ==="

@@ -123,12 +123,23 @@ def comm_pp_cost(cluster: Cluster, stage: Sequence[int],
         + best(task.batch * H * B) * task.s_out
 
 
-def _kv_tokens_per_seq(task: Task, block_size: int = 0) -> int:
+def _kv_tokens_per_seq(task: Task, block_size: int = 0,
+                       prefix_hit_rate: float = 0.0) -> int:
     """Cache tokens one sequence occupies. block_size == 0 is the contiguous
     layout (a full s_in + s_out row is reserved up front); block_size > 0 is
     the paged layout, which rounds ACTUAL usage up to whole blocks — the
-    only over-reservation left is the partial tail block."""
-    s_total = task.s_in + task.s_out
+    only over-reservation left is the partial tail block.
+
+    prefix_hit_rate (paged only) is the expected fraction of prompt tokens
+    served from the prefix cache: shared blocks are resident ONCE however
+    many sequences alias them, so each additional sequence demands only its
+    cold suffix + outputs. Sharing is block-granular, so the deduplicated
+    span rounds DOWN to whole blocks (a partial chunk is never aliased)."""
+    s_in = task.s_in
+    if block_size and prefix_hit_rate > 0.0:
+        shared = int(s_in * min(prefix_hit_rate, 1.0))
+        s_in -= (shared // block_size) * block_size
+    s_total = s_in + task.s_out
     if block_size:
         return -(-s_total // block_size) * block_size
     return s_total
@@ -165,7 +176,8 @@ def mem_ok(cluster: Cluster, devices: Sequence[int], layers: int,
 
 def concurrent_capacity(cluster: Cluster, devices: Sequence[int],
                         layers: int, model: ModelProfile, task: Task, *,
-                        max_len: int = 0, block_size: int = 0) -> int:
+                        max_len: int = 0, block_size: int = 0,
+                        prefix_hit_rate: float = 0.0) -> int:
     """How many sequences of `task`'s shape fit in the memory left after
     parameters and activation buffers on this stage's TP group — the
     scheduler-facing capacity number behind the paged refactor.
@@ -174,6 +186,13 @@ def concurrent_capacity(cluster: Cluster, devices: Sequence[int],
     (worst case, defaulting to s_in + s_out); paged reserves only the
     blocks the sequence actually fills. The gap between the two IS the
     slots-vs-reservation win measured by benchmarks/bench_paged.py.
+
+    prefix_hit_rate > 0 (paged + prefix caching) plans against the
+    EFFECTIVE (deduplicated) per-sequence KV demand: shared prompt blocks
+    are resident once regardless of how many in-flight sequences alias
+    them, so a shared-system-prompt workload fits proportionally more
+    concurrent sequences (benchmarks/bench_prefix.py measures the realized
+    gap).
     """
     n = len(devices)
     B = task.bytes_per_el
@@ -185,7 +204,7 @@ def concurrent_capacity(cluster: Cluster, devices: Sequence[int],
     if free <= 0:
         return 0
     if block_size:
-        toks = _kv_tokens_per_seq(task, block_size)
+        toks = _kv_tokens_per_seq(task, block_size, prefix_hit_rate)
     else:
         toks = max(max_len, s_total)
     per_seq = model.kv_bytes_per_token_per_layer * toks * layers / n

@@ -152,7 +152,8 @@ class Evaluator:
     def __init__(self, cluster: Cluster, model: cm.ModelProfile,
                  task: cm.Task, *, deadline: float, rate: float,
                  sim_duration: float = 60.0, seed: int = 0,
-                 max_stages: int = 8, kv_block_size: Optional[int] = None):
+                 max_stages: int = 8, kv_block_size: Optional[int] = None,
+                 prefix_hit_rate: float = 0.0):
         self.cluster = cluster
         self.model = model
         self.task = task
@@ -164,8 +165,11 @@ class Evaluator:
         # None -> idealized unbounded replicas (the paper's sim); an int
         # bounds each replica's in-flight requests by its KV capacity at
         # that block granularity (0 = contiguous rows), so paged capacity
-        # shows up in simulated attainment
+        # shows up in simulated attainment. prefix_hit_rate further
+        # deduplicates the planned per-sequence KV demand (shared prompt
+        # blocks are resident once, serving.block_manager.PrefixIndex).
         self.kv_block_size = kv_block_size
+        self.prefix_hit_rate = prefix_hit_rate
         self._plan_cache: Dict[FrozenSet[int], Optional[PipelinePlan]] = {}
         self._fit_cache: Dict[Individual, Tuple[float, float]] = {}
         self.evaluations = 0
@@ -199,7 +203,8 @@ class Evaluator:
             return 0
         return min(cm.concurrent_capacity(
             self.cluster, st.device_ids, st.num_layers, self.model,
-            self.task, block_size=self.kv_block_size)
+            self.task, block_size=self.kv_block_size,
+            prefix_hit_rate=self.prefix_hit_rate)
             for st in plan.stages)
 
     def fitness(self, ind: Individual) -> Tuple[float, float]:
@@ -225,12 +230,14 @@ def search(cluster: Cluster, model: cm.ModelProfile, task: cm.Task, *,
            pop_size: int = 10, seed: int = 0, mutation: str = "hexgen",
            sim_duration: float = 60.0, max_stages: int = 8,
            kv_block_size: Optional[int] = None,
+           prefix_hit_rate: float = 0.0,
            init: Optional[List[Individual]] = None) -> SearchResult:
     """The full two-phase search: genetic over partitions, DP inside."""
     rng = np.random.default_rng(seed)
     ev = Evaluator(cluster, model, task, deadline=deadline, rate=rate,
                    sim_duration=sim_duration, seed=seed,
-                   max_stages=max_stages, kv_block_size=kv_block_size)
+                   max_stages=max_stages, kv_block_size=kv_block_size,
+                   prefix_hit_rate=prefix_hit_rate)
     if init is None:
         if mutation == "hexgen":
             pop = kmeans_init(cluster, rng)

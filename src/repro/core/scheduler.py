@@ -14,14 +14,18 @@ def schedule(cluster: Cluster, arch: str, task: cm.Task, *,
              deadline: float, rate: float, iters: int = 60,
              seed: int = 0, mutation: str = "hexgen",
              paper_exact: bool = False,
-             max_stages: int = 8, kv_block_size=None) -> SearchResult:
+             max_stages: int = 8, kv_block_size=None,
+             prefix_hit_rate: float = 0.0) -> SearchResult:
     """Find an assignment of `cluster` serving `arch` replicas.
 
     deadline: SLO latency bound (s); rate: request rate (req/s).
     mutation="random" reproduces the paper's strawman baseline.
     kv_block_size (None = idealized unbounded replicas) bounds each
     simulated replica's in-flight requests by its KV capacity at that
-    paged-block granularity (0 = contiguous rows).
+    paged-block granularity (0 = contiguous rows). prefix_hit_rate is the
+    expected fraction of prompt tokens served from the prefix cache
+    (serving prefix_caching=True): the capacity bound then plans against
+    the effective, DEDUPLICATED per-sequence KV demand.
     """
     cfg = get_config(arch)
     profile = cm.ModelProfile.from_config(cfg, paper_exact=paper_exact,
@@ -29,6 +33,7 @@ def schedule(cluster: Cluster, arch: str, task: cm.Task, *,
     res = genetic.search(cluster, profile, task, deadline=deadline,
                          rate=rate, iters=iters, seed=seed,
                          mutation=mutation, max_stages=max_stages,
-                         kv_block_size=kv_block_size)
+                         kv_block_size=kv_block_size,
+                         prefix_hit_rate=prefix_hit_rate)
     res.assignment.validate(cfg.num_layers)
     return res

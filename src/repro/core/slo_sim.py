@@ -31,8 +31,9 @@ class ReplicaModel:
     bottleneck: float     # min inter-admission gap (max stage time)
     # in-flight request bound from KV-cache capacity (0 = unbounded, the
     # paper's idealized queue). cost_model.concurrent_capacity derives it
-    # for either layout; the paged layout's larger bound shows up directly
-    # as simulated attainment.
+    # for either layout; the paged layout's larger bound — and the further
+    # deduplication from prefix caching (prefix_hit_rate) — shows up
+    # directly as simulated attainment.
     max_concurrent: int = 0
 
 

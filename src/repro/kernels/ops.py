@@ -398,6 +398,35 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, *, kv_len=None,
                                  scale=scale)
 
 
+def paged_context_attention(q, k_pages, v_pages, block_tables, *, q_start,
+                            kv_len, scale=None):
+    """CONTEXT PREFILL against a block-paged cache: q (b,C,hq,d) is a chunk
+    of new tokens (row i's token j at absolute position q_start[i] + j)
+    attending causally to the prior pages AND itself — the chunk's K/V must
+    already be scattered into the pages at [q_start, kv_len) through the
+    same block tables (layers.attn_context_paged does the write).
+
+    This is the kernel behind warm-prefix serving (only the cold suffix of
+    a prompt runs as the chunk, the shared prefix is reused from resident
+    pages) and chunked prefill (a long prompt runs as several chunks
+    interleaved with decode iterations). The XLA path gathers each row's
+    pages into a contiguous view and materializes the (C, S) score tile —
+    C is a bounded chunk width, so this stays small; the Pallas path
+    streams pages through the block table with online softmax
+    (kernels.paged_attention.paged_context_attention_pallas).
+    """
+    if _BACKEND in ("pallas", "pallas_interpret"):
+        from repro.kernels import paged_attention as pa
+        return pa.paged_context_attention_pallas(
+            q, k_pages, v_pages, block_tables, q_start=q_start,
+            kv_len=kv_len, scale=scale,
+            interpret=(_BACKEND == "pallas_interpret"))
+    k = ref.gather_pages(k_pages, block_tables)
+    v = ref.gather_pages(v_pages, block_tables)
+    return ref.context_attention_ref(q, k, v, q_start=q_start,
+                                     kv_len=kv_len, scale=scale)
+
+
 # ---------------------------------------------------------------------------
 # Selective scan (Mamba S6)
 # ---------------------------------------------------------------------------

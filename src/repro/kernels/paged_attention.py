@@ -111,3 +111,100 @@ def paged_decode_attention_pallas(q, k_pages, v_pages, block_tables, *,
         out_shape=jax.ShapeDtypeStruct((b, 1, hq, d), q.dtype),
         interpret=interpret,
     )(tbl, lens, q, k_pages, v_pages)
+
+
+# ---------------------------------------------------------------------------
+# Paged CONTEXT prefill: a chunk of C new tokens against the paged cache
+# (prior pages + the chunk's own K/V, already scattered in) — the warm-prefix
+# and chunked-prefill kernel. Identical grid/DMA structure to the decode
+# kernel above; the q axis just widens from 1 to C and the mask gains the
+# causal triangle (kpos <= q_start + row).
+# ---------------------------------------------------------------------------
+
+def _ctx_kernel(tbl_ref, start_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                acc_ref, m_ref, l_ref, *, scale, nb, block_size, C):
+    ib = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kpos = ik * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, (C, block_size), 1)
+    qpos = start_ref[ib] + jax.lax.broadcasted_iota(
+        jnp.int32, (C, block_size), 0)
+    mask = (kpos <= qpos) & (kpos < len_ref[ib])
+
+    q = q_ref[0, :, 0].astype(jnp.float32)              # (C, d)
+    k = k_ref[0, :, 0].astype(jnp.float32)              # (block_size, d)
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m_new[:, None]))
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == nb - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o = acc_ref[...] / l[:, None]
+        o = jnp.where(m_ref[...][:, None] <= NEG_INF / 2, 0.0, o)
+        o_ref[0, :, 0] = o.astype(o_ref.dtype)
+
+
+def paged_context_attention_pallas(q, k_pages, v_pages, block_tables, *,
+                                   q_start, kv_len, scale=None,
+                                   interpret=False):
+    """q (b,C,hq,d) — chunk of new tokens, row i's token j at absolute
+    position q_start[i] + j; k_pages/v_pages (n_blocks,block_size,hkv,d)
+    already hold the chunk's K/V at [q_start, kv_len); block_tables
+    (b,max_blocks) int32; q_start,kv_len (b,). Returns (b,C,hq,d)."""
+    b, C, hq, d = q.shape
+    n_blocks, block_size, hkv, _ = k_pages.shape
+    g = hq // hkv
+    nb = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    tbl = jnp.asarray(block_tables, jnp.int32)
+    starts = jnp.asarray(q_start, jnp.int32)
+    lens = jnp.asarray(kv_len, jnp.int32)
+
+    kern = functools.partial(_ctx_kernel, scale=scale, nb=nb,
+                             block_size=block_size, C=C)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, hq, nb),
+        in_specs=[
+            pl.BlockSpec((1, C, 1, d),
+                         lambda ib, ih, ik, tbl, st, ln: (ib, 0, ih, 0)),
+            pl.BlockSpec((1, block_size, 1, d),
+                         lambda ib, ih, ik, tbl, st, ln:
+                         (tbl[ib, ik], 0, ih // g, 0)),
+            pl.BlockSpec((1, block_size, 1, d),
+                         lambda ib, ih, ik, tbl, st, ln:
+                         (tbl[ib, ik], 0, ih // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, C, 1, d),
+                               lambda ib, ih, ik, tbl, st, ln:
+                               (ib, 0, ih, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((C, d), jnp.float32),
+            pltpu.VMEM((C,), jnp.float32),
+            pltpu.VMEM((C,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, C, hq, d), q.dtype),
+        interpret=interpret,
+    )(tbl, starts, lens, q, k_pages, v_pages)

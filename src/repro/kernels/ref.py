@@ -107,6 +107,60 @@ def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, *,
     return decode_attention_ref(q, k, v, kv_len=kv_len, scale=scale)
 
 
+def context_attention_ref(q, k, v, *, q_start, kv_len, scale=None):
+    """CONTEXT-PREFILL oracle: a chunk of new tokens attending to the prior
+    cache plus itself, causally — the warm-prefix / chunked-prefill primitive.
+
+    q:       (b, C, hq, d) — query chunk; row i's token j sits at absolute
+             position q_start[i] + j.
+    k, v:    (b, S, hkv, d) — the FULL cache view (prior tokens at
+             [0, q_start) plus the chunk's own K/V already written at
+             [q_start, kv_len)).
+    q_start: (b,) first absolute position of the chunk per row.
+    kv_len:  (b,) valid cache length per row (= q_start + real chunk len;
+             positions >= kv_len are masked).
+
+    Query j of row i sees keys kpos <= q_start[i] + j and kpos < kv_len[i].
+    Padding queries (j beyond the real chunk) produce garbage rows the
+    caller discards; they still see a non-empty key set, so no NaNs.
+    """
+    orig_dtype = q.dtype
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    b, C, hq, d = q.shape
+    skv = k.shape[1]
+    scale = scale if scale is not None \
+        else 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    s = _gqa_scores(qf, kf) * scale                    # (b,hkv,g,C,skv)
+
+    qpos = jnp.asarray(q_start, jnp.int32)[:, None] + jnp.arange(C)[None]
+    kpos = jnp.arange(skv)
+    mask = kpos[None, None, :] <= qpos[:, :, None]     # (b,C,skv) causal
+    mask &= (kpos[None, :] < jnp.asarray(kv_len, jnp.int32)[:, None]
+             )[:, None, :]
+    s = jnp.where(mask[:, None, None], s, NEG_INF)
+
+    m = s.max(-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(-1, keepdims=True)
+    o = jnp.einsum("bhgst,bthd->bshgd", p / jnp.maximum(l, 1e-30), vf)
+    dead = (m <= NEG_INF / 2)
+    o = jnp.where(jnp.moveaxis(dead, 3, 1), 0.0, o)
+    return o.reshape(b, C, hq, d).astype(orig_dtype)
+
+
+def paged_context_attention_ref(q, k_pages, v_pages, block_tables, *,
+                                q_start, kv_len, scale=None):
+    """Paged context-prefill oracle: gather each row's pages (which already
+    hold the chunk's K/V at [q_start, kv_len)) into a contiguous view, then
+    run the context oracle."""
+    k = gather_pages(k_pages, block_tables)
+    v = gather_pages(v_pages, block_tables)
+    return context_attention_ref(q, k, v, q_start=q_start, kv_len=kv_len,
+                                 scale=scale)
+
+
 def ssm_scan_ref(x, dt, A, B, C, D, *, h0=None):
     """Sequential selective-scan oracle (Mamba S6).
 

@@ -22,7 +22,7 @@ from repro.core import cost_model as cm
 from repro.core.plan import Assignment, PipelinePlan, StagePlan
 from repro.core.scheduler import schedule
 from repro.serving.engine import InferenceEngine
-from repro.serving.request import synth_workload
+from repro.serving.request import shared_prefix_workload, synth_workload
 
 CLUSTERS = {
     "case_study": cl.case_study_cluster,
@@ -81,32 +81,69 @@ def main() -> None:
                     help="per-slot max_len cache rows vs block-paged KV "
                          "with per-stage pools (docs/memory.md)")
     ap.add_argument("--block-size", type=int, default=16)
+    ap.add_argument("--prefix-caching", action="store_true",
+                    help="alias block-aligned shared prompt prefixes "
+                         "copy-on-write and prefill only cold suffixes "
+                         "(paged layout only)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="split prefills longer than this many tokens into "
+                         "chunks interleaved with decode iterations "
+                         "(0 = one-shot; paged layout only)")
+    ap.add_argument("--prefix-hit-rate", type=float, default=0.0,
+                    help="expected fraction of prompt tokens served from "
+                         "the prefix cache; the scheduler plans KV "
+                         "capacity against the deduplicated demand")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="generate prompts with this many shared system-"
+                         "prompt tokens (exercises the prefix cache)")
     args = ap.parse_args()
 
+    if args.prefix_hit_rate and args.cache_layout != "paged":
+        import warnings
+        warnings.warn(
+            "--prefix-hit-rate only affects capacity planning with "
+            "--cache-layout paged (contiguous replicas are simulated "
+            "unbounded); ignoring it", stacklevel=1)
+        args.prefix_hit_rate = 0.0
     pool = CLUSTERS[args.cluster]()
     cfg_full = get_config(args.arch)
-    task = cm.Task(batch=1, s_in=args.prompt_len, s_out=args.out_len)
+    # the scheduler must plan for the prompts the engine will actually
+    # serve: --shared-prefix prepends that many system-prompt tokens
+    task = cm.Task(batch=1, s_in=args.prompt_len + args.shared_prefix,
+                   s_out=args.out_len)
     print(f"scheduling {args.arch} on {args.cluster} "
           f"({len(pool)} GPUs, ${pool.price_per_hour:.2f}/h)...")
     res = schedule(pool, args.arch, task, deadline=args.deadline,
-                   rate=args.rate, iters=args.search_iters, seed=args.seed)
+                   rate=args.rate, iters=args.search_iters, seed=args.seed,
+                   kv_block_size=(args.block_size
+                                  if args.cache_layout == "paged" else None),
+                   prefix_hit_rate=args.prefix_hit_rate)
     print(f"  assignment: {res.assignment.describe()}")
     print(f"  estimated SLO attainment: {res.attainment*100:.1f}%")
 
     cfg = cfg_full.reduced() if args.reduced else cfg_full
     asg = scale_assignment(res.assignment, cfg_full.num_layers,
                            cfg.num_layers) if args.reduced else res.assignment
-    max_len = args.prompt_len + 8 + args.out_len
+    max_len = args.prompt_len + args.shared_prefix + 8 + args.out_len
     if args.cache_layout == "paged":
         max_len += (-max_len) % args.block_size    # whole blocks
     engine = InferenceEngine(cfg, asg, key=jax.random.PRNGKey(args.seed),
                              policy=args.policy, max_len=max_len,
                              cache_layout=args.cache_layout,
-                             block_size=args.block_size)
-    reqs = synth_workload(rate=args.rate, duration=args.duration,
-                          vocab=cfg.vocab_size, prompt_len=args.prompt_len,
-                          prompt_jitter=4, out_len=args.out_len,
-                          seed=args.seed)
+                             block_size=args.block_size,
+                             prefix_caching=args.prefix_caching,
+                             prefill_chunk=args.prefill_chunk)
+    if args.shared_prefix:
+        reqs = shared_prefix_workload(
+            rate=args.rate, duration=args.duration, vocab=cfg.vocab_size,
+            shared_len=args.shared_prefix, unique_len=args.prompt_len,
+            unique_jitter=4, out_len=args.out_len, seed=args.seed)
+    else:
+        reqs = synth_workload(rate=args.rate, duration=args.duration,
+                              vocab=cfg.vocab_size,
+                              prompt_len=args.prompt_len,
+                              prompt_jitter=4, out_len=args.out_len,
+                              seed=args.seed)
     print(f"serving {len(reqs)} requests...")
     stats = engine.serve(reqs, deadline=args.deadline)
     print("  " + stats.summary())

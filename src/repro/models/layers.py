@@ -192,6 +192,44 @@ def attn_decode_paged(p, x, cfg, *, pos, block_tables, cache):
     return out, {"k": nk, "v": nv}
 
 
+def attn_context_paged(p, x, cfg, *, positions, q_len, block_tables, cache):
+    """CONTEXT PREFILL against a BLOCK-PAGED cache: x (b,C,d) is a chunk of
+    new tokens whose row-i token j sits at absolute position
+    positions[i, j] = positions[i, 0] + j; the chunk attends causally to
+    the pages holding positions [0, positions[:, 0]) AND to itself. The
+    chunk's K/V are scattered into the pages first (same write the decode
+    path does, C tokens at once), then attention reads back through the
+    table (ops.paged_context_attention) — warm-prefix serving prefills
+    only a prompt's cold suffix this way, chunked prefill feeds a long
+    prompt through in several such calls.
+
+    q_len (b,): real chunk length per row; padding tokens (j >= q_len)
+    scatter into the reserved null page and their outputs are garbage the
+    caller discards.
+    """
+    q, k, v = _qkv(p, x, cfg)
+    b, C = x.shape[:2]
+    positions = jnp.asarray(positions, jnp.int32)       # (b, C) absolute
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    bs = cache["k"].shape[1]
+    tbl = jnp.asarray(block_tables, jnp.int32)
+    max_pos = tbl.shape[1] * bs - 1
+    valid = jnp.arange(C)[None, :] < jnp.asarray(q_len, jnp.int32)[:, None]
+    posc = jnp.minimum(positions, max_pos)              # pad rows stay legal
+    blk = jnp.take_along_axis(tbl, posc // bs, axis=1)  # (b, C)
+    blk = jnp.where(valid, blk, 0)                      # pads -> null page
+    off = posc % bs
+    nk = cache["k"].at[blk, off].set(k.astype(cache["k"].dtype))
+    nv = cache["v"].at[blk, off].set(v.astype(cache["v"].dtype))
+    q_start = positions[:, 0]
+    kv_len = q_start + jnp.asarray(q_len, jnp.int32)
+    o = ops.paged_context_attention(q, nk, nv, tbl, q_start=q_start,
+                                    kv_len=kv_len)
+    out = mm(o.reshape(b, C, -1), p["wo"])
+    return out, {"k": nk, "v": nv}
+
+
 def cross_attn(p, x, cfg, *, enc_kv=None, enc_out=None):
     """Whisper cross-attention. enc_kv: precomputed {"k","v"} over encoder
     frames (cached at prefill); or compute from enc_out."""

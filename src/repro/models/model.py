@@ -410,6 +410,43 @@ def apply_sublayer_decode_paged(cfg, kind, sp, x, sc, *, pos,
     return x, nc
 
 
+def apply_sublayer_context_paged(cfg, kind, sp, x, sc, *, positions, q_len,
+                                 block_tables):
+    """One block over a CHUNK of new tokens against a PAGED cache: the
+    chunk's K/V scatter into pages and attention reads the prior context
+    back through `block_tables` (layers.attn_context_paged) — the
+    warm-prefix / chunked-prefill path. Attention-only by construction:
+    a recurrent sublayer's state is a running summary with no per-block
+    identity to share or resume, so hybrid stacks keep the one-shot
+    prefill (serving.pipeline.context_mode_supported gates this).
+    Returns (x, new_cache)."""
+    assert kind == ATTN, \
+        "paged context prefill covers attention-only stacks " \
+        "(recurrent state cannot be resumed per block)"
+    h = _norm(cfg, sp["ln1"], x)
+    o, nc = layers.attn_context_paged(sp["mixer"], h, cfg,
+                                      positions=positions, q_len=q_len,
+                                      block_tables=block_tables,
+                                      cache={"k": sc["k"], "v": sc["v"]})
+    x = x + o
+    if "mlp" in sp:
+        x = x + layers.mlp(sp["mlp"], _norm(cfg, sp["ln2"], x), cfg)
+    elif "moe" in sp:
+        x = x + moe.moe_mlp(sp["moe"], _norm(cfg, sp["ln2"], x), cfg)
+    return x, nc
+
+
+def _apply_period_context_paged(cfg, pp, x, cache_p, *, positions, q_len,
+                                block_tables):
+    new_cache = {}
+    for j, (kind, _) in enumerate(sub_kinds(cfg)):
+        x, nc = apply_sublayer_context_paged(
+            cfg, kind, pp[f"sub{j}"], x, cache_p[f"sub{j}"],
+            positions=positions, q_len=q_len, block_tables=block_tables)
+        new_cache[f"sub{j}"] = nc
+    return x, new_cache
+
+
 def _apply_period_seq(cfg, pp, x, cache_p, *, positions, kv_start, valid,
                       enc_out, mode, lens=None):
     new_cache = {}
@@ -552,6 +589,30 @@ def scatter_rows_to_pages(pages, rows, dest_blocks, *, batch_axis=0):
         return pool.at[:, dest].set(blocks.astype(pool.dtype))
 
     return jax.tree.map(put, pages, rows)
+
+
+def copy_cache_pages(cache, src_blocks, dst_blocks, *, stacked=True):
+    """Copy-on-write support: duplicate page contents src -> dst in every
+    attention K/V pool of a paged cache pytree (init_paged_cache layout
+    when stacked=True, init_layer_paged_cache when False). Recurrent-state
+    leaves are untouched — they are per-slot, never shared."""
+    src = jnp.asarray(src_blocks, jnp.int32)
+    dst = jnp.asarray(dst_blocks, jnp.int32)
+
+    def one(c):
+        if not (isinstance(c, dict) and "k" in c and "v" in c):
+            return c
+        out = dict(c)
+        for n in ("k", "v"):
+            if stacked:
+                out[n] = c[n].at[:, dst].set(c[n][:, src])
+            else:
+                out[n] = c[n].at[dst].set(c[n][src])
+        return out
+
+    return {name: one(c) for name, c in cache.items()} \
+        if isinstance(cache, dict) and all(
+            isinstance(v, dict) for v in cache.values()) else one(cache)
 
 
 def scatter_cache_rows_paged(pool, rows, slot_ids, dest_blocks, *,
@@ -722,6 +783,37 @@ def decode_step(cfg: ModelConfig, params, tokens, cache, pos, *,
 
     x, new_cache = jax.lax.scan(f, x, (params["blocks"], cache))
     logits = _head(cfg, params, x)[:, 0]
+    return logits, new_cache
+
+
+def prefill_paged_context(cfg: ModelConfig, params, tokens, cache, q_start,
+                          q_len, block_tables):
+    """CONTEXT PREFILL against the PAGED cache: run a chunk of new tokens
+    (b, C) whose row-i token j sits at absolute position q_start[i] + j,
+    attending to the pages holding [0, q_start) plus itself causally, and
+    scatter the chunk's K/V into the pages through `block_tables`
+    (b, max_blocks). This is how a warm-prefix request prefills only its
+    cold suffix and how a long prompt prefills in fixed-size chunks.
+    q_len (b,) real chunk lengths (trailing pads write the null page).
+    Returns (last-real-token logits (b, V), cache). Attention-only stacks
+    (apply_sublayer_context_paged asserts)."""
+    x = _embed(cfg, params, tokens)
+    b, C = tokens.shape
+    starts = jnp.asarray(q_start, jnp.int32)
+    lens = jnp.asarray(q_len, jnp.int32)
+    positions = starts[:, None] + jnp.arange(C)[None]
+    bt = jnp.asarray(block_tables, jnp.int32)
+
+    def f(x, per):
+        pp, cp = per
+        x, nc = _apply_period_context_paged(cfg, pp, x, cp,
+                                            positions=positions, q_len=lens,
+                                            block_tables=bt)
+        return x, nc
+
+    x, new_cache = jax.lax.scan(f, x, (params["blocks"], cache))
+    x_last = x[jnp.arange(b), lens - 1][:, None]
+    logits = _head(cfg, params, x_last)[:, 0]
     return logits, new_cache
 
 

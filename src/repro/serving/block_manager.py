@@ -14,18 +14,26 @@ Block ids are plain ints into per-stage page arrays
 ``(n_blocks, block_size, heads, head_dim)`` (models.model.init_paged_cache).
 Block 0 is reserved as the NULL/trash block: unallocated table entries point
 at it, compile-shape padding rows scatter into it, and it is never read
-(attention masks positions >= kv_len). Refcounts exist so a future
-prefix-sharing / fork path can alias blocks copy-on-write; the serving
-engine today only ever holds one reference per block.
+(attention masks positions >= kv_len).
+
+Refcounts back PREFIX SHARING: ``PrefixIndex`` maps a chained hash of each
+block-aligned token chunk to the resident physical block holding its K/V,
+holding one reference per indexed block so cached prefixes survive their
+original request. Admission matches a new prompt against the index, aliases
+the hit blocks (``acquire`` increfs), and prefills only the cold suffix;
+writing into a still-shared block first goes through ``BlockTable.writable``
+(copy-on-write). Blocks whose only remaining reference is the index's are
+evictable, LRU-first, when the pool runs dry.
 
 Everything here is host-side Python — no jax. The arrays handed to jitted
-stage functions come from ``BlockTable.as_array``.
+stage functions come from ``BlockTable.as_array``; page copies for COW are
+applied on device by the pipeline (``AsymmetricPipeline.copy_pages``).
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import List, Optional
+from collections import OrderedDict, deque
+from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -52,6 +60,9 @@ class BlockPool:
         self._free: deque = deque(range(1, n_blocks))
         self._ref = np.zeros(n_blocks, np.int32)
         self._ref[NULL_BLOCK] = 1          # pinned forever
+        # optional PrefixIndex notified on 1<->2 ref transitions so it can
+        # keep its evictable count O(1) (set by PrefixIndex.__init__)
+        self.observer = None
 
     @property
     def n_free(self) -> int:
@@ -77,6 +88,8 @@ class BlockPool:
     def incref(self, bid: int) -> None:
         assert bid != NULL_BLOCK and self._ref[bid] > 0, bid
         self._ref[bid] += 1
+        if self._ref[bid] == 2 and self.observer is not None:
+            self.observer._ref_rose_above_one(bid)
 
     def free(self, bid: int) -> None:
         """Drop one reference; the block returns to the free list at zero."""
@@ -86,6 +99,8 @@ class BlockPool:
         self._ref[bid] -= 1
         if self._ref[bid] == 0:
             self._free.append(bid)
+        elif self._ref[bid] == 1 and self.observer is not None:
+            self.observer._ref_fell_to_one(bid)
 
     def ref(self, bid: int) -> int:
         return int(self._ref[bid])
@@ -133,6 +148,27 @@ class BlockTable:
             self.pool.incref(b)
         return BlockTable(self.pool, list(self.blocks))
 
+    def writable(self, block_idx: int
+                 ) -> Union[None, Tuple[int, int], bool]:
+        """Copy-on-write: make ``blocks[block_idx]`` exclusively owned.
+
+        Returns None when the block is already exclusive (ref == 1), a
+        ``(src, dst)`` pair when it was aliased onto a fresh block — the
+        caller must copy the page contents src -> dst on device and drop
+        happens here (the shared block loses this table's reference) — or
+        False when the pool has no free block for the copy (caller evicts
+        or preempts and retries)."""
+        bid = self.blocks[block_idx]
+        assert bid != NULL_BLOCK, "COW on the null block"
+        if self.pool.ref(bid) == 1:
+            return None
+        got = self.pool.alloc(1)
+        if got is None:
+            return False
+        self.blocks[block_idx] = got[0]
+        self.pool.free(bid)          # drop OUR reference; sharers keep theirs
+        return (bid, got[0])
+
     def as_array(self, max_blocks: int) -> np.ndarray:
         """(max_blocks,) int32 padded with the NULL block."""
         assert len(self.blocks) <= max_blocks, (len(self.blocks), max_blocks)
@@ -147,3 +183,131 @@ class BlockTable:
         bs = self.pool.block_size
         pos = np.arange(n_tokens)
         return np.asarray(self.blocks, np.int64)[pos // bs] * bs + pos % bs
+
+
+# ---------------------------------------------------------------------------
+# Prefix index (vLLM-style automatic prefix caching)
+# ---------------------------------------------------------------------------
+
+def chunk_hashes(tokens: Sequence[int], block_size: int) -> List[int]:
+    """Chained hash of each FULL block-aligned token chunk: hash j covers
+    tokens [0, (j+1)*block_size), so equal hash <=> equal prefix (modulo
+    hash collisions, negligible for host-side dedup). Partial tail chunks
+    are never hashed — only whole blocks are shareable."""
+    out: List[int] = []
+    h = 0
+    for j in range(len(tokens) // block_size):
+        chunk = tuple(int(t) for t in
+                      tokens[j * block_size:(j + 1) * block_size])
+        h = hash((h, chunk))
+        out.append(h)
+    return out
+
+
+class PrefixIndex:
+    """Chained-hash -> resident physical block, one per FULL prompt chunk.
+
+    The index holds ONE reference on every block it maps, so a cached
+    prefix outlives the request that wrote it. A block whose only
+    remaining reference is the index's is EVICTABLE; ``evict`` frees
+    such blocks LRU-first when the pool runs dry. ``acquire`` increfs
+    matched blocks on behalf of a new request (which releases them through
+    its BlockTable like any other block). Stale aliasing is impossible by
+    construction: a mapped block can only reach refcount zero through
+    ``evict``/``clear``, which removes the mapping first.
+    """
+
+    def __init__(self, pool: BlockPool):
+        assert pool.observer is None, "one PrefixIndex per pool"
+        self.pool = pool
+        pool.observer = self
+        self._block_of: dict = {}            # chain hash -> block id
+        self._hash_of: dict = {}             # block id -> chain hash
+        self._lru: OrderedDict = OrderedDict()   # block id -> None, LRU order
+        # indexed blocks whose ONLY reference is the index's, maintained
+        # O(1) via the pool's ref-transition notifications — admission
+        # reads this every loop iteration (capacity counts evictable
+        # blocks as free), so a per-call scan would be O(pool) steady work
+        self._evictable = 0
+
+    # ---- BlockPool observer hooks (1 <-> 2 ref transitions) -------------
+    def _ref_fell_to_one(self, bid: int) -> None:
+        if bid in self._hash_of:
+            self._evictable += 1
+
+    def _ref_rose_above_one(self, bid: int) -> None:
+        if bid in self._hash_of:
+            self._evictable -= 1
+
+    def __len__(self) -> int:
+        return len(self._block_of)
+
+    def match_len(self, hashes: Sequence[int]) -> int:
+        """Length (in blocks) of the longest indexed prefix of `hashes`."""
+        n = 0
+        for h in hashes:
+            if h not in self._block_of:
+                break
+            n += 1
+        return n
+
+    def acquire(self, hashes: Sequence[int]) -> List[int]:
+        """Alias the indexed prefix `hashes` (all must be resident):
+        increfs every block on the caller's behalf and marks it
+        recently-used. The caller owns the new references (release via
+        BlockTable.release / pool.free)."""
+        blocks = []
+        for h in hashes:
+            bid = self._block_of[h]
+            self.pool.incref(bid)
+            self._lru.move_to_end(bid)
+            blocks.append(bid)
+        return blocks
+
+    def register(self, hashes: Sequence[int], blocks: Sequence[int]) -> int:
+        """Index freshly written blocks under their chunk hashes (incref —
+        the index's own reference). Hashes already resident are skipped:
+        the first writer stays canonical, a duplicate block is simply not
+        indexed. Returns the number of new entries."""
+        added = 0
+        for h, bid in zip(hashes, blocks):
+            if h in self._block_of:
+                continue
+            assert bid not in self._hash_of, (bid, "indexed twice")
+            self.pool.incref(bid)
+            self._block_of[h] = bid
+            self._hash_of[bid] = h
+            self._lru[bid] = None
+            self._lru.move_to_end(bid)
+            added += 1
+        return added
+
+    def n_evictable(self) -> int:
+        """Blocks reclaimable right now (referenced only by the index)."""
+        return self._evictable
+
+    def evict(self, n: int) -> int:
+        """Free up to `n` evictable blocks, least-recently-used first;
+        returns how many were freed (their pool slots are reusable)."""
+        freed = 0
+        for bid in list(self._lru):
+            if freed >= n:
+                break
+            if self.pool.ref(bid) != 1:
+                continue                      # still aliased by a request
+            h = self._hash_of.pop(bid)
+            del self._block_of[h]
+            del self._lru[bid]
+            self._evictable -= 1
+            self.pool.free(bid)               # 1 -> 0: back to the free list
+            freed += 1
+        return freed
+
+    def clear(self) -> None:
+        """Drop every cached prefix (frees the index's references)."""
+        for bid in list(self._lru):
+            h = self._hash_of.pop(bid)
+            del self._block_of[h]
+            del self._lru[bid]
+            self.pool.free(bid)
+        self._evictable = 0

@@ -37,8 +37,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
-from repro.serving.block_manager import (BlockPool, BlockTable,
-                                         blocks_for_tokens)
+from repro.serving.block_manager import (BlockPool, BlockTable, PrefixIndex,
+                                         blocks_for_tokens, chunk_hashes)
 from repro.serving.loop import (ServeStats, VirtualClock, WallClock,
                                 run_serve_loop)
 from repro.serving.request import Request
@@ -47,14 +47,24 @@ from repro.serving.request import Request
 @dataclasses.dataclass
 class _Slot:
     req: Optional[Request] = None
-    pos: int = 0               # next write position
+    pos: int = 0               # next write position (tokens cached so far)
     remaining: int = 0
     out: Optional[list] = None
     seq: int = 0               # admission order (paged preemption victims)
+    # incremental-prefill state (prefix caching / chunked prefill): tokens
+    # of the prompt not yet prefilled; None once decode can start
+    pending: Optional[np.ndarray] = None
+    hashes: Optional[list] = None   # full-block chunk hashes of the prompt
+    matched: bool = False           # prefix lookup ran (lazily, first chunk)
 
     @property
     def free(self) -> bool:
         return self.req is None
+
+    @property
+    def decoding(self) -> bool:
+        """Occupied and past prefill: participates in decode iterations."""
+        return self.req is not None and self.pending is None
 
 
 class SlotEngine:
@@ -139,7 +149,7 @@ class SlotEngine:
                 self._insert_batch(batch, free[:len(batch)])
         # nothing active (e.g. a rejection-only cycle): no decode to run —
         # and possibly no caches allocated yet to run it on
-        done = self._decode_iteration() if self.active else []
+        done = self._step(now) if self.active else []
         comps.extend((req, np.asarray(out, np.int32), None)
                      for req, out in done)
         return comps, self.virtual_step_cost
@@ -150,6 +160,11 @@ class SlotEngine:
 
     def _can_admit(self, r: Request, batch: Sequence[Request]) -> bool:
         return True
+
+    def _step(self, now: float):
+        """One compute step once admissions are placed. The paged engine
+        overrides this to interleave prefill chunks with the decode."""
+        return self._decode_iteration(now)
 
     def _before_decode(self) -> None:
         pass                       # paged: allocate-on-decode / preemption
@@ -183,20 +198,22 @@ class SlotEngine:
                                      seq=self._admit_seq)
             self._admit_seq += 1
 
-    def _decode_iteration(self):
+    def _decode_iteration(self, now: float = 0.0):
         self._before_decode()      # paged: grow tables, maybe preempt
         toks = np.zeros((self.n_slots,), np.int32)
         pos = np.zeros((self.n_slots,), np.int32)
         for i, s in enumerate(self.slots):
-            if not s.free:
+            if s.decoding:         # mid-prefill slots sit this one out
                 toks[i] = int(self._last_logits[i].argmax())
                 pos[i] = s.pos
         logits = self._decode_all(toks, pos)
         done = []
         for i, s in enumerate(self.slots):
-            if s.free:
+            if not s.decoding:
                 continue
             s.out.append(int(toks[i]))
+            if len(s.out) == 1 and s.req is not None:
+                s.req.first_token_time = now
             s.pos += 1
             s.remaining -= 1
             self._last_logits[i] = logits[i]
@@ -230,8 +247,10 @@ class SlotEngine:
         return free[0]
 
     def step(self) -> Dict[int, List[int]]:
-        """One joint decode iteration. Returns {rid: finished tokens}."""
-        return {req.rid: out for req, out in self._decode_iteration()}
+        """One engine step (prefill chunks where pending, then the joint
+        decode — identical to what run_iteration drives). Returns
+        {rid: finished tokens}."""
+        return {req.rid: out for req, out in self._step(0.0)}
 
 
 class ContinuousBatcher(SlotEngine):
@@ -316,17 +335,48 @@ class PagedPipelineBatcher(SlotEngine):
     a slot only ever occupies the blocks its tokens actually fill, so a
     pool sized for actual usage serves far more concurrent slots than
     max_len-row pre-allocation (benchmarks/bench_paged.py).
+
+    ``prefix_caching=True`` cashes in the refcounts: each stage keeps a
+    ``PrefixIndex`` (hash of block-aligned prompt chunks -> resident
+    block), admission aliases a new prompt's longest indexed prefix
+    (fork-style incref) and prefills only the COLD SUFFIX through the
+    paged context path (pipeline.context_slots_paged); a write landing in
+    a still-shared block copies it first (BlockTable.writable +
+    pipeline.copy_pages). Cached blocks outlive their request — one index
+    reference each — and are evicted LRU-first when a pool runs dry.
+
+    ``prefill_chunk=N`` splits any prefill longer than N tokens into
+    N-token chunks run one per iteration, so a giant prompt no longer
+    stalls every in-flight decode for its whole prefill (iteration-level
+    fairness). Both switches need an attention-only stack
+    (pipeline.context_mode_supported): recurrent state is a running
+    summary — nothing to alias per block, nothing to resume per chunk.
+
+    ``prefill_token_cost`` (virtual clock only) charges each prefilled
+    token that fraction of an iteration, so chunking and prefix hits show
+    up in simulated TTFT/latency instead of hiding behind a flat
+    per-iteration cost; 0.0 keeps the PR-2 flat-cost accounting.
     """
 
     def __init__(self, pipeline, *, n_slots: int = 8, max_len: int = 256,
                  block_size: int = 16,
                  stage_blocks: Optional[Sequence[int]] = None,
                  admit_headroom: Optional[int] = None, pad_id: int = 0,
-                 virtual_step_cost: float = 1.0):
-        from repro.serving.pipeline import slot_mode_supported
+                 virtual_step_cost: float = 1.0,
+                 prefix_caching: bool = False, prefill_chunk: int = 0,
+                 prefill_token_cost: float = 0.0):
+        from repro.serving.pipeline import (context_mode_supported,
+                                            slot_mode_supported)
         assert slot_mode_supported(pipeline.cfg), \
             "slot mode needs uniform text decode; use StaticBatcher"
         assert max_len % block_size == 0, (max_len, block_size)
+        if ((prefix_caching or prefill_chunk)
+                and not context_mode_supported(pipeline.cfg)):
+            warnings.warn(
+                f"{pipeline.cfg.name}: prefix caching / chunked prefill "
+                "need an attention-only stack (recurrent state has no "
+                "per-block identity); serving without them", stacklevel=2)
+            prefix_caching, prefill_chunk = False, 0
         super().__init__(n_slots=n_slots, max_len=max_len,
                          vocab_size=pipeline.cfg.vocab_size, pad_id=pad_id,
                          virtual_step_cost=virtual_step_cost)
@@ -361,10 +411,31 @@ class PagedPipelineBatcher(SlotEngine):
         # per-stage stacked block-table arrays for the decode hot path;
         # rebuilt only when a table mutates (insert / growth / release)
         self._bt_cache: Optional[List[np.ndarray]] = None
+        # ---- prefix caching / chunked prefill --------------------------
+        self.prefix_caching = prefix_caching
+        self.prefill_chunk = int(prefill_chunk)
+        self.prefill_token_cost = prefill_token_cost
+        # incremental mode routes prompts through the per-slot context
+        # path instead of the joint one-shot insert
+        self._incremental = prefix_caching or self.prefill_chunk > 0
+        self._prefix: List[Optional[PrefixIndex]] = [
+            PrefixIndex(p) if (prefix_caching and p is not None) else None
+            for p in self._pools]
+        # counters surfaced through ServeStats (loop reports deltas)
+        self.prefix_lookups = 0
+        self.prefix_hits = 0
+        self.prefix_hit_tokens = 0
+        self.prefill_tokens = 0
+        self.cow_copies = 0
+        self._iter_prefill_tokens = 0
 
     # ---- block accounting -------------------------------------------------
     def _min_pool_free(self) -> int:
-        frees = [p.n_free for p in self._pools if p is not None]
+        # cached-prefix blocks held only by the index are reclaimable on
+        # demand (LRU eviction), so admission counts them as free
+        frees = [p.n_free + (ix.n_evictable() if ix is not None else 0)
+                 for p, ix in zip(self._pools, self._prefix)
+                 if p is not None]
         return min(frees) if frees else 1 << 30
 
     def _usable_blocks(self) -> int:
@@ -416,7 +487,7 @@ class PagedPipelineBatcher(SlotEngine):
         self._need_cnt += 1
         return True
 
-    def _prefill_insert(self, toks, lens, slot_ids):
+    def _ensure_device_caches(self) -> None:
         if (self.pipeline.paged_caches is None
                 or self.pipeline.n_slots != self.n_slots
                 or self.pipeline.slot_len != self.max_len
@@ -425,10 +496,31 @@ class PagedPipelineBatcher(SlotEngine):
             self.pipeline.init_paged_caches(
                 self.n_slots, self.max_len, block_size=self.block_size,
                 stage_blocks=self.stage_blocks)
+
+    def _stage_alloc(self, si: int, table: BlockTable,
+                     n_tokens: int) -> bool:
+        """Grow `table` to hold n_tokens, reclaiming cached-prefix blocks
+        from stage si's index if the pool proper is dry."""
+        pool, ix = self._pools[si], self._prefix[si]
+        need = blocks_for_tokens(n_tokens, self.block_size) - table.n_blocks
+        if need <= 0:
+            return True
+        if pool.n_free < need and ix is not None:
+            ix.evict(need - pool.n_free)
+        before = table.n_blocks
+        ok = table.allocate_tokens(n_tokens)
+        if table.n_blocks != before:
+            self._bt_cache = None
+        return ok
+
+    def _prefill_insert(self, toks, lens, slot_ids):
+        self._ensure_device_caches()
         self._bt_cache = None
         m = len(slot_ids)
+        self.prefill_tokens += int(np.sum(lens[:m]))
+        self._iter_prefill_tokens += int(np.sum(lens[:m]))
         stage_dest = []
-        for tabs in self._tables:
+        for si, tabs in enumerate(self._tables):
             if tabs is None:
                 stage_dest.append(
                     np.zeros(m * self.max_blocks, np.int32))
@@ -437,25 +529,187 @@ class PagedPipelineBatcher(SlotEngine):
             for row, slot in enumerate(slot_ids):
                 t = tabs[slot]
                 assert not t.blocks, "slot freed without releasing blocks"
-                ok = t.allocate_tokens(int(lens[row]))
+                ok = self._stage_alloc(si, t, int(lens[row]))
                 assert ok, "admission admitted more blocks than the pool has"
                 dest[row] = t.as_array(self.max_blocks)
             stage_dest.append(dest.reshape(-1))
         return self.pipeline.insert_slots_paged(toks, lens, slot_ids,
                                                 stage_dest)
 
-    def _ensure_blocks(self, i: int) -> bool:
-        pos = self.slots[i].pos
-        for tabs in self._tables:
+    # ---- incremental insert: prefix match + deferred (chunked) prefill ----
+    def _insert_batch(self, reqs: Sequence[Request],
+                      slot_ids: Sequence[int]) -> None:
+        if not self._incremental:
+            return super()._insert_batch(reqs, slot_ids)
+        self._ensure_device_caches()
+        for r, slot in zip(reqs, slot_ids):
+            self._setup_slot(r, slot)
+
+    def _setup_slot(self, r: Request, slot: int) -> None:
+        """Admission in incremental mode: queue the whole prompt as pending
+        prefill. The prefix lookup runs LAZILY at the slot's first prefill
+        step (_match_slot) rather than here: _prefill_step visits slots
+        oldest-first, so a later arrival admitted in the same batch still
+        sees the blocks an earlier one registered this very iteration.
+        No model work happens here."""
+        hashes = chunk_hashes(r.prompt, self.block_size) \
+            if self.prefix_caching else []
+        self.slots[slot] = _Slot(req=r, pos=0,
+                                 remaining=r.max_new_tokens, out=[],
+                                 seq=self._admit_seq,
+                                 pending=np.asarray(r.prompt, np.int32),
+                                 hashes=hashes,
+                                 matched=not self.prefix_caching)
+        self._admit_seq += 1
+
+    def _match_slot(self, i: int) -> None:
+        """First-touch prefix lookup for slot i: alias the longest indexed
+        prefix (incref per stage) and drop it from the pending prefill."""
+        s = self.slots[i]
+        s.matched = True
+        if not s.hashes:
+            return
+        self.prefix_lookups += 1
+        L = min(ix.match_len(s.hashes)
+                for ix in self._prefix if ix is not None)
+        if not L:
+            return
+        # alias the hit prefix in EVERY stage (symmetric indexes:
+        # registered/evicted together, so L agrees up to eviction races —
+        # min() above settles those)
+        for tabs, ix in zip(self._tables, self._prefix):
             if tabs is None:
                 continue
-            before = tabs[i].n_blocks
-            ok = tabs[i].ensure(pos)
-            if tabs[i].n_blocks != before:
-                self._bt_cache = None
-            if not ok:
+            t = tabs[i]
+            assert not t.blocks, "slot freed without releasing"
+            t.blocks.extend(ix.acquire(s.hashes[:L]))
+        # always leave >= 1 cold token: the final logits must come from a
+        # real forward pass (a fully cached prompt re-runs its last token,
+        # copy-on-write duplicating the shared tail block)
+        cold = min(L * self.block_size, len(s.req.prompt) - 1)
+        s.pos = cold
+        s.pending = s.pending[cold:]
+        self.prefix_hits += 1
+        self.prefix_hit_tokens += cold
+        self._bt_cache = None
+
+    def _prepare_chunk(self, i: int, target_tokens: int) -> bool:
+        """Make [slot i's tables] able to hold target_tokens AND the next
+        write position exclusively owned (copy-on-write). False when some
+        pool is dry even after eviction — caller preempts and retries."""
+        pos = self.slots[i].pos
+        for si, tabs in enumerate(self._tables):
+            if tabs is None:
+                continue
+            t = tabs[i]
+            if not self._stage_alloc(si, t, target_tokens):
                 return False
+            bi = pos // self.block_size
+            if bi < t.n_blocks:
+                pool, ix = self._pools[si], self._prefix[si]
+                if pool.n_free < 1 and ix is not None \
+                        and pool.ref(t.blocks[bi]) > 1:
+                    ix.evict(1)
+                cow = t.writable(bi)
+                if cow is False:
+                    return False
+                if cow is not None:
+                    src, dst = cow
+                    self.pipeline.copy_pages(si, [src], [dst])
+                    self.cow_copies += 1
+                    self._bt_cache = None
         return True
+
+    def _prefill_step(self, now: float) -> None:
+        """Run ONE prefill chunk for every mid-prefill slot, oldest first —
+        interleaved with the decode so a long cold prompt shares the
+        iteration budget instead of monopolizing it. Same-iteration chunks
+        coalesce into joint context dispatches; the batch flushes whenever
+        a slot COMPLETES its prompt (it registers its blocks on flush, so
+        a later same-iteration arrival with the same prefix still matches
+        instead of re-prefilling — dedup beats batching there)."""
+        order = sorted((i for i, s in enumerate(self.slots)
+                        if not s.free and s.pending is not None),
+                       key=lambda i: self.slots[i].seq)
+        group: List = []               # (slot, chunk) awaiting one dispatch
+        for i in order:
+            s = self.slots[i]
+            if s.free or s.pending is None:
+                continue               # preempted by an earlier slot's turn
+            if not s.matched:
+                # match AFTER flushing so this lookup sees every block the
+                # batch's completed prompts just registered
+                self._dispatch_chunks(group)
+                self._match_slot(i)
+            chunk = len(s.pending) if self.prefill_chunk <= 0 \
+                else min(self.prefill_chunk, len(s.pending))
+            while not self.slots[i].free \
+                    and not self._prepare_chunk(i, s.pos + chunk):
+                active = [j for j, sl in enumerate(self.slots)
+                          if not sl.free]
+                self._preempt(max(active,
+                                  key=lambda j: self.slots[j].seq))
+            if self.slots[i].free:
+                continue               # evicted itself; requeued up front
+            group.append((i, chunk))
+            if self.prefix_caching and chunk == len(s.pending):
+                self._dispatch_chunks(group)
+        self._dispatch_chunks(group)
+
+    def _dispatch_chunks(self, group: List) -> None:
+        """Joint (m, C) right-padded context-prefill call for the queued
+        (slot, chunk) pairs: slot i's next `chunk` pending tokens run at
+        absolute positions [pos, pos+chunk). Width buckets to multiples of
+        16 so mixed chunk lengths compile O(log) shapes. Clears `group`."""
+        pairs = [(i, c) for i, c in group
+                 if not self.slots[i].free]   # a later prepare may preempt
+        group.clear()
+        if not pairs:
+            return
+        m = len(pairs)
+        C = min(-(-max(c for _, c in pairs) // 16) * 16, self.max_len - 1)
+        toks = np.full((m, C), self.pad_id, np.int32)
+        lens = np.zeros(m, np.int32)
+        starts = np.zeros(m, np.int32)
+        for row, (i, c) in enumerate(pairs):
+            s = self.slots[i]
+            toks[row, :c] = s.pending[:c]
+            lens[row] = c
+            starts[row] = s.pos
+        tables = [np.zeros((m, self.max_blocks), np.int32) if tabs is None
+                  else np.stack([tabs[i].as_array(self.max_blocks)
+                                 for i, _ in pairs])
+                  for tabs in self._tables]
+        logits = np.asarray(self.pipeline.context_slots_paged(
+            toks, lens, starts, tables))
+        for row, (i, c) in enumerate(pairs):
+            s = self.slots[i]
+            s.pos += c
+            s.pending = s.pending[c:]
+            self.prefill_tokens += c
+            self._iter_prefill_tokens += c
+            if len(s.pending) == 0:    # prompt fully cached: decode next
+                s.pending = None
+                self._last_logits[i] = logits[row]
+                self._register_prefix(i, s)
+                self._bt_cache = None
+
+    def _register_prefix(self, i: int, s: _Slot) -> None:
+        """Index the prompt's full blocks so later prompts can alias them
+        (the index takes its own reference; entries already present keep
+        their canonical block)."""
+        if not self.prefix_caching or not s.hashes:
+            return
+        for tabs, ix in zip(self._tables, self._prefix):
+            if tabs is None or ix is None:
+                continue
+            ix.register(s.hashes, tabs[i].blocks[:len(s.hashes)])
+
+    def _ensure_blocks(self, i: int) -> bool:
+        # decode writes at pos: grow to hold it AND copy-on-write if the
+        # target block is still shared (defensive — full-block-only
+        # sharing means decode normally lands in exclusive blocks)
+        return self._prepare_chunk(i, self.slots[i].pos + 1)
 
     def _before_decode(self) -> None:
         """Allocate-on-decode growth; preempt-by-recompute when a pool runs
@@ -463,11 +717,12 @@ class PagedPipelineBatcher(SlotEngine):
         evicted — possibly the requester itself — so the head of the line
         always makes progress (no livelock: a request that cannot fit even
         alone was rejected by _fits)."""
-        order = sorted((i for i, s in enumerate(self.slots) if not s.free),
-                       key=lambda i: self.slots[i].seq)
+        order = sorted((i for i, s in enumerate(self.slots)
+                        if s.decoding), key=lambda i: self.slots[i].seq)
         for i in order:
-            while not self.slots[i].free and not self._ensure_blocks(i):
-                active = [j for j in order if not self.slots[j].free]
+            while self.slots[i].decoding and not self._ensure_blocks(i):
+                active = [j for j, sl in enumerate(self.slots)
+                          if not sl.free]
                 self._preempt(max(active, key=lambda j: self.slots[j].seq))
 
     def _preempt(self, i: int) -> None:
@@ -488,11 +743,34 @@ class PagedPipelineBatcher(SlotEngine):
                 tabs[i].release()
         self._bt_cache = None
 
+    def _step(self, now: float):
+        if self._incremental:
+            self._prefill_step(now)
+        if any(s.decoding for s in self.slots):
+            return self._decode_iteration(now)
+        return []                  # every occupied slot is still prefilling
+
+    def run_iteration(self, now: float):
+        self._iter_prefill_tokens = 0
+        comps, cost = super().run_iteration(now)
+        # virtual accounting: charge prefilled tokens a fraction of an
+        # iteration so chunking/prefix hits show up in simulated latency
+        if self._iter_prefill_tokens and self.prefill_token_cost:
+            cost += (self.virtual_step_cost * self.prefill_token_cost
+                     * self._iter_prefill_tokens)
+        return comps, cost
+
     def _decode_all(self, toks, pos):
         if self._bt_cache is None:
+            # rows of slots that are NOT decoding (free, or mid-prefill)
+            # present an all-null table so their joint-iteration garbage
+            # write lands in the trash page, never in allocated blocks
             self._bt_cache = [
                 np.zeros((self.n_slots, self.max_blocks), np.int32)
                 if tabs is None else
-                np.stack([t.as_array(self.max_blocks) for t in tabs])
+                np.stack([t.as_array(self.max_blocks)
+                          if self.slots[j].decoding else
+                          np.zeros(self.max_blocks, np.int32)
+                          for j, t in enumerate(tabs)])
                 for tabs in self._tables]
         return self.pipeline.decode_slots_paged(toks, pos, self._bt_cache)

@@ -28,7 +28,8 @@ class InferenceEngine:
                  max_batch: int = 4, quantize: bool = False,
                  policy: str = "continuous", n_slots: int = 8,
                  max_len: int = 256, cache_layout: str = "contiguous",
-                 block_size: int = 16, stage_blocks=None):
+                 block_size: int = 16, stage_blocks=None,
+                 prefix_caching: bool = False, prefill_chunk: int = 0):
         self.cfg = cfg
         devices = list(devices if devices is not None else jax.devices())
         if params is None:
@@ -58,7 +59,9 @@ class InferenceEngine:
                              policy=policy, n_slots=n_slots, max_len=max_len,
                              cache_layout=cache_layout,
                              block_size=block_size,
-                             stage_blocks=stage_blocks)
+                             stage_blocks=stage_blocks,
+                             prefix_caching=prefix_caching,
+                             prefill_chunk=prefill_chunk)
 
     def generate(self, prompts: Sequence[np.ndarray], *, max_new: int = 16
                  ) -> List[np.ndarray]:

@@ -98,32 +98,56 @@ class ServeStats:
     queue_delays: List[float] = dataclasses.field(default_factory=list)
     rejected: int = 0              # oversized requests turned away
     preemptions: int = 0           # paged slots evicted + recomputed
+    dropped: int = 0               # stranded: never finished (no finish_time)
+    # prefix-cache counters (PagedPipelineBatcher with prefix_caching=True)
+    prefix_lookups: int = 0        # admissions that consulted the index
+    prefix_hits: int = 0           # admissions that aliased >= 1 block
+    prefix_hit_tokens: int = 0     # prompt tokens served from resident blocks
+    prefill_tokens: int = 0        # cold prompt tokens actually prefilled
+    cow_copies: int = 0            # shared blocks copied before a write
 
     def summary(self) -> str:
         lat = np.asarray(self.latencies)
-        return (f"n={len(lat)} p50={np.percentile(lat, 50):.3f}s "
-                f"p99={np.percentile(lat, 99):.3f}s "
+        if len(lat):
+            pct = (f"p50={np.percentile(lat, 50):.3f}s "
+                   f"p99={np.percentile(lat, 99):.3f}s ")
+        else:                      # zero served (e.g. all rejected/dropped)
+            pct = "p50=n/a p99=n/a "
+        extra = ""
+        if self.prefix_lookups:
+            hit = self.prefix_hits / self.prefix_lookups
+            extra = (f" hit={hit * 100:.0f}% "
+                     f"saved={self.prefix_hit_tokens}tok "
+                     f"cow={self.cow_copies}")
+        return (f"n={len(lat)} {pct}"
                 f"slo={self.attainment * 100:.1f}% thpt={self.throughput:.2f} req/s "
-                f"rej={self.rejected} preempt={self.preemptions}")
+                f"rej={self.rejected} drop={self.dropped} "
+                f"preempt={self.preemptions}{extra}")
 
     @classmethod
     def from_requests(cls, requests: Sequence, deadline: float,
                       *, iterations: int = 0) -> "ServeStats":
-        lats = [r.latency for r in requests]
-        # a rejected request (empty output despite wanting tokens) finished
-        # fast but served nobody — it can never count as SLO-attained
+        # three outcomes: SERVED (finished with its tokens), REJECTED
+        # (finished with an empty output despite wanting tokens), DROPPED
+        # (stranded in the loop, finish_time still None). Latency
+        # percentiles and throughput cover served requests only — a
+        # rejected request's near-instant turnaround served nobody, and a
+        # dropped request has no finish time at all; both count against
+        # attainment.
+        served = [r for r in requests if r.served]
+        dropped = sum(1 for r in requests if r.finish_time is None)
+        lats = [r.latency for r in served]
+
         def attained(r):
-            if (r.output is not None and len(r.output) == 0
-                    and r.max_new_tokens > 0):
-                return False
-            return r.latency <= deadline
+            return r.served and r.latency <= deadline
         att = (float(np.mean([attained(r) for r in requests]))
-               if lats else 1.0)
-        dur = max((r.finish_time for r in requests), default=1.0)
-        qd = [r.start_time - r.arrival for r in requests]
+               if requests else 1.0)
+        dur = max((r.finish_time for r in served), default=1.0)
+        qd = [r.start_time - r.arrival for r in requests
+              if r.start_time is not None]
         return cls(latencies=lats, attainment=att,
-                   throughput=len(requests) / max(dur, 1e-9),
-                   iterations=iterations, queue_delays=qd)
+                   throughput=len(served) / max(dur, 1e-9),
+                   iterations=iterations, queue_delays=qd, dropped=dropped)
 
 
 # ---------------------------------------------------------------------------
@@ -144,8 +168,9 @@ def run_serve_loop(workers: Sequence, requests: Sequence, *, deadline: float,
     idx = 0
     iterations = 0
     # workers persist across serve() calls: report this replay's deltas
-    rej0 = sum(getattr(w, "rejected", 0) for w in workers)
-    pre0 = sum(getattr(w, "preemptions", 0) for w in workers)
+    counters = ("rejected", "preemptions", "prefix_lookups", "prefix_hits",
+                "prefix_hit_tokens", "prefill_tokens", "cow_copies")
+    base = {c: sum(getattr(w, c, 0) for w in workers) for c in counters}
     while idx < len(pending) or any(w.inflight() for w in workers):
         now = clock.now()
         progressed = False
@@ -199,13 +224,17 @@ def run_serve_loop(workers: Sequence, requests: Sequence, *, deadline: float,
             t = w.next_event(now)
             if t is not None and t > now:
                 targets.append(t)
-        if not targets:            # nothing runnable, nothing scheduled
+        if not targets:
+            # nothing runnable, nothing scheduled: any request still
+            # pending or inflight is STRANDED — it keeps finish_time None
+            # and ServeStats reports it as dropped / non-attained instead
+            # of a negative latency
             break
         clock.sleep_until(min(targets))
 
     stats = ServeStats.from_requests(pending, deadline,
                                      iterations=iterations)
-    stats.rejected = sum(getattr(w, "rejected", 0) for w in workers) - rej0
-    stats.preemptions = sum(getattr(w, "preemptions", 0)
-                            for w in workers) - pre0
+    for c in counters:
+        setattr(stats, c,
+                sum(getattr(w, c, 0) for w in workers) - base[c])
     return stats

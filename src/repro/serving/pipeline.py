@@ -75,6 +75,10 @@ class StageExecutor:
         self._decode_jit = jax.jit(self._stage_decode, donate_argnums=(1,))
         self._decode_paged_jit = jax.jit(self._stage_decode_paged,
                                          donate_argnums=(1,))
+        self._context_paged_jit = jax.jit(self._stage_context_paged,
+                                          donate_argnums=(1,))
+        self._copy_pages_jit = jax.jit(self._stage_copy_pages,
+                                       donate_argnums=(0,))
 
     @property
     def has_attn(self) -> bool:
@@ -109,6 +113,23 @@ class StageExecutor:
             new_caches.append(nc)
         return x, new_caches
 
+    def _stage_context_paged(self, x, caches, positions, q_len,
+                             block_tables):
+        new_caches = []
+        for kind, lp, sc in zip(self.kinds, self.layer_params, caches):
+            x, nc = M.apply_sublayer_context_paged(
+                self.cfg, kind, lp, x, sc, positions=positions, q_len=q_len,
+                block_tables=block_tables)
+            new_caches.append(nc)
+        return x, new_caches
+
+    def _stage_copy_pages(self, caches, src, dst):
+        """Duplicate page contents src -> dst in every attention layer's
+        pools (copy-on-write). Donated + jitted so XLA updates the pools
+        in place instead of materializing a copy of each one."""
+        return [M.copy_cache_pages(c, src, dst, stacked=False)
+                for c in caches]
+
     # ---- cache ------------------------------------------------------------
     def make_caches(self, batch: int, max_len: int):
         out = []
@@ -136,6 +157,16 @@ def slot_mode_supported(cfg) -> bool:
     carry per-request modality state."""
     return not (cfg.swa_window or cfg.is_encoder_decoder
                 or cfg.num_image_tokens)
+
+
+def context_mode_supported(cfg) -> bool:
+    """Prefix caching and chunked prefill run prompts through the paged
+    CONTEXT path, which needs every sublayer to be attention: a recurrent
+    sublayer's state is a running summary of everything before it — there
+    is no per-block piece to alias (prefix sharing) or resume from
+    (chunked prefill). Hybrid stacks keep one-shot prefill."""
+    return slot_mode_supported(cfg) and all(
+        cfg.layer_kind(i) == ATTN for i in range(cfg.num_layers))
 
 
 class AsymmetricPipeline:
@@ -386,6 +417,55 @@ class AsymmetricPipeline:
                     for pool, row in zip(self.paged_caches[si], rows)]
         x_last = x[jnp.arange(m), lens[:m] - 1][:, None]
         return np.asarray(self._head(x_last)[:, 0])
+
+    def context_slots_paged(self, tokens: np.ndarray, lens: np.ndarray,
+                            q_start: np.ndarray,
+                            stage_tables: Sequence[np.ndarray]) -> np.ndarray:
+        """CONTEXT prefill of right-padded chunks `tokens` (m, C) whose
+        row-i token j sits at ABSOLUTE position q_start[i] + j — the
+        insert-with-nonzero-KV-start path behind warm-prefix serving (only
+        a prompt's cold suffix runs here, the shared prefix is already
+        resident in pages) and chunked prefill (a long prompt arrives as
+        several such calls). Each chunk's K/V scatter into this stage's
+        pages through `stage_tables[si]` (m, max_blocks) inside the
+        attention layer, and attention reads the prior context back
+        through the same table. Returns each row's last-real-token logits
+        (m, V) — meaningful once the final chunk of a prompt runs.
+
+        Attention-only stacks (context_mode_supported); q_start == 0 and
+        lens == the whole prompt reduces to a one-shot paged prefill of a
+        cold request through the context path."""
+        assert self.paged_caches is not None, "call init_paged_caches first"
+        assert context_mode_supported(self.cfg)
+        m, C = tokens.shape
+        lens = jnp.asarray(lens, jnp.int32)
+        starts = jnp.asarray(q_start, jnp.int32)
+        positions = starts[:, None] + jnp.arange(C)[None]
+        x = self._embed(jnp.asarray(tokens), {})
+        for si, st in enumerate(self.stages):
+            with st.mesh:
+                x = jax.device_put(x, _rep(st.mesh))
+                bt = jnp.asarray(stage_tables[si], jnp.int32)
+                x, self.paged_caches[si] = st._context_paged_jit(
+                    x, self.paged_caches[si], positions, lens, bt)
+        x_last = x[jnp.arange(m), lens - 1][:, None]
+        return np.asarray(self._head(x_last)[:, 0])
+
+    def copy_pages(self, stage_idx: int, src_blocks: Sequence[int],
+                   dst_blocks: Sequence[int]) -> None:
+        """Copy-on-write: duplicate page contents src -> dst in every
+        attention layer of stage `stage_idx` (one shared block-id space
+        per stage). Host-side bookkeeping (BlockTable.writable) decides
+        WHEN; this only moves bytes — donated/jitted per stage, so the
+        pools update in place."""
+        if not src_blocks:
+            return
+        st = self.stages[stage_idx]
+        with st.mesh:
+            self.paged_caches[stage_idx] = st._copy_pages_jit(
+                self.paged_caches[stage_idx],
+                jnp.asarray(src_blocks, jnp.int32),
+                jnp.asarray(dst_blocks, jnp.int32))
 
     def decode_slots_paged(self, tokens: np.ndarray, positions: np.ndarray,
                            stage_tables: Sequence[np.ndarray]) -> np.ndarray:

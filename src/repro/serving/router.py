@@ -25,15 +25,25 @@ __all__ = ["Router", "ServeStats", "StaticBatcher"]
 class StaticBatcher:
     """The paper's engine as a loop worker: admitted requests accumulate up
     to max_batch and one iteration runs the whole left-padded batch to
-    completion via ``replica.generate``."""
+    completion via ``replica.generate``.
+
+    ``max_len`` guards the replica's cache length: a request whose prompt +
+    max_new_tokens cannot fit is rejected alone with an empty output
+    (counted in ``ServeStats.rejected``) instead of crashing the whole
+    replay mid-generate — the same graceful degradation SlotEngine._fits
+    gives the continuous engines. None = unbounded (per-generate caches).
+    """
 
     def __init__(self, replica, *, max_batch: int = 4, pad_id: int = 0,
+                 max_len: Optional[int] = None,
                  virtual_step_cost: float = 1.0):
         self.replica = replica
         self.max_batch = max_batch
         self.pad_id = pad_id
+        self.max_len = max_len
         self.virtual_step_cost = virtual_step_cost
         self._queue: List[Request] = []
+        self.rejected = 0
 
     # ---- replica port (serving.loop) -------------------------------------
     def capacity(self, now: float) -> int:
@@ -56,6 +66,22 @@ class StaticBatcher:
 
     def run_iteration(self, now: float):
         batch, self._queue = self._queue, []
+        comps = []
+        if self.max_len is not None:
+            fits = []
+            for r in batch:
+                if len(r.prompt) + r.max_new_tokens > self.max_len - 1:
+                    self.rejected += 1
+                    warnings.warn(
+                        f"request {r.rid}: prompt {len(r.prompt)} + "
+                        f"max_new {r.max_new_tokens} exceeds the replica "
+                        "cache length; rejected with empty output")
+                    comps.append((r, np.zeros(0, np.int32), None))
+                else:
+                    fits.append(r)
+            batch = fits
+        if not batch:
+            return comps, self.virtual_step_cost
         maxlen = max(len(r.prompt) for r in batch)
         toks = np.full((len(batch), maxlen), self.pad_id, np.int32)
         kv_start = np.zeros(len(batch), np.int32)
@@ -64,28 +90,46 @@ class StaticBatcher:
             kv_start[i] = maxlen - len(r.prompt)
         max_new = max(r.max_new_tokens for r in batch)
         out = self.replica.generate(toks, max_new=max_new, kv_start=kv_start)
-        comps = [(r, out[i, :r.max_new_tokens], None)
-                 for i, r in enumerate(batch)]
+        comps.extend((r, out[i, :r.max_new_tokens], None)
+                     for i, r in enumerate(batch))
         return comps, self.virtual_step_cost * max_new
 
 
 class Router:
     """Least-loaded dispatch over replicas, sharing the serve loop (and its
-    admission policy) with the SLO simulator."""
+    admission policy) with the SLO simulator.
+
+    ``max_len`` is the serving contract for EVERY policy: slot engines size
+    their caches by it, and the static engine enforces it as its oversized
+    guard — a request too big for the continuous engines is rejected by the
+    static engine too (empty output, counted in ``ServeStats.rejected``)
+    rather than silently served via an unbounded per-generate cache, so
+    static-vs-continuous A/B runs see the same admission ceiling.
+    Construct ``StaticBatcher`` directly with ``max_len=None`` for an
+    unbounded whole-batch engine."""
 
     def __init__(self, replicas, *, max_batch: int = 4, pad_id: int = 0,
                  policy: str = "continuous", n_slots: int = 8,
                  max_len: int = 256, cache_layout: str = "contiguous",
-                 block_size: int = 16, stage_blocks=None):
+                 block_size: int = 16, stage_blocks=None,
+                 prefix_caching: bool = False, prefill_chunk: int = 0):
         assert policy in ("continuous", "static"), policy
         assert cache_layout in ("contiguous", "paged"), cache_layout
         self.replicas = list(replicas)
         self.policy = policy
         self.cache_layout = cache_layout
+        if (prefix_caching or prefill_chunk) and (
+                cache_layout != "paged" or policy == "static"):
+            warnings.warn(
+                "prefix_caching / prefill_chunk need policy='continuous' "
+                "with cache_layout='paged' (block-granular aliasing); "
+                "serving without them", stacklevel=2)
+            prefix_caching, prefill_chunk = False, 0
         if policy == "continuous" and cache_layout == "paged":
             self.workers = [PagedPipelineBatcher(
                 r, n_slots=n_slots, max_len=max_len, pad_id=pad_id,
-                block_size=block_size, stage_blocks=stage_blocks)
+                block_size=block_size, stage_blocks=stage_blocks,
+                prefix_caching=prefix_caching, prefill_chunk=prefill_chunk)
                 for r in self.replicas]
         elif policy == "continuous":
             self.workers = [PipelineBatcher(r, n_slots=n_slots,
@@ -99,7 +143,7 @@ class Router:
                     "per-generate caches); serving contiguous",
                     stacklevel=2)
             self.workers = [StaticBatcher(r, max_batch=max_batch,
-                                          pad_id=pad_id)
+                                          pad_id=pad_id, max_len=max_len)
                             for r in self.replicas]
 
     def serve(self, requests: Sequence[Request], deadline: float, *,

@@ -122,8 +122,121 @@ def test_oversized_request_rejected_not_fatal():
     with pytest.warns(UserWarning, match="rejected with empty output"):
         stats = run_serve_loop([worker], reqs, deadline=1e9,
                                clock=VirtualClock())
-    assert len(stats.latencies) == 3
+    # rejected requests finish (empty output) but are NOT served: latency
+    # percentiles and throughput cover only the one real completion
+    assert len(stats.latencies) == 1
+    assert stats.rejected == 2 and stats.dropped == 0
     assert [len(r.output) for r in reqs] == [0, 3, 0]
+
+
+class _StrandingWorker:
+    """Pathological worker: admits one request and then never runs it —
+    busy() stays False, no future event. The loop must break out and the
+    stranded request must surface as DROPPED, not as a negative latency
+    that counts toward SLO attainment."""
+
+    def __init__(self):
+        self.req = None
+
+    def capacity(self, now):
+        return 0 if self.req else 1
+
+    def load(self, now):
+        return 0
+
+    def admit(self, reqs, now):
+        self.req = reqs[0]
+
+    def busy(self, now):
+        return False               # admitted work never becomes runnable
+
+    def inflight(self):
+        return 1 if self.req else 0
+
+    def next_event(self, now):
+        return None
+
+    def run_iteration(self, now):
+        raise AssertionError("never runnable")
+
+
+def test_stranded_request_reported_dropped_not_attained():
+    """Regression: a worker stranding an inflight request used to leave
+    finish_time = 0.0, which produced a NEGATIVE latency that passed the
+    deadline check and inflated attainment + throughput."""
+    reqs = [Request(rid=0, prompt=np.zeros(3, np.int32), max_new_tokens=2,
+                    arrival=0.0),
+            Request(rid=1, prompt=np.zeros(3, np.int32), max_new_tokens=2,
+                    arrival=0.5)]
+    stats = run_serve_loop([_StrandingWorker()], reqs, deadline=1e9,
+                           clock=VirtualClock())
+    # rid 0 admitted then stranded; rid 1 never admitted (capacity 0):
+    # both are dropped, neither contributes a latency, attainment is 0
+    assert stats.dropped == 2
+    assert stats.latencies == []
+    assert stats.attainment == 0.0
+    assert stats.throughput == 0.0
+    assert all(r.finish_time is None for r in reqs)
+    stats.summary()                # degenerate summary must not crash
+
+
+def test_empty_and_all_rejected_stats_summary():
+    """Regression: ServeStats.summary() crashed on np.percentile of an
+    empty array when zero requests completed (e.g. an all-rejected
+    replay)."""
+    from repro.serving.loop import ServeStats
+    s = ServeStats.from_requests([], deadline=1.0)
+    assert s.attainment == 1.0 and s.latencies == []
+    assert "n=0" in s.summary()
+    # all-rejected: finished instantly with empty outputs
+    reqs = [Request(rid=i, prompt=np.zeros(4, np.int32), max_new_tokens=3,
+                    arrival=0.1 * i, output=np.zeros(0, np.int32),
+                    start_time=0.1 * i, finish_time=0.1 * i + 1e-3)
+            for i in range(3)]
+    s2 = ServeStats.from_requests(reqs, deadline=1.0)
+    assert s2.latencies == [] and s2.attainment == 0.0
+    assert s2.throughput == 0.0
+    assert "p50=n/a" in s2.summary()
+
+
+def test_rejected_requests_excluded_from_throughput_and_percentiles():
+    """Regression: rejected requests (near-instant empty completions) used
+    to count toward throughput and drag p50/p99 toward zero."""
+    from repro.serving.loop import ServeStats
+    served = [Request(rid=i, prompt=np.zeros(4, np.int32), max_new_tokens=2,
+                      arrival=0.0, output=np.array([1, 2], np.int32),
+                      start_time=0.0, finish_time=10.0) for i in range(2)]
+    rejected = [Request(rid=10 + i, prompt=np.zeros(99, np.int32),
+                        max_new_tokens=2, arrival=0.0,
+                        output=np.zeros(0, np.int32), start_time=0.0,
+                        finish_time=0.001) for i in range(2)]
+    stats = ServeStats.from_requests(served + rejected, deadline=1e9)
+    assert stats.latencies == [10.0, 10.0]          # rejects excluded
+    assert stats.throughput == pytest.approx(2 / 10.0)
+    assert stats.attainment == pytest.approx(0.5)   # rejects not attained
+
+
+def test_static_batcher_rejects_oversized_instead_of_crashing():
+    """Satellite: StaticBatcher gets the same oversized-request guard the
+    slot engines have — reject alone with an empty output, counted in
+    ServeStats.rejected, instead of taking down the whole replay."""
+    from repro.serving.router import StaticBatcher
+    cfg = get_config("xlstm-125m").reduced()
+    params = M.init_params(cfg, KEY)
+    pipe = _mk_pipeline(cfg, params, n_stages=2)
+    worker = StaticBatcher(pipe, max_batch=4, max_len=16)
+    rng = np.random.RandomState(0)
+    lens = [5, 29, 6]                       # ok, oversized, ok
+    reqs = [Request(rid=i, prompt=rng.randint(0, cfg.vocab_size, size=n
+                                              ).astype(np.int32),
+                    max_new_tokens=3, arrival=0.0)
+            for i, n in enumerate(lens)]
+    with pytest.warns(UserWarning, match="rejected with empty output"):
+        stats = run_serve_loop([worker], reqs, deadline=1e9,
+                               clock=VirtualClock())
+    assert stats.rejected == 1
+    assert [len(r.output) for r in reqs] == [3, 0, 3]
+    assert len(stats.latencies) == 2
 
 
 class _StubWorker:
