@@ -1,10 +1,86 @@
 """Shared helpers for the benchmark suite."""
 from __future__ import annotations
 
+import glob
+import json
+import math
+import os
 import time
 from typing import Callable, List
 
 ROWS: List[str] = []
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+
+def emit_json(filename: str, name: str, payload: dict) -> None:
+    """Append one schema-conforming row to results/<filename> — the
+    perf-trajectory files CI's --check guard validates."""
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    row = {"bench": name, **payload}
+    errs = _validate_row(row)
+    assert not errs, errs
+    with open(os.path.join(RESULTS_DIR, filename), "a") as f:
+        f.write(json.dumps(row, sort_keys=True) + "\n")
+    print("# json: " + json.dumps(row, sort_keys=True))
+
+
+def _validate_value(key: str, v) -> List[str]:
+    # bool before int: bool IS an int, and True is a fine flag value
+    if isinstance(v, bool) or isinstance(v, str):
+        return []
+    if isinstance(v, (int, float)):
+        return [] if math.isfinite(v) else \
+            [f"{key}: non-finite number {v!r}"]
+    if isinstance(v, list):
+        out: List[str] = []
+        for i, e in enumerate(v):
+            out += _validate_value(f"{key}[{i}]", e)
+        return out
+    return [f"{key}: unsupported value type {type(v).__name__}"]
+
+
+def _validate_row(row) -> List[str]:
+    """One results row: a flat-ish JSON object with a non-empty "bench"
+    name and every value a string/bool/finite number (or a list of
+    those). NaN/Infinity — the classic way a perf file silently rots —
+    is a hard error."""
+    if not isinstance(row, dict):
+        return [f"row is {type(row).__name__}, not an object"]
+    errs: List[str] = []
+    if not isinstance(row.get("bench"), str) or not row.get("bench"):
+        errs.append('missing/empty "bench" name')
+    for k, v in row.items():
+        if not isinstance(k, str) or not k:
+            errs.append(f"non-string key {k!r}")
+            continue
+        errs += _validate_value(k, v)
+    return errs
+
+
+def validate_results(results_dir: str = RESULTS_DIR) -> List[str]:
+    """Validate every results/*.jsonl row; returns human-readable errors
+    (empty = clean). Used by ``python -m benchmarks.run --check`` in CI."""
+    errors: List[str] = []
+    paths = sorted(glob.glob(os.path.join(results_dir, "*.jsonl")))
+    if not paths:
+        return [f"no *.jsonl files under {results_dir}"]
+    for path in paths:
+        rel = os.path.basename(path)
+        with open(path) as f:
+            for ln, line in enumerate(f, 1):
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    row = json.loads(
+                        line,
+                        parse_constant=lambda c: float("nan"))
+                except ValueError as e:
+                    errors.append(f"{rel}:{ln}: unparseable JSON ({e})")
+                    continue
+                errors += [f"{rel}:{ln}: {e}" for e in _validate_row(row)]
+    return errors
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:

@@ -2,6 +2,7 @@
 Prints ``name,us_per_call,derived`` CSV rows.
 
   PYTHONPATH=src python -m benchmarks.run [--only case_study,kernels] [--full]
+  PYTHONPATH=src python -m benchmarks.run --check    # validate results/*.jsonl
 """
 import argparse
 import sys
@@ -10,10 +11,11 @@ import traceback
 
 from benchmarks import (bench_case_study, bench_continuous,
                         bench_convergence, bench_cost_model,
-                        bench_dryrun_table, bench_kernels,
+                        bench_disagg, bench_dryrun_table, bench_kernels,
                         bench_layout_breakdown, bench_offline_resilience,
                         bench_paged, bench_quant_economics,
                         bench_slo_attainment, bench_swarm_compare)
+from benchmarks.common import validate_results
 
 SUITES = {
     "case_study": bench_case_study.run,             # Fig. 1
@@ -26,6 +28,7 @@ SUITES = {
     "kernels": bench_kernels.run,                   # substrate
     "continuous": bench_continuous.run,             # beyond-paper (Appx D)
     "paged": bench_paged.run,                       # beyond-paper (paged KV)
+    "disagg": bench_disagg.run,                     # beyond-paper (HexGen-2)
     "quant_economics": bench_quant_economics.run,   # beyond-paper (int8)
     "dryrun_table": bench_dryrun_table.run,         # deliverable (g)
 }
@@ -37,7 +40,19 @@ def main() -> None:
                     help="comma-separated suite names")
     ap.add_argument("--full", action="store_true",
                     help="run slow variants (both output lengths etc.)")
+    ap.add_argument("--check", action="store_true",
+                    help="validate every benchmarks/results/*.jsonl row "
+                         "against the shared schema (keys, finite "
+                         "numbers) and exit; runs no benchmarks")
     args = ap.parse_args()
+    if args.check:
+        errors = validate_results()
+        for e in errors:
+            print(f"results check: {e}", file=sys.stderr)
+        if errors:
+            sys.exit(1)
+        print("results check: all rows conform")
+        return
     names = args.only.split(",") if args.only else list(SUITES)
     print("name,us_per_call,derived")
     failed = []

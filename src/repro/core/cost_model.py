@@ -83,29 +83,41 @@ def comp_cost(cluster: Cluster, devices: Sequence[int], layers: int,
     return (scan + flops) * layers
 
 
-def comm_tp_cost(cluster: Cluster, devices: Sequence[int], layers: int,
-                 model: ModelProfile, task: Task) -> float:
-    """C_comm-tp^{i,j}: BSP AllReduce pair per layer (4 supersteps)."""
+def _tp_superstep(cluster: Cluster, devices: Sequence[int],
+                  msg_bytes: float) -> float:
     n = len(devices)
-    if n == 1:
+    best = 0.0
+    for d in devices:
+        tot = 0.0
+        for d2 in devices:
+            if d2 == d:
+                continue
+            tot += cluster.lat[d, d2] + msg_bytes / (n * cluster.bw[d, d2])
+        best = max(best, tot)
+    return best
+
+
+def comm_tp_phase(cluster: Cluster, devices: Sequence[int], layers: int,
+                  model: ModelProfile, task: Task, phase: str) -> float:
+    """One phase's share of the BSP AllReduce traffic: the prompt-wide
+    supersteps belong to prefill, the per-generated-token ones to decode."""
+    assert phase in ("prefill", "decode"), phase
+    if len(devices) == 1:
         return 0.0
     B = task.bytes_per_el
     H = model.d_model
+    if phase == "prefill":
+        return _tp_superstep(cluster, devices,
+                             task.batch * task.s_in * H * B) * 4 * layers
+    return _tp_superstep(cluster, devices,
+                         task.batch * H * B) * 4 * task.s_out * layers
 
-    def superstep(msg_bytes: float) -> float:
-        best = 0.0
-        for d in devices:
-            tot = 0.0
-            for d2 in devices:
-                if d2 == d:
-                    continue
-                tot += cluster.lat[d, d2] + msg_bytes / (n * cluster.bw[d, d2])
-            best = max(best, tot)
-        return best
 
-    prefill = superstep(task.batch * task.s_in * H * B) * 4 * layers
-    decode = superstep(task.batch * H * B) * 4 * task.s_out * layers
-    return prefill + decode
+def comm_tp_cost(cluster: Cluster, devices: Sequence[int], layers: int,
+                 model: ModelProfile, task: Task) -> float:
+    """C_comm-tp^{i,j}: BSP AllReduce pair per layer (4 supersteps)."""
+    return comm_tp_phase(cluster, devices, layers, model, task, "prefill") \
+        + comm_tp_phase(cluster, devices, layers, model, task, "decode")
 
 
 def comm_pp_cost(cluster: Cluster, stage: Sequence[int],
@@ -211,6 +223,98 @@ def concurrent_capacity(cluster: Cluster, devices: Sequence[int],
     if per_seq <= 0:
         return 1 << 30              # recurrent-only stacks: O(1) state
     return int(free // per_seq)
+
+
+# ---------------------------------------------------------------------------
+# Phase-split costs (disaggregated prefill/decode, cf. HexGen-2/DistServe)
+# ---------------------------------------------------------------------------
+# The Table-1 terms above fold both inference phases into one latency; the
+# role scheduler needs them APART, because the phases stress different
+# hardware: prefill is one compute-bound pass over the prompt (weights
+# scanned once, FLOPs over s_in tokens), decode scans the weights once per
+# generated token. The split is a modeling choice, not an identity —
+# comp_cost_phase("prefill") + comp_cost_phase("decode") differs from
+# comp_cost by one weight scan, deliberately: the combined form charges the
+# scan per output token only.
+
+def comp_cost_phase(cluster: Cluster, devices: Sequence[int], layers: int,
+                    model: ModelProfile, task: Task, phase: str) -> float:
+    """One phase's compute time on a stage's TP group."""
+    assert phase in ("prefill", "decode"), phase
+    n = len(devices)
+    B = task.bytes_per_el
+    if phase == "prefill":
+        scan = max(model.params_per_layer * B
+                   / (n * cluster.devices[d].spec.mem_bw) for d in devices)
+        flops = max(model.flops_per_layer_per_token * task.batch * task.s_in
+                    / (n * cluster.devices[d].spec.flops) for d in devices)
+    else:
+        scan = max(model.params_per_layer * B * task.s_out
+                   / (n * cluster.devices[d].spec.mem_bw) for d in devices)
+        flops = max(model.flops_per_layer_per_token * task.batch * task.s_out
+                    / (n * cluster.devices[d].spec.flops) for d in devices)
+    return (scan + flops) * layers
+
+
+def comm_pp_phase(cluster: Cluster, stage: Sequence[int],
+                  next_stage: Sequence[int], task: Task,
+                  model: ModelProfile, phase: str) -> float:
+    """One phase's share of the stage-to-stage activation relay."""
+    assert phase in ("prefill", "decode"), phase
+    B = task.bytes_per_el
+    H = model.d_model
+
+    def best(msg_bytes: float) -> float:
+        return min(cluster.lat[d, d2] + msg_bytes / cluster.bw[d, d2]
+                   for d in stage for d2 in next_stage)
+
+    if phase == "prefill":
+        return best(task.batch * task.s_in * H * B)
+    return best(task.batch * H * B) * task.s_out
+
+
+@dataclasses.dataclass(frozen=True)
+class PhaseCosts:
+    """Per-phase latency (sum over stages) and bottleneck (max stage time)
+    of one pipeline — the inputs to slo_sim.PhasedReplicaModel."""
+    prefill_latency: float
+    prefill_bottleneck: float
+    decode_latency: float
+    decode_bottleneck: float
+
+
+def pipeline_phase_costs(cluster: Cluster, stages: List[Sequence[int]],
+                         layer_split: List[int], model: ModelProfile,
+                         task: Task) -> PhaseCosts:
+    """Phase-split counterpart of pipeline_cost/pipeline_bottleneck."""
+    out = {}
+    for phase in ("prefill", "decode"):
+        total, worst = 0.0, 0.0
+        for j, (devs, l) in enumerate(zip(stages, layer_split)):
+            t = comp_cost_phase(cluster, devs, l, model, task, phase) \
+                + comm_tp_phase(cluster, devs, l, model, task, phase)
+            if j + 1 < len(stages):
+                t += comm_pp_phase(cluster, devs, stages[j + 1], task,
+                                   model, phase)
+            total += t
+            worst = max(worst, t)
+        out[phase] = (total, worst)
+    return PhaseCosts(prefill_latency=out["prefill"][0],
+                      prefill_bottleneck=out["prefill"][1],
+                      decode_latency=out["decode"][0],
+                      decode_bottleneck=out["decode"][1])
+
+
+def kv_migration_bytes(model: ModelProfile, task: Task,
+                       block_size: int = 0) -> float:
+    """Wire size of one request's prefilled KV (every layer, the whole
+    prompt, rounded up to whole blocks when paged): what a prefill->decode
+    handoff ships over the modeled link."""
+    toks = task.s_in
+    if block_size:
+        toks = -(-toks // block_size) * block_size
+    return model.kv_bytes_per_token_per_layer * toks * model.num_layers \
+        * task.batch
 
 
 # ---------------------------------------------------------------------------

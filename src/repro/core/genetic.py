@@ -146,6 +146,44 @@ class SearchResult:
     attainment: float
     history: List[Tuple[float, float]]    # (wall_seconds, best_attainment)
     evaluations: int
+    # disaggregated serving: per-pipeline role ("prefill"|"decode"),
+    # aligned with assignment.pipelines; None = colocated serving won
+    roles: Optional[List[str]] = None
+
+
+def best_role_split(models: Sequence[slo_sim.PhasedReplicaModel], *,
+                    rate: float, deadline: float, kv_bytes: float = 0.0,
+                    link_bw: float = float("inf"), link_lat: float = 0.0,
+                    delay_fn=None, duration: float = 60.0, seed: int = 0
+                    ) -> Tuple[Optional[List[str]], float]:
+    """The disaggregation search dimension: split N replicas into prefill
+    and decode roles, scored by the SLO simulator.
+
+    Candidate prefill replicas are taken in order of comparative
+    advantage (smallest prefill/decode bottleneck ratio first — the
+    compute-rich replicas); every prefill-count k in [1, N) is simulated
+    and the best attainment wins. Ties keep the SMALLEST k: decode
+    replicas hold KV for a request's whole lifetime, so spare capacity
+    belongs on the decode side. Returns (roles, attainment); (None, 0.0)
+    when fewer than two replicas exist."""
+    n = len(models)
+    if n < 2:
+        return None, 0.0
+    order = sorted(range(n), key=lambda i: (
+        models[i].prefill_bottleneck
+        / max(models[i].decode_bottleneck, 1e-12), i))
+    best_roles: Optional[List[str]] = None
+    best_att = -1.0
+    for k in range(1, n):
+        pre = set(order[:k])
+        roles = ["prefill" if i in pre else "decode" for i in range(n)]
+        att = slo_sim.simulate_disagg(
+            models, roles, rate, deadline, kv_bytes=kv_bytes,
+            link_bw=link_bw, link_lat=link_lat, delay_fn=delay_fn,
+            duration=duration, seed=seed)
+        if att > best_att:
+            best_roles, best_att = roles, att
+    return best_roles, best_att
 
 
 class Evaluator:
@@ -153,7 +191,8 @@ class Evaluator:
                  task: cm.Task, *, deadline: float, rate: float,
                  sim_duration: float = 60.0, seed: int = 0,
                  max_stages: int = 8, kv_block_size: Optional[int] = None,
-                 prefix_hit_rate: float = 0.0):
+                 prefix_hit_rate: float = 0.0,
+                 disaggregate: bool = False, kv_link_gbps: float = 0.0):
         self.cluster = cluster
         self.model = model
         self.task = task
@@ -170,8 +209,15 @@ class Evaluator:
         # blocks are resident once, serving.block_manager.PrefixIndex).
         self.kv_block_size = kv_block_size
         self.prefix_hit_rate = prefix_hit_rate
+        # disaggregated serving: score each individual colocated AND under
+        # its best prefill/decode role split (best_role_split); the KV
+        # transfer is kv_bytes over a flat kv_link_gbps link, or over the
+        # cluster's per-pair best links when kv_link_gbps <= 0
+        self.disaggregate = disaggregate
+        self.kv_link_gbps = kv_link_gbps
         self._plan_cache: Dict[FrozenSet[int], Optional[PipelinePlan]] = {}
         self._fit_cache: Dict[Individual, Tuple[float, float]] = {}
+        self._roles_cache: Dict[Individual, Optional[List[str]]] = {}
         self.evaluations = 0
 
     def _feasible(self, group: FrozenSet[int]) -> bool:
@@ -207,8 +253,37 @@ class Evaluator:
             prefix_hit_rate=self.prefix_hit_rate)
             for st in plan.stages)
 
+    def _phase_model(self, plan: PipelinePlan) -> slo_sim.PhasedReplicaModel:
+        stages = [st.device_ids for st in plan.stages]
+        pc = cm.pipeline_phase_costs(self.cluster, stages, plan.layer_split,
+                                     self.model, self.task)
+        return slo_sim.PhasedReplicaModel(
+            prefill_latency=pc.prefill_latency,
+            prefill_bottleneck=pc.prefill_bottleneck,
+            decode_latency=pc.decode_latency,
+            decode_bottleneck=pc.decode_bottleneck,
+            max_concurrent=self._max_concurrent(plan))
+
+    def _pair_delay_fn(self, plans: List[PipelinePlan], kv_bytes: float):
+        """Per-pair transfer delay over the cluster's best link from the
+        source pipeline's LAST stage to the destination's FIRST."""
+        def delay(i: int, j: int) -> float:
+            best = min((float(self.cluster.lat[a, b])
+                        + kv_bytes / float(self.cluster.bw[a, b]))
+                       for a in plans[i].stages[-1].device_ids
+                       for b in plans[j].stages[0].device_ids)
+            return best
+        return delay
+
+    def roles_for(self, ind: Individual) -> Optional[List[str]]:
+        """The role split fitness() chose for `ind` (None = colocated)."""
+        self.fitness(ind)
+        return self._roles_cache[ind]
+
     def fitness(self, ind: Individual) -> Tuple[float, float]:
-        """(SLO attainment, -mean latency) to maximize lexicographically."""
+        """(SLO attainment, -mean latency) to maximize lexicographically.
+        With disaggregate=True the attainment is the better of colocated
+        serving and the best prefill/decode role split."""
         if ind in self._fit_cache:
             return self._fit_cache[ind]
         self.evaluations += 1
@@ -218,6 +293,23 @@ class Evaluator:
                 for p in asg.pipelines]
         att = slo_sim.simulate(reps, self.rate, self.deadline,
                                duration=self.sim_duration, seed=self.seed)
+        roles = None
+        if self.disaggregate and len(asg.pipelines) >= 2:
+            models = [self._phase_model(p) for p in asg.pipelines]
+            kv_bytes = cm.kv_migration_bytes(self.model, self.task,
+                                             self.kv_block_size or 0)
+            if self.kv_link_gbps > 0:
+                kw = dict(kv_bytes=kv_bytes,
+                          link_bw=self.kv_link_gbps * 1e9 / 8)
+            else:
+                kw = dict(delay_fn=self._pair_delay_fn(asg.pipelines,
+                                                       kv_bytes))
+            d_roles, d_att = best_role_split(
+                models, rate=self.rate, deadline=self.deadline,
+                duration=self.sim_duration, seed=self.seed, **kw)
+            if d_roles is not None and d_att > att:
+                att, roles = d_att, d_roles
+        self._roles_cache[ind] = roles
         mean_lat = np.mean([p.cost for p in asg.pipelines]) if asg.pipelines \
             else float("inf")
         out = (att, -mean_lat)
@@ -231,13 +323,17 @@ def search(cluster: Cluster, model: cm.ModelProfile, task: cm.Task, *,
            sim_duration: float = 60.0, max_stages: int = 8,
            kv_block_size: Optional[int] = None,
            prefix_hit_rate: float = 0.0,
+           disaggregate: bool = False, kv_link_gbps: float = 0.0,
            init: Optional[List[Individual]] = None) -> SearchResult:
-    """The full two-phase search: genetic over partitions, DP inside."""
+    """The full two-phase search: genetic over partitions, DP inside.
+    disaggregate=True adds the prefill/decode role split as a scored
+    search dimension (SearchResult.roles)."""
     rng = np.random.default_rng(seed)
     ev = Evaluator(cluster, model, task, deadline=deadline, rate=rate,
                    sim_duration=sim_duration, seed=seed,
                    max_stages=max_stages, kv_block_size=kv_block_size,
-                   prefix_hit_rate=prefix_hit_rate)
+                   prefix_hit_rate=prefix_hit_rate,
+                   disaggregate=disaggregate, kv_link_gbps=kv_link_gbps)
     if init is None:
         if mutation == "hexgen":
             pop = kmeans_init(cluster, rng)
@@ -274,4 +370,5 @@ def search(cluster: Cluster, model: cm.ModelProfile, task: cm.Task, *,
     best = scored[0][1]
     asg = ev.assignment(best)
     return SearchResult(assignment=asg, attainment=scored[0][0][0],
-                        history=history, evaluations=ev.evaluations)
+                        history=history, evaluations=ev.evaluations,
+                        roles=ev.roles_for(best))

@@ -15,7 +15,9 @@ def schedule(cluster: Cluster, arch: str, task: cm.Task, *,
              seed: int = 0, mutation: str = "hexgen",
              paper_exact: bool = False,
              max_stages: int = 8, kv_block_size=None,
-             prefix_hit_rate: float = 0.0) -> SearchResult:
+             prefix_hit_rate: float = 0.0,
+             disaggregate: bool = False,
+             kv_link_gbps: float = 0.0) -> SearchResult:
     """Find an assignment of `cluster` serving `arch` replicas.
 
     deadline: SLO latency bound (s); rate: request rate (req/s).
@@ -26,6 +28,14 @@ def schedule(cluster: Cluster, arch: str, task: cm.Task, *,
     expected fraction of prompt tokens served from the prefix cache
     (serving prefix_caching=True): the capacity bound then plans against
     the effective, DEDUPLICATED per-sequence KV demand.
+
+    disaggregate=True adds the prefill/decode ROLE SPLIT as a search
+    dimension: every candidate replica set is also scored under its best
+    role assignment (phase-split costs + the SLO simulator's phased
+    workers), with the KV handoff modeled over a flat kv_link_gbps link
+    (<= 0: the cluster's per-pair best links). The winning split lands in
+    SearchResult.roles (None when colocated serving won), aligned with
+    assignment.pipelines — pass it to InferenceEngine(roles=...).
     """
     cfg = get_config(arch)
     profile = cm.ModelProfile.from_config(cfg, paper_exact=paper_exact,
@@ -34,6 +44,8 @@ def schedule(cluster: Cluster, arch: str, task: cm.Task, *,
                          rate=rate, iters=iters, seed=seed,
                          mutation=mutation, max_stages=max_stages,
                          kv_block_size=kv_block_size,
-                         prefix_hit_rate=prefix_hit_rate)
+                         prefix_hit_rate=prefix_hit_rate,
+                         disaggregate=disaggregate,
+                         kv_link_gbps=kv_link_gbps)
     res.assignment.validate(cfg.num_layers)
     return res

@@ -8,6 +8,7 @@ interpret mode by tests). The oracles live in ref.py.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from functools import partial
 from typing import Optional
@@ -28,6 +29,19 @@ def set_backend(name: str) -> None:
 
 def get_backend() -> str:
     return _BACKEND
+
+
+@contextlib.contextmanager
+def backend(name: str):
+    """Scoped backend switch: ``with ops.backend("pallas_interpret"): ...``
+    restores the previous backend even on error, so a failing kernel check
+    can't leak the global into every later test in the process."""
+    prev = _BACKEND
+    set_backend(name)
+    try:
+        yield
+    finally:
+        set_backend(prev)
 
 
 # ---------------------------------------------------------------------------

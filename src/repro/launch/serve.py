@@ -96,6 +96,16 @@ def main() -> None:
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="generate prompts with this many shared system-"
                          "prompt tokens (exercises the prefix cache)")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="split prefill and decode across replicas: the "
+                         "scheduler also searches the role split, prefill "
+                         "replicas hand finished KV pages to decode "
+                         "replicas over the modeled link (paged layout, "
+                         ">= 2 replicas)")
+    ap.add_argument("--kv-link-gbps", type=float, default=0.0,
+                    help="flat bandwidth of the prefill->decode KV link in "
+                         "Gbit/s (0 = per-pair costs from the cluster's "
+                         "comm matrices)")
     args = ap.parse_args()
 
     if args.prefix_hit_rate and args.cache_layout != "paged":
@@ -113,13 +123,23 @@ def main() -> None:
                    s_out=args.out_len)
     print(f"scheduling {args.arch} on {args.cluster} "
           f"({len(pool)} GPUs, ${pool.price_per_hour:.2f}/h)...")
+    if args.disaggregate and args.cache_layout != "paged":
+        import warnings
+        warnings.warn(
+            "--disaggregate needs --cache-layout paged (the KV handoff is "
+            "a page transfer); serving colocated", stacklevel=1)
+        args.disaggregate = False
     res = schedule(pool, args.arch, task, deadline=args.deadline,
                    rate=args.rate, iters=args.search_iters, seed=args.seed,
                    kv_block_size=(args.block_size
                                   if args.cache_layout == "paged" else None),
-                   prefix_hit_rate=args.prefix_hit_rate)
+                   prefix_hit_rate=args.prefix_hit_rate,
+                   disaggregate=args.disaggregate,
+                   kv_link_gbps=args.kv_link_gbps)
     print(f"  assignment: {res.assignment.describe()}")
     print(f"  estimated SLO attainment: {res.attainment*100:.1f}%")
+    if args.disaggregate:
+        print(f"  roles: {res.roles if res.roles is not None else 'colocated'}")
 
     cfg = cfg_full.reduced() if args.reduced else cfg_full
     asg = scale_assignment(res.assignment, cfg_full.num_layers,
@@ -132,7 +152,16 @@ def main() -> None:
                              cache_layout=args.cache_layout,
                              block_size=args.block_size,
                              prefix_caching=args.prefix_caching,
-                             prefill_chunk=args.prefill_chunk)
+                             prefill_chunk=args.prefill_chunk,
+                             # the role split is the SCHEDULER's verdict:
+                             # roles=None means colocated serving won the
+                             # search, so don't force a default split
+                             disaggregate=(args.disaggregate
+                                           and res.roles is not None),
+                             roles=res.roles if args.disaggregate else None,
+                             kv_link_gbps=args.kv_link_gbps,
+                             cluster=(pool if args.disaggregate
+                                      and args.kv_link_gbps <= 0 else None))
     if args.shared_prefix:
         reqs = shared_prefix_workload(
             rate=args.rate, duration=args.duration, vocab=cfg.vocab_size,

@@ -141,6 +141,15 @@ class BlockTable:
             self.pool.free(b)
         self.blocks.clear()
 
+    def adopt(self, blocks: Sequence[int]) -> None:
+        """Append already-referenced block ids to the table, taking over
+        their references — the landing step of prefix aliasing
+        (``PrefixIndex.acquire``) and KV migration placement, where the
+        references were created on this table's behalf before the blocks
+        reach it. The table releases them like any block it allocated."""
+        assert not (set(blocks) & set(self.blocks)), "block adopted twice"
+        self.blocks.extend(int(b) for b in blocks)
+
     def fork(self) -> "BlockTable":
         """Alias every block (refcount++) — the prefix-sharing enabler.
         Callers must copy-on-write before mutating a shared block."""

@@ -27,6 +27,7 @@ and accounting live there, not here.
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import warnings
 from collections import deque
 from typing import Deque, Dict, List, Optional, Sequence
@@ -39,6 +40,7 @@ from repro.configs.base import ModelConfig
 from repro.models import model as M
 from repro.serving.block_manager import (BlockPool, BlockTable, PrefixIndex,
                                          blocks_for_tokens, chunk_hashes)
+from repro.serving.disagg import KVMigration
 from repro.serving.loop import (ServeStats, VirtualClock, WallClock,
                                 run_serve_loop)
 from repro.serving.request import Request
@@ -356,6 +358,28 @@ class PagedPipelineBatcher(SlotEngine):
     token that fraction of an iteration, so chunking and prefix hits show
     up in simulated TTFT/latency instead of hiding behind a flat
     per-iteration cost; 0.0 keeps the PR-2 flat-cost accounting.
+
+    ``role`` splits the two inference phases across replicas (disaggregated
+    serving, serving.disagg):
+
+      * "both"    — colocated serving, the default: prefill and decode on
+        this replica.
+      * "prefill" — this replica only prefills. A slot whose prompt is
+        fully cached is EXTRACTED (page payloads + cached token count +
+        last logits) and handed to ``self.dispatcher`` instead of
+        decoding; its blocks free immediately (index-registered prefix
+        blocks stay resident for future prompts). The router never needs
+        to know: completions simply arrive from the decode replica.
+      * "decode"  — this replica admits no fresh arrivals
+        (``capacity() == 0``); work arrives via ``migrate_in`` as
+        in-transit migrations that land in free slots once their transfer
+        delay elapses, resuming decode from the migrated pages and logits
+        bit-identically to colocated serving. A preempted migrated slot
+        falls back to local recompute (this is still a full replica).
+
+    Disaggregation needs an attention-only stack: KV pages are the whole
+    per-request state, so the handoff is a page transfer; recurrent
+    running state has no page identity to ship.
     """
 
     def __init__(self, pipeline, *, n_slots: int = 8, max_len: int = 256,
@@ -364,12 +388,18 @@ class PagedPipelineBatcher(SlotEngine):
                  admit_headroom: Optional[int] = None, pad_id: int = 0,
                  virtual_step_cost: float = 1.0,
                  prefix_caching: bool = False, prefill_chunk: int = 0,
-                 prefill_token_cost: float = 0.0):
+                 prefill_token_cost: float = 0.0,
+                 role: str = "both", replica_id: int = 0):
         from repro.serving.pipeline import (context_mode_supported,
                                             slot_mode_supported)
         assert slot_mode_supported(pipeline.cfg), \
             "slot mode needs uniform text decode; use StaticBatcher"
         assert max_len % block_size == 0, (max_len, block_size)
+        assert role in ("both", "prefill", "decode"), role
+        if role != "both":
+            assert context_mode_supported(pipeline.cfg), \
+                "disaggregation needs an attention-only stack (recurrent " \
+                "running state has no pages to migrate)"
         if ((prefix_caching or prefill_chunk)
                 and not context_mode_supported(pipeline.cfg)):
             warnings.warn(
@@ -421,12 +451,22 @@ class PagedPipelineBatcher(SlotEngine):
         self._prefix: List[Optional[PrefixIndex]] = [
             PrefixIndex(p) if (prefix_caching and p is not None) else None
             for p in self._pools]
+        # ---- disaggregated prefill/decode ------------------------------
+        self.role = role
+        self.replica_id = replica_id
+        # set by serving.disagg.wire_disaggregation (role="prefill" only)
+        self.dispatcher = None
+        # in-transit migrations: heap of (ready_time, seq, KVMigration)
+        self._migrations: List = []
+        self._mig_seq = 0
         # counters surfaced through ServeStats (loop reports deltas)
         self.prefix_lookups = 0
         self.prefix_hits = 0
         self.prefix_hit_tokens = 0
         self.prefill_tokens = 0
         self.cow_copies = 0
+        self.migrations = 0            # prefills handed off (sender side)
+        self.migrated_kv_bytes = 0     # payload bytes shipped (sender side)
         self._iter_prefill_tokens = 0
 
     # ---- block accounting -------------------------------------------------
@@ -457,7 +497,10 @@ class PagedPipelineBatcher(SlotEngine):
         """Admission switches from "free slot" to "enough blocks": the loop
         may only hand us another request if, beyond the queued ones' needs,
         a typical request's prompt + headroom still fits every stage
-        pool."""
+        pool. A decode-role replica admits NO fresh arrivals — its work
+        arrives as migrations."""
+        if self.role == "decode":
+            return 0
         slots = len(self.free_slots()) - len(self._queue)
         if slots <= 0:
             return 0
@@ -465,6 +508,113 @@ class PagedPipelineBatcher(SlotEngine):
         if self._min_pool_free() < queued + self._typical_blocks():
             return 0
         return slots
+
+    def load(self, now: float) -> float:
+        # in-transit migrations are queue depth too: the dispatcher picks
+        # decode replicas by this number
+        return super().load(now) + len(self._migrations)
+
+    def busy(self, now: float) -> bool:
+        if super().busy(now):
+            return True
+        return bool(self._migrations) and self._migrations[0][0] <= now
+
+    def inflight(self) -> int:
+        return super().inflight() + len(self._migrations)
+
+    def next_event(self, now: float):
+        # earliest in-transit migration arrival: the idle loop must jump
+        # there, not strand the request
+        if self._migrations and self._migrations[0][0] > now:
+            return self._migrations[0][0]
+        return None
+
+    # ---- KV migration (disaggregated prefill/decode) -----------------------
+    def migrate_in(self, mig: KVMigration, ready: float) -> None:
+        """Accept a finished prefill from another replica; it becomes
+        placeable once the serving clock reaches `ready` (the modeled
+        transfer completion)."""
+        assert mig.block_size == self.block_size, \
+            (mig.block_size, self.block_size)
+        heapq.heappush(self._migrations, (ready, self._mig_seq, mig))
+        self._mig_seq += 1
+
+    def _place_migrations(self, now: float) -> List:
+        """Land every arrived migration a free slot + blocks can take:
+        allocate each stage's blocks, scatter the page payloads, and seed
+        the slot at the migrated position with the migrated sampling state
+        — the next decode iteration continues exactly where the prefill
+        replica stopped. Returns reject completions (a migration whose
+        full generation can never fit this replica's pools)."""
+        comps: List = []
+        while self._migrations and self._migrations[0][0] <= now:
+            mig = self._migrations[0][2]
+            r = mig.req
+            need_all = blocks_for_tokens(
+                mig.n_tokens + r.max_new_tokens, self.block_size)
+            if need_all > self._usable_blocks() \
+                    or mig.n_tokens + r.max_new_tokens > self.max_len - 1:
+                heapq.heappop(self._migrations)
+                self.rejected += 1
+                warnings.warn(
+                    f"request {r.rid}: migrated KV ({mig.n_tokens} tokens) "
+                    f"+ max_new {r.max_new_tokens} cannot fit this decode "
+                    "replica; rejected with empty output")
+                comps.append((r, np.zeros(0, np.int32), None))
+                continue
+            free = self.free_slots()
+            need_now = blocks_for_tokens(
+                mig.n_tokens + min(self.admit_headroom, r.max_new_tokens),
+                self.block_size)
+            if not free or self._min_pool_free() < need_now:
+                break                  # wait for slots/blocks to free
+            heapq.heappop(self._migrations)
+            self._ensure_device_caches()
+            slot = free[0]
+            dest = []
+            for si, tabs in enumerate(self._tables):
+                if tabs is None:
+                    dest.append(None)
+                    continue
+                t = tabs[slot]
+                assert not t.blocks, "slot freed without releasing blocks"
+                ok = self._stage_alloc(si, t, mig.n_tokens)
+                assert ok, "placement checked free blocks yet ran dry"
+                dest.append(list(t.blocks))
+            self.pipeline.scatter_kv_pages(dest, mig.layer_kv)
+            self.slots[slot] = _Slot(req=r, pos=mig.n_tokens,
+                                     remaining=r.max_new_tokens, out=[],
+                                     seq=self._admit_seq)
+            self._admit_seq += 1
+            self._last_logits[slot] = mig.last_logits
+            self._bt_cache = None
+        return comps
+
+    def _migrate_ready(self, now: float) -> None:
+        """Hand every prefill-complete slot to the dispatcher: extract its
+        pages and sampling state, free its blocks (index-registered prefix
+        blocks stay resident), and clear the slot. Oldest first, so
+        dispatch order matches admission order."""
+        assert self.dispatcher is not None, \
+            "role='prefill' needs wire_disaggregation to set a dispatcher"
+        order = sorted((i for i, s in enumerate(self.slots)
+                        if s.decoding), key=lambda i: self.slots[i].seq)
+        for i in order:
+            s = self.slots[i]
+            blocks = [list(tabs[i].blocks) if tabs is not None else None
+                      for tabs in self._tables]
+            layer_kv = self.pipeline.extract_kv_pages(blocks)
+            mig = KVMigration(
+                req=s.req, n_tokens=s.pos, block_size=self.block_size,
+                layer_kv=layer_kv,
+                last_logits=np.array(self._last_logits[i]),
+                kv_bytes=KVMigration.payload_bytes(layer_kv))
+            s.req.prefill_finish_time = now
+            self.migrations += 1
+            self.migrated_kv_bytes += mig.kv_bytes
+            self.dispatcher.send(self, mig, now)
+            self._on_slot_free(i)
+            self.slots[i] = _Slot()
 
     # ---- SlotEngine hooks --------------------------------------------------
     def _fits(self, r: Request) -> bool:
@@ -582,7 +732,7 @@ class PagedPipelineBatcher(SlotEngine):
                 continue
             t = tabs[i]
             assert not t.blocks, "slot freed without releasing"
-            t.blocks.extend(ix.acquire(s.hashes[:L]))
+            t.adopt(ix.acquire(s.hashes[:L]))
         # always leave >= 1 cold token: the final logits must come from a
         # real forward pass (a fully cached prompt re-runs its last token,
         # copy-on-write duplicating the shared tail block)
@@ -746,19 +896,26 @@ class PagedPipelineBatcher(SlotEngine):
     def _step(self, now: float):
         if self._incremental:
             self._prefill_step(now)
+        if self.role == "prefill":
+            self._migrate_ready(now)   # hand off instead of decoding
+            return []
         if any(s.decoding for s in self.slots):
             return self._decode_iteration(now)
         return []                  # every occupied slot is still prefilling
 
     def run_iteration(self, now: float):
         self._iter_prefill_tokens = 0
+        # land arrived migrations BEFORE the base iteration so their slots
+        # join this very decode step (mirrors colocated serving, where a
+        # prefill finishing in iteration i decodes its first token in i)
+        mig_comps = self._place_migrations(now) if self._migrations else []
         comps, cost = super().run_iteration(now)
         # virtual accounting: charge prefilled tokens a fraction of an
         # iteration so chunking/prefix hits show up in simulated latency
         if self._iter_prefill_tokens and self.prefill_token_cost:
             cost += (self.virtual_step_cost * self.prefill_token_cost
                      * self._iter_prefill_tokens)
-        return comps, cost
+        return mig_comps + comps, cost
 
     def _decode_all(self, toks, pos):
         if self._bt_cache is None:

@@ -17,19 +17,35 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.plan import Assignment
 from repro.models import model as M
-from repro.serving.pipeline import AsymmetricPipeline, slot_mode_supported
+from repro.serving.disagg import KVLink
+from repro.serving.pipeline import (AsymmetricPipeline,
+                                    context_mode_supported,
+                                    slot_mode_supported)
 from repro.serving.request import Request
-from repro.serving.router import Router, ServeStats
+from repro.serving.router import Router, ServeStats, default_roles
 
 
 class InferenceEngine:
+    """``disaggregate=True`` splits the inference phases across replicas:
+    arrivals prefill on ``role="prefill"`` replicas and their KV pages
+    migrate to ``role="decode"`` replicas (serving.disagg). ``roles``
+    overrides the default split (e.g. the scheduler's SLO-scored one);
+    the transfer is modeled as ``kv_bytes / link_bandwidth`` on the
+    serving clock — flat via ``kv_link_gbps`` (0 = ideal interconnect),
+    or per-replica-pair from ``cluster``'s comm matrices when given."""
+
     def __init__(self, cfg: ModelConfig, assignment: Assignment, *,
                  params=None, key=None, devices: Optional[Sequence] = None,
                  max_batch: int = 4, quantize: bool = False,
                  policy: str = "continuous", n_slots: int = 8,
                  max_len: int = 256, cache_layout: str = "contiguous",
                  block_size: int = 16, stage_blocks=None,
-                 prefix_caching: bool = False, prefill_chunk: int = 0):
+                 prefix_caching: bool = False, prefill_chunk: int = 0,
+                 disaggregate: bool = False,
+                 roles: Optional[Sequence[str]] = None,
+                 kv_link_gbps: float = 0.0, cluster=None,
+                 step_costs: Optional[Sequence[float]] = None,
+                 prefill_token_cost: float = 0.0):
         self.cfg = cfg
         devices = list(devices if devices is not None else jax.devices())
         if params is None:
@@ -55,13 +71,47 @@ class InferenceEngine:
                 "(SWA ring cache / encoder-decoder / VLM); serving with "
                 "policy='static'", stacklevel=2)
             policy = "static"
+        # ---- disaggregated prefill/decode ------------------------------
+        if disaggregate and roles is None:
+            roles = default_roles(len(self.replicas))
+        if roles is not None and any(r != "both" for r in roles):
+            if not context_mode_supported(cfg):
+                warnings.warn(
+                    f"{cfg.name}: disaggregation needs an attention-only "
+                    "stack (recurrent running state has no pages to "
+                    "migrate); serving colocated", stacklevel=2)
+                roles = None
+            elif len(self.replicas) < 2:
+                warnings.warn(
+                    "disaggregation needs >= 2 replicas; serving "
+                    "colocated", stacklevel=2)
+                roles = None
+        kv_link = None
+        if roles is not None and any(r != "both" for r in roles):
+            if cluster is not None:
+                # per-pair alpha-beta costs: source replica's LAST stage to
+                # destination replica's FIRST stage, like the cost model's
+                # pipeline-comm term
+                src = [list(p.stages[-1].device_ids)
+                       for p in assignment.pipelines]
+                dst = [list(p.stages[0].device_ids)
+                       for p in assignment.pipelines]
+                kv_link = KVLink.from_cluster(
+                    cluster, [p.device_ids for p in assignment.pipelines],
+                    src_stage_devices=src, dst_stage_devices=dst)
+            else:
+                kv_link = KVLink(gbps=kv_link_gbps)
         self.router = Router(self.replicas, max_batch=max_batch,
                              policy=policy, n_slots=n_slots, max_len=max_len,
                              cache_layout=cache_layout,
                              block_size=block_size,
                              stage_blocks=stage_blocks,
                              prefix_caching=prefix_caching,
-                             prefill_chunk=prefill_chunk)
+                             prefill_chunk=prefill_chunk,
+                             roles=roles, kv_link=kv_link,
+                             step_costs=step_costs,
+                             prefill_token_cost=prefill_token_cost)
+        self.roles = self.router.roles
 
     def generate(self, prompts: Sequence[np.ndarray], *, max_new: int = 16
                  ) -> List[np.ndarray]:

@@ -105,6 +105,9 @@ class ServeStats:
     prefix_hit_tokens: int = 0     # prompt tokens served from resident blocks
     prefill_tokens: int = 0        # cold prompt tokens actually prefilled
     cow_copies: int = 0            # shared blocks copied before a write
+    # disaggregated prefill/decode (role="prefill" workers, sender side)
+    migrations: int = 0            # finished prefills handed to a decoder
+    migrated_kv_bytes: int = 0     # KV payload bytes shipped over the link
 
     def summary(self) -> str:
         lat = np.asarray(self.latencies)
@@ -119,6 +122,9 @@ class ServeStats:
             extra = (f" hit={hit * 100:.0f}% "
                      f"saved={self.prefix_hit_tokens}tok "
                      f"cow={self.cow_copies}")
+        if self.migrations:
+            extra += (f" mig={self.migrations} "
+                      f"({self.migrated_kv_bytes / 1e6:.2f}MB)")
         return (f"n={len(lat)} {pct}"
                 f"slo={self.attainment * 100:.1f}% thpt={self.throughput:.2f} req/s "
                 f"rej={self.rejected} drop={self.dropped} "
@@ -169,7 +175,8 @@ def run_serve_loop(workers: Sequence, requests: Sequence, *, deadline: float,
     iterations = 0
     # workers persist across serve() calls: report this replay's deltas
     counters = ("rejected", "preemptions", "prefix_lookups", "prefix_hits",
-                "prefix_hit_tokens", "prefill_tokens", "cow_copies")
+                "prefix_hit_tokens", "prefill_tokens", "cow_copies",
+                "migrations", "migrated_kv_bytes")
     base = {c: sum(getattr(w, c, 0) for w in workers) for c in counters}
     while idx < len(pending) or any(w.inflight() for w in workers):
         now = clock.now()

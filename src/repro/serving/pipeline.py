@@ -79,6 +79,8 @@ class StageExecutor:
                                           donate_argnums=(1,))
         self._copy_pages_jit = jax.jit(self._stage_copy_pages,
                                        donate_argnums=(0,))
+        self._scatter_pages_jit = jax.jit(self._stage_scatter_pages,
+                                          donate_argnums=(0,))
 
     @property
     def has_attn(self) -> bool:
@@ -129,6 +131,18 @@ class StageExecutor:
         in place instead of materializing a copy of each one."""
         return [M.copy_cache_pages(c, src, dst, stacked=False)
                 for c in caches]
+
+    def _stage_scatter_pages(self, caches, dst, payload):
+        """Write migrated-in page payloads (one {"k","v"} pytree per layer
+        of this stage, leading axis = len(dst) blocks) into the pools at
+        block ids `dst` (KV migration landing)."""
+        out = []
+        for c, p in zip(caches, payload):
+            c = dict(c)
+            for n in ("k", "v"):
+                c[n] = c[n].at[dst].set(p[n].astype(c[n].dtype))
+            out.append(c)
+        return out
 
     # ---- cache ------------------------------------------------------------
     def make_caches(self, batch: int, max_len: int):
@@ -450,6 +464,55 @@ class AsymmetricPipeline:
                     x, self.paged_caches[si], positions, lens, bt)
         x_last = x[jnp.arange(m), lens - 1][:, None]
         return np.asarray(self._head(x_last)[:, 0])
+
+    # ---- KV migration (disaggregated prefill/decode) -----------------------
+    # The wire format is per-GLOBAL-LAYER so the source and destination
+    # pipelines may split their stages differently: stage si's single block
+    # table addresses every one of ITS layers' page pools, but each layer
+    # owns its own K/V arrays, so regrouping layers across stages is just a
+    # different iteration order over the same per-layer payloads.
+
+    def extract_kv_pages(self, stage_blocks: Sequence[Optional[Sequence[int]]]
+                         ) -> List[dict]:
+        """Gather the page CONTENTS of each stage's block list into host
+        arrays: returns ``layer_kv[l] = {"k","v"}`` of shape
+        (n_blocks, block_size, kv_heads, head_dim) for every global layer l,
+        in layer order. ``stage_blocks[si]`` is the (ordered) physical block
+        list of one request on stage si — whole blocks, so a partial tail
+        block ships its masked garbage rather than a ragged slice.
+        Attention-only stacks (recurrent state has no page identity)."""
+        assert self.paged_caches is not None, "no paged caches to extract"
+        layer_kv: List[dict] = []
+        for si, st in enumerate(self.stages):
+            blocks = np.asarray(stage_blocks[si], np.int32)
+            for c in self.paged_caches[si]:
+                assert "k" in c and "v" in c, \
+                    "KV migration covers attention-only stacks"
+                layer_kv.append({"k": np.asarray(c["k"][blocks]),
+                                 "v": np.asarray(c["v"][blocks])})
+        return layer_kv
+
+    def scatter_kv_pages(self, stage_blocks: Sequence[Optional[Sequence[int]]],
+                         layer_kv: Sequence[dict]) -> None:
+        """Migrate-in: write per-layer page payloads (extract_kv_pages wire
+        format, possibly from a pipeline with a DIFFERENT stage split) into
+        this pipeline's pools at each stage's freshly allocated block list.
+        Jitted with donation per stage so the pools update in place; one
+        compile per distinct payload block count."""
+        assert self.paged_caches is not None, "call init_paged_caches first"
+        li = 0
+        for si, st in enumerate(self.stages):
+            n_layers = st.hi - st.lo
+            payload = [
+                {"k": jnp.asarray(layer_kv[li + k]["k"]),
+                 "v": jnp.asarray(layer_kv[li + k]["v"])}
+                for k in range(n_layers)]
+            li += n_layers
+            with st.mesh:
+                self.paged_caches[si] = st._scatter_pages_jit(
+                    self.paged_caches[si],
+                    jnp.asarray(stage_blocks[si], jnp.int32), payload)
+        assert li == len(layer_kv), (li, len(layer_kv))
 
     def copy_pages(self, stage_idx: int, src_blocks: Sequence[int],
                    dst_blocks: Sequence[int]) -> None:

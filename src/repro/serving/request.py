@@ -20,6 +20,9 @@ class Request:
     start_time: Optional[float] = None
     finish_time: Optional[float] = None
     first_token_time: Optional[float] = None   # TTFT (prefix/chunk benches)
+    # disaggregated serving: when the prefill replica handed the KV off
+    # (first_token_time - prefill_finish_time = transfer + decode queueing)
+    prefill_finish_time: Optional[float] = None
 
     @property
     def latency(self) -> float:

@@ -16,10 +16,21 @@ from typing import List, Optional, Sequence
 import numpy as np
 
 from repro.serving.continuous import PagedPipelineBatcher, PipelineBatcher
+from repro.serving.disagg import KVLink, wire_disaggregation
 from repro.serving.loop import ServeStats, WallClock, run_serve_loop
 from repro.serving.request import Request
 
-__all__ = ["Router", "ServeStats", "StaticBatcher"]
+__all__ = ["Router", "ServeStats", "StaticBatcher", "default_roles"]
+
+
+def default_roles(n_replicas: int) -> List[str]:
+    """Default disaggregated role split: decode replicas hold KV for a
+    request's whole lifetime while prefill replicas turn requests over per
+    prompt, so lean decode-heavy — floor(n/3) prefill replicas, at least
+    one of each. The scheduler's role search (core.genetic) replaces this
+    with an SLO-scored split."""
+    n_prefill = max(1, n_replicas // 3)
+    return ["prefill"] * n_prefill + ["decode"] * (n_replicas - n_prefill)
 
 
 class StaticBatcher:
@@ -112,7 +123,11 @@ class Router:
                  policy: str = "continuous", n_slots: int = 8,
                  max_len: int = 256, cache_layout: str = "contiguous",
                  block_size: int = 16, stage_blocks=None,
-                 prefix_caching: bool = False, prefill_chunk: int = 0):
+                 prefix_caching: bool = False, prefill_chunk: int = 0,
+                 roles: Optional[Sequence[str]] = None,
+                 kv_link: Optional[KVLink] = None,
+                 prefill_token_cost: float = 0.0,
+                 step_costs: Optional[Sequence[float]] = None):
         assert policy in ("continuous", "static"), policy
         assert cache_layout in ("contiguous", "paged"), cache_layout
         self.replicas = list(replicas)
@@ -125,16 +140,48 @@ class Router:
                 "with cache_layout='paged' (block-granular aliasing); "
                 "serving without them", stacklevel=2)
             prefix_caching, prefill_chunk = False, 0
+        # disaggregated prefill/decode: role-tagged paged replicas + a KV
+        # dispatcher wiring prefill workers to decode workers
+        if roles is not None and any(r != "both" for r in roles):
+            from repro.serving.pipeline import context_mode_supported
+            if (cache_layout != "paged" or policy == "static"
+                    or len(self.replicas) < 2):
+                warnings.warn(
+                    "disaggregated roles need policy='continuous' with "
+                    "cache_layout='paged' and >= 2 replicas (the KV "
+                    "handoff is a page transfer); serving colocated",
+                    stacklevel=2)
+                roles = None
+            elif self.replicas and not context_mode_supported(
+                    self.replicas[0].cfg):
+                warnings.warn(
+                    "disaggregation needs an attention-only stack "
+                    "(recurrent running state has no pages to migrate); "
+                    "serving colocated", stacklevel=2)
+                roles = None
+        self.roles = list(roles) if roles is not None \
+            else ["both"] * len(self.replicas)
+        assert len(self.roles) == len(self.replicas), (roles,)
+        if step_costs is None:
+            step_costs = [1.0] * len(self.replicas)
+        assert len(step_costs) == len(self.replicas)
         if policy == "continuous" and cache_layout == "paged":
             self.workers = [PagedPipelineBatcher(
                 r, n_slots=n_slots, max_len=max_len, pad_id=pad_id,
                 block_size=block_size, stage_blocks=stage_blocks,
-                prefix_caching=prefix_caching, prefill_chunk=prefill_chunk)
-                for r in self.replicas]
+                prefix_caching=prefix_caching, prefill_chunk=prefill_chunk,
+                prefill_token_cost=prefill_token_cost,
+                virtual_step_cost=sc, role=role, replica_id=i)
+                for i, (r, role, sc) in enumerate(
+                    zip(self.replicas, self.roles, step_costs))]
+            self.dispatcher = wire_disaggregation(self.workers, self.roles,
+                                                  kv_link)
         elif policy == "continuous":
             self.workers = [PipelineBatcher(r, n_slots=n_slots,
-                                            max_len=max_len, pad_id=pad_id)
-                            for r in self.replicas]
+                                            max_len=max_len, pad_id=pad_id,
+                                            virtual_step_cost=sc)
+                            for r, sc in zip(self.replicas, step_costs)]
+            self.dispatcher = None
         else:
             if cache_layout == "paged":
                 warnings.warn(
@@ -143,8 +190,10 @@ class Router:
                     "per-generate caches); serving contiguous",
                     stacklevel=2)
             self.workers = [StaticBatcher(r, max_batch=max_batch,
-                                          pad_id=pad_id, max_len=max_len)
-                            for r in self.replicas]
+                                          pad_id=pad_id, max_len=max_len,
+                                          virtual_step_cost=sc)
+                            for r, sc in zip(self.replicas, step_costs)]
+            self.dispatcher = None
 
     def serve(self, requests: Sequence[Request], deadline: float, *,
               clock=None) -> ServeStats:

@@ -232,3 +232,19 @@ def test_ssm_chunk_invariance(b, s, din, ds):
     for y, h in outs[1:]:
         np.testing.assert_allclose(y, outs[0][0], atol=1e-4)
         np.testing.assert_allclose(h, outs[0][1], atol=1e-4)
+
+
+def test_backend_context_manager_restores_on_error():
+    """`with ops.backend(...)` must restore the global backend even when
+    the body raises — the try/finally dance it replaces leaked state."""
+    assert ops.get_backend() == "xla"
+    with ops.backend("pallas_interpret"):
+        assert ops.get_backend() == "pallas_interpret"
+        with ops.backend("pallas"):           # nests, restores one level
+            assert ops.get_backend() == "pallas"
+        assert ops.get_backend() == "pallas_interpret"
+    assert ops.get_backend() == "xla"
+    with pytest.raises(RuntimeError):
+        with ops.backend("pallas_interpret"):
+            raise RuntimeError("boom")
+    assert ops.get_backend() == "xla"
