@@ -67,11 +67,13 @@ def validate_results(results_dir: str = RESULTS_DIR) -> List[str]:
         return [f"no *.jsonl files under {results_dir}"]
     for path in paths:
         rel = os.path.basename(path)
+        rows = 0
         with open(path) as f:
             for ln, line in enumerate(f, 1):
                 line = line.strip()
                 if not line:
                     continue
+                rows += 1
                 try:
                     row = json.loads(
                         line,
@@ -80,6 +82,10 @@ def validate_results(results_dir: str = RESULTS_DIR) -> List[str]:
                     errors.append(f"{rel}:{ln}: unparseable JSON ({e})")
                     continue
                 errors += [f"{rel}:{ln}: {e}" for e in _validate_row(row)]
+        if rows == 0:
+            # an empty file is a rotten perf trajectory, not a clean one —
+            # "zero rows, zero errors" must not pass vacuously
+            errors.append(f"{rel}: no result rows (empty file)")
     return errors
 
 

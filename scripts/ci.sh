@@ -2,11 +2,12 @@
 # Tiered CI entry point (run by .github/workflows/ci.yml, and locally):
 #
 #   scripts/ci.sh --fast   fast gate: pytest -m "not slow" + interpret-mode
-#                          kernel smoke (~5 min on a laptop CPU)
+#                          kernel smoke (decode/context/verify) + the
+#                          spec==greedy smoke (~5 min on a laptop CPU)
 #   scripts/ci.sh --full   everything: full pytest (incl. @slow multi-device
 #                          subprocess sweeps), every serving smoke on 4
-#                          virtual devices (continuous/paged/prefix/disagg),
-#                          and the benchmark-results schema guard
+#                          virtual devices (continuous/paged/prefix/disagg/
+#                          spec), and the benchmark-results schema guard
 #
 # No flag defaults to --full (the historical behavior). The smokes
 # themselves live in scripts/smoke_serving.py so humans can run or debug
@@ -31,10 +32,16 @@ else
 fi
 
 echo "=== paged-attention kernels (Pallas interpret mode) ==="
-# the paged decode + context-prefill kernels with the Pallas backend
-# engaged in interpret mode (GPU-less CI's only route through the
-# block-table index maps); ops.backend() restores the global on error
+# the paged decode + context-prefill + multi-token verification kernels
+# with the Pallas backend engaged in interpret mode (GPU-less CI's only
+# route through the block-table index maps); ops.backend() restores the
+# global on error
 python scripts/smoke_serving.py kernels
+
+echo "=== speculative-decoding smoke (4 virtual devices) ==="
+# spec == greedy token identity on the multi-device pipeline gates every
+# tier: speculation must never change WHICH tokens serving produces
+python scripts/smoke_serving.py spec
 
 if [[ "$TIER" == "--full" ]]; then
   echo "=== serving smokes (4 virtual devices) ==="

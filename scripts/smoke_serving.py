@@ -6,13 +6,17 @@
   PYTHONPATH=src python scripts/smoke_serving.py serving disagg  # a subset
 
 Suites:
-  kernels  paged decode + context-prefill Pallas kernels in interpret mode
-           (a GPU-less CI's only route through the block-table index maps)
+  kernels  paged decode + context-prefill + multi-token verification
+           Pallas kernels in interpret mode (a GPU-less CI's only route
+           through the block-table index maps)
   serving  continuous + paged serving on a 2-stage TP=2 asymmetric pipeline
            over 4 virtual host devices, paged bit-identical to contiguous
   prefix   copy-on-write prefix caching + chunked prefill, warm == cold
   disagg   disaggregated prefill/decode with KV-page handoff, token-
            identical to colocated serving on the same 4-device pipeline
+  spec     speculative decoding (n-gram + self-draft proposers), token-
+           identical to plain greedy decode on the same 4-device pipeline
+           with strictly fewer target decode steps
 
 Each suite asserts hard invariants and prints one OK line; any failure is
 a non-zero exit. The multi-device suites force 4 virtual CPU devices
@@ -63,10 +67,15 @@ def suite_kernels() -> None:
     qc = rn(4, b, 8, hq, d)                  # 8-token context chunk
     q_start = jnp.array([17, 40])
     ctx_len = jnp.array([17 + 8, 40 + 5])
+    qv = rn(7, b, 4, hq, d)                  # 4-candidate verification chunk
+    v_start = jnp.array([21, 33])
+    v_len = jnp.array([21 + 4, 33 + 2])      # ragged candidate counts
     with ops.backend("pallas_interpret"):
         out = ops.paged_decode_attention(q, kp, vp, bt, kv_len=kv_len)
         out_c = ops.paged_context_attention(qc, kp, vp, bt,
                                             q_start=q_start, kv_len=ctx_len)
+        out_v = ops.paged_verify_attention(qv, kp, vp, bt,
+                                           kv_start=v_start, kv_len=v_len)
     assert ops.get_backend() == "xla", "backend leaked out of the context"
     want = ref.paged_decode_attention_ref(q, kp, vp, bt, kv_len=kv_len)
     np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
@@ -74,7 +83,11 @@ def suite_kernels() -> None:
                                              q_start=q_start, kv_len=ctx_len)
     np.testing.assert_allclose(np.asarray(out_c), np.asarray(want_c),
                                atol=2e-5)
-    _ok("paged decode + context kernels (interpret mode)")
+    want_v = ref.paged_verify_attention_ref(qv, kp, vp, bt,
+                                            kv_start=v_start, kv_len=v_len)
+    np.testing.assert_allclose(np.asarray(out_v), np.asarray(want_v),
+                               atol=2e-5)
+    _ok("paged decode + context + verify kernels (interpret mode)")
 
 
 # ---------------------------------------------------------------------------
@@ -189,11 +202,50 @@ def suite_disagg() -> None:
     _ok(f"disaggregated == colocated: {stats_d.summary()}")
 
 
+def suite_spec() -> None:
+    from repro.serving.loop import VirtualClock
+    from repro.serving.request import synth_workload
+    from repro.serving.spec import SpecConfig
+
+    cfg, asg = _setup()
+
+    def wl():
+        return synth_workload(rate=10.0, duration=0.5, vocab=cfg.vocab_size,
+                              prompt_len=8, prompt_jitter=5, out_len=6,
+                              seed=5)
+
+    reqs_b = wl()
+    _engine(cfg, asg, cache_layout="paged",
+            block_size=8).serve(reqs_b, deadline=1e9, clock=VirtualClock())
+    total = sum(len(r.output) for r in reqs_b)
+    # n-gram proposing, then self-draft (the acceptance upper bound) —
+    # both must reproduce plain greedy decode token for token, in
+    # strictly fewer target decode steps for the draft
+    reqs_n = wl()
+    st_n = _engine(cfg, asg, cache_layout="paged", block_size=8,
+                   spec_decode=True, spec_k=3).serve(
+                       reqs_n, deadline=1e9, clock=VirtualClock())
+    assert st_n.spec_steps > 0 and st_n.spec_tokens == total
+    for rb, rn_ in zip(reqs_b, reqs_n):
+        assert list(rb.output) == list(rn_.output), (rb.rid,)
+    reqs_d = wl()
+    st_d = _engine(cfg, asg, cache_layout="paged", block_size=8,
+                   spec_decode=True, spec_k=3,
+                   draft_model=cfg).serve(reqs_d, deadline=1e9,
+                                          clock=VirtualClock())
+    assert st_d.spec_steps < total, (st_d.spec_steps, total)
+    for rb, rd in zip(reqs_b, reqs_d):
+        assert list(rb.output) == list(rd.output), (rb.rid,)
+    _ok(f"spec == greedy (ngram: {st_n.spec_steps} steps, draft: "
+        f"{st_d.spec_steps} steps for {total} tokens)")
+
+
 SUITES = {
     "kernels": suite_kernels,
     "serving": suite_serving,
     "prefix": suite_prefix,
     "disagg": suite_disagg,
+    "spec": suite_spec,
 }
 
 

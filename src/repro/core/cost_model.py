@@ -318,6 +318,58 @@ def kv_migration_bytes(model: ModelProfile, task: Task,
 
 
 # ---------------------------------------------------------------------------
+# Speculative decoding (serving.spec): decode cost per COMMITTED token.
+# Plain decode commits exactly one token per weight scan; a draft-then-
+# verify step spends one target step plus k draft steps and commits the
+# accepted prefix — between 1 and k + 1 tokens. The scheduler reasons in
+# time per COMMITTED token, which is what SLO latency is made of.
+# ---------------------------------------------------------------------------
+
+def expected_commit_per_step(alpha: float, k: int) -> float:
+    """Expected tokens committed per target verification step when each
+    draft token is accepted independently with probability ``alpha`` and
+    ``k`` drafts are proposed: 1 + alpha + ... + alpha^k (the bonus token
+    always commits; draft j commits only if drafts 1..j all match).
+    k = 0 is plain decode: exactly 1."""
+    if k <= 0:
+        return 1.0
+    alpha = min(max(alpha, 0.0), 1.0)
+    if alpha >= 1.0:
+        return float(k + 1)
+    return (1.0 - alpha ** (k + 1)) / (1.0 - alpha)
+
+
+def spec_step_cost(step_cost: float, draft_step_cost: float, alpha: float,
+                   k: int) -> float:
+    """Decode time per COMMITTED token at speculation depth k: one target
+    step (``step_cost``) plus k draft steps (``draft_step_cost`` each)
+    commit ``expected_commit_per_step(alpha, k)`` tokens. k = 0 recovers
+    ``step_cost`` exactly."""
+    return (step_cost + k * draft_step_cost) \
+        / expected_commit_per_step(alpha, k)
+
+
+def best_spec_k(step_cost: float, draft_step_cost: float, alpha: float, *,
+                max_k: int = 8) -> int:
+    """Acceptance-aware speculation depth for ONE replica: the k in
+    [0, max_k] minimizing decode time per committed token.
+
+    The draft cost is ABSOLUTE, not a fraction of the target step — the
+    tiny draft (or the host-side n-gram lookup) runs at roughly the same
+    speed wherever it lives — so a SLOW replica (large ``step_cost``)
+    amortizes each extra draft over a bigger saved step and picks DEEPER
+    k. This is the per-replica knob the genetic search threads through
+    ``SearchResult.spec_ks``. Ties keep the shallowest k (less draft work
+    wasted when the realized acceptance rate drifts below ``alpha``)."""
+    best, best_c = 0, spec_step_cost(step_cost, draft_step_cost, alpha, 0)
+    for k in range(1, max_k + 1):
+        c = spec_step_cost(step_cost, draft_step_cost, alpha, k)
+        if c < best_c - 1e-12:
+            best, best_c = k, c
+    return best
+
+
+# ---------------------------------------------------------------------------
 # Whole-pipeline cost (Eq. 2)
 # ---------------------------------------------------------------------------
 

@@ -149,6 +149,40 @@ class SearchResult:
     # disaggregated serving: per-pipeline role ("prefill"|"decode"),
     # aligned with assignment.pipelines; None = colocated serving won
     roles: Optional[List[str]] = None
+    # speculative decoding: per-pipeline speculation depth k (0 = plain
+    # decode), aligned with assignment.pipelines; None = search ran
+    # without spec_decode. Slow replicas speculate deeper — pass to
+    # InferenceEngine(spec_ks=...).
+    spec_ks: Optional[List[int]] = None
+
+
+def choose_spec_ks(models: Sequence[slo_sim.PhasedReplicaModel], *,
+                   alpha: float, draft_step_cost: float, s_out: int,
+                   max_k: int = 8) -> Tuple[List[int], List[float]]:
+    """The acceptance-aware speculation dimension: per replica, pick the
+    depth k minimizing decode time per COMMITTED token
+    (cost_model.best_spec_k) and return (ks, decode multipliers).
+
+    A replica's decode STEP time is its decode bottleneck per generated
+    token; the draft cost is absolute, so SLOW replicas amortize each
+    draft over a bigger saved step and speculate DEEPER — exactly the
+    heterogeneity lever: the laggard stage that paces the whole pool is
+    the one multi-token commits help most. The multipliers feed
+    ``PhasedReplicaModel.with_spec`` so the SLO simulator's workers
+    consume decode in multi-token commits."""
+    ks: List[int] = []
+    mults: List[float] = []
+    for m in models:
+        step = m.decode_bottleneck / max(s_out, 1)
+        if step <= 0.0:
+            ks.append(0)
+            mults.append(1.0)
+            continue
+        k = cm.best_spec_k(step, draft_step_cost, alpha, max_k=max_k)
+        ks.append(k)
+        mults.append(cm.spec_step_cost(step, draft_step_cost, alpha, k)
+                     / step)
+    return ks, mults
 
 
 def best_role_split(models: Sequence[slo_sim.PhasedReplicaModel], *,
@@ -192,7 +226,9 @@ class Evaluator:
                  sim_duration: float = 60.0, seed: int = 0,
                  max_stages: int = 8, kv_block_size: Optional[int] = None,
                  prefix_hit_rate: float = 0.0,
-                 disaggregate: bool = False, kv_link_gbps: float = 0.0):
+                 disaggregate: bool = False, kv_link_gbps: float = 0.0,
+                 spec_decode: bool = False, spec_alpha: float = 0.7,
+                 spec_draft_cost: float = 0.0, max_spec_k: int = 8):
         self.cluster = cluster
         self.model = model
         self.task = task
@@ -215,9 +251,18 @@ class Evaluator:
         # cluster's per-pair best links when kv_link_gbps <= 0
         self.disaggregate = disaggregate
         self.kv_link_gbps = kv_link_gbps
+        # acceptance-aware speculative decoding: score each replica with
+        # its best per-replica speculation depth (choose_spec_ks) at the
+        # expected acceptance rate spec_alpha, charging spec_draft_cost
+        # seconds per draft step
+        self.spec_decode = spec_decode
+        self.spec_alpha = spec_alpha
+        self.spec_draft_cost = spec_draft_cost
+        self.max_spec_k = max_spec_k
         self._plan_cache: Dict[FrozenSet[int], Optional[PipelinePlan]] = {}
         self._fit_cache: Dict[Individual, Tuple[float, float]] = {}
         self._roles_cache: Dict[Individual, Optional[List[str]]] = {}
+        self._spec_cache: Dict[Individual, Optional[List[int]]] = {}
         self.evaluations = 0
 
     def _feasible(self, group: FrozenSet[int]) -> bool:
@@ -280,22 +325,44 @@ class Evaluator:
         self.fitness(ind)
         return self._roles_cache[ind]
 
+    def spec_ks_for(self, ind: Individual) -> Optional[List[int]]:
+        """The per-replica speculation depths fitness() chose for `ind`
+        (None = search ran without spec_decode)."""
+        self.fitness(ind)
+        return self._spec_cache[ind]
+
     def fitness(self, ind: Individual) -> Tuple[float, float]:
         """(SLO attainment, -mean latency) to maximize lexicographically.
         With disaggregate=True the attainment is the better of colocated
-        serving and the best prefill/decode role split."""
+        serving and the best prefill/decode role split; with
+        spec_decode=True every replica is scored at its acceptance-aware
+        best speculation depth (multi-token decode commits)."""
         if ind in self._fit_cache:
             return self._fit_cache[ind]
         self.evaluations += 1
         asg = self.assignment(ind)
-        reps = [slo_sim.ReplicaModel(p.cost, p.bottleneck,
-                                     max_concurrent=self._max_concurrent(p))
+        models = None
+        spec_ks = None
+        if (self.spec_decode or self.disaggregate) and asg.pipelines:
+            models = [self._phase_model(p) for p in asg.pipelines]
+        if self.spec_decode and models:
+            spec_ks, mults = choose_spec_ks(
+                models, alpha=self.spec_alpha,
+                draft_step_cost=self.spec_draft_cost,
+                s_out=self.task.s_out, max_k=self.max_spec_k)
+            models = [m.with_spec(u) for m, u in zip(models, mults)]
+            # colocated scoring through the phase-split model so the
+            # multiplier shaves exactly the decode share of the cost
+            reps = [m.colocated() for m in models]
+        else:
+            reps = [slo_sim.ReplicaModel(
+                p.cost, p.bottleneck,
+                max_concurrent=self._max_concurrent(p))
                 for p in asg.pipelines]
         att = slo_sim.simulate(reps, self.rate, self.deadline,
                                duration=self.sim_duration, seed=self.seed)
         roles = None
         if self.disaggregate and len(asg.pipelines) >= 2:
-            models = [self._phase_model(p) for p in asg.pipelines]
             kv_bytes = cm.kv_migration_bytes(self.model, self.task,
                                              self.kv_block_size or 0)
             if self.kv_link_gbps > 0:
@@ -310,6 +377,7 @@ class Evaluator:
             if d_roles is not None and d_att > att:
                 att, roles = d_att, d_roles
         self._roles_cache[ind] = roles
+        self._spec_cache[ind] = spec_ks
         mean_lat = np.mean([p.cost for p in asg.pipelines]) if asg.pipelines \
             else float("inf")
         out = (att, -mean_lat)
@@ -324,16 +392,22 @@ def search(cluster: Cluster, model: cm.ModelProfile, task: cm.Task, *,
            kv_block_size: Optional[int] = None,
            prefix_hit_rate: float = 0.0,
            disaggregate: bool = False, kv_link_gbps: float = 0.0,
+           spec_decode: bool = False, spec_alpha: float = 0.7,
+           spec_draft_cost: float = 0.0, max_spec_k: int = 8,
            init: Optional[List[Individual]] = None) -> SearchResult:
     """The full two-phase search: genetic over partitions, DP inside.
     disaggregate=True adds the prefill/decode role split as a scored
-    search dimension (SearchResult.roles)."""
+    search dimension (SearchResult.roles); spec_decode=True scores every
+    replica at its acceptance-aware best speculation depth
+    (SearchResult.spec_ks — slow replicas speculate deeper)."""
     rng = np.random.default_rng(seed)
     ev = Evaluator(cluster, model, task, deadline=deadline, rate=rate,
                    sim_duration=sim_duration, seed=seed,
                    max_stages=max_stages, kv_block_size=kv_block_size,
                    prefix_hit_rate=prefix_hit_rate,
-                   disaggregate=disaggregate, kv_link_gbps=kv_link_gbps)
+                   disaggregate=disaggregate, kv_link_gbps=kv_link_gbps,
+                   spec_decode=spec_decode, spec_alpha=spec_alpha,
+                   spec_draft_cost=spec_draft_cost, max_spec_k=max_spec_k)
     if init is None:
         if mutation == "hexgen":
             pop = kmeans_init(cluster, rng)
@@ -371,4 +445,5 @@ def search(cluster: Cluster, model: cm.ModelProfile, task: cm.Task, *,
     asg = ev.assignment(best)
     return SearchResult(assignment=asg, attainment=scored[0][0][0],
                         history=history, evaluations=ev.evaluations,
-                        roles=ev.roles_for(best))
+                        roles=ev.roles_for(best),
+                        spec_ks=ev.spec_ks_for(best))

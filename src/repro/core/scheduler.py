@@ -17,7 +17,11 @@ def schedule(cluster: Cluster, arch: str, task: cm.Task, *,
              max_stages: int = 8, kv_block_size=None,
              prefix_hit_rate: float = 0.0,
              disaggregate: bool = False,
-             kv_link_gbps: float = 0.0) -> SearchResult:
+             kv_link_gbps: float = 0.0,
+             spec_decode: bool = False,
+             spec_alpha: float = 0.7,
+             spec_draft_cost: float = 0.0,
+             max_spec_k: int = 8) -> SearchResult:
     """Find an assignment of `cluster` serving `arch` replicas.
 
     deadline: SLO latency bound (s); rate: request rate (req/s).
@@ -36,6 +40,14 @@ def schedule(cluster: Cluster, arch: str, task: cm.Task, *,
     (<= 0: the cluster's per-pair best links). The winning split lands in
     SearchResult.roles (None when colocated serving won), aligned with
     assignment.pipelines — pass it to InferenceEngine(roles=...).
+
+    spec_decode=True makes the search ACCEPTANCE-AWARE: every replica is
+    scored at its best per-replica speculation depth (cost per COMMITTED
+    token given acceptance rate spec_alpha and an absolute
+    spec_draft_cost per draft step — cost_model.best_spec_k), so slow
+    replicas speculate deeper. The chosen depths land in
+    SearchResult.spec_ks, aligned with assignment.pipelines — pass them
+    to InferenceEngine(spec_ks=...).
     """
     cfg = get_config(arch)
     profile = cm.ModelProfile.from_config(cfg, paper_exact=paper_exact,
@@ -46,6 +58,9 @@ def schedule(cluster: Cluster, arch: str, task: cm.Task, *,
                          kv_block_size=kv_block_size,
                          prefix_hit_rate=prefix_hit_rate,
                          disaggregate=disaggregate,
-                         kv_link_gbps=kv_link_gbps)
+                         kv_link_gbps=kv_link_gbps,
+                         spec_decode=spec_decode, spec_alpha=spec_alpha,
+                         spec_draft_cost=spec_draft_cost,
+                         max_spec_k=max_spec_k)
     res.assignment.validate(cfg.num_layers)
     return res

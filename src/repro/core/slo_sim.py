@@ -113,6 +113,20 @@ class PhasedReplicaModel:
             bottleneck=self.prefill_bottleneck + self.decode_bottleneck,
             max_concurrent=self.max_concurrent)
 
+    def with_spec(self, multiplier: float) -> "PhasedReplicaModel":
+        """Speculative decoding makes the worker consume its decode phase
+        in MULTI-TOKEN COMMITS: per committed token the replica spends
+        ``multiplier`` of its plain per-token decode time (< 1 when
+        speculation wins — cost_model.spec_step_cost over the plain step
+        cost), so the whole decode phase scales by that factor while
+        prefill is untouched. The scaled model feeds the same analytic
+        workers; the scheduler picks the per-replica depth behind the
+        multiplier (cost_model.best_spec_k via genetic.choose_spec_ks)."""
+        assert multiplier > 0.0, multiplier
+        return dataclasses.replace(
+            self, decode_latency=self.decode_latency * multiplier,
+            decode_bottleneck=self.decode_bottleneck * multiplier)
+
 
 class AnalyticPrefillWorker:
     """Prefill-role analytic replica: admits arrivals at its prefill

@@ -441,6 +441,40 @@ def paged_context_attention(q, k_pages, v_pages, block_tables, *, q_start,
                                      kv_len=kv_len, scale=scale)
 
 
+def paged_verify_attention(q, k_pages, v_pages, block_tables, *, kv_start,
+                           kv_len, scale=None):
+    """MULTI-TOKEN VERIFICATION against a block-paged cache (speculative
+    decoding): q (b,T,hq,d) is each slot's candidate chunk — the bonus
+    token plus up to T-1 draft proposals — whose row-i token j sits at
+    absolute position kv_start[i] + j, the slot's per-request committed KV
+    length. Candidates attend causally to the committed pages
+    [0, kv_start[i]) AND the candidate prefix up to themselves; their K/V
+    must already be scattered into the pages at [kv_start, kv_len)
+    (layers.attn_verify_paged does the write). Unlike the context-prefill
+    entry, callers consume the output at EVERY chunk position: greedy (or
+    rejection-sampling) acceptance compares the target's argmax after
+    candidate j against candidate j+1, so all T distributions matter.
+
+    Rows with kv_len == kv_start carry zero real candidates (free /
+    mid-prefill slots riding the joint dispatch) and come back as exact
+    zeros. The Pallas path streams pages through the block table on the
+    context grid with per-slot start offsets
+    (kernels.paged_attention.paged_verify_attention_pallas); the XLA path
+    gathers pages into a contiguous view and runs the oracle — T is k+1,
+    a handful of tokens, so the (T, S) score tile stays tiny.
+    """
+    if _BACKEND in ("pallas", "pallas_interpret"):
+        from repro.kernels import paged_attention as pa
+        return pa.paged_verify_attention_pallas(
+            q, k_pages, v_pages, block_tables, kv_start=kv_start,
+            kv_len=kv_len, scale=scale,
+            interpret=(_BACKEND == "pallas_interpret"))
+    k = ref.gather_pages(k_pages, block_tables)
+    v = ref.gather_pages(v_pages, block_tables)
+    return ref.context_attention_ref(q, k, v, q_start=kv_start,
+                                     kv_len=kv_len, scale=scale)
+
+
 # ---------------------------------------------------------------------------
 # Selective scan (Mamba S6)
 # ---------------------------------------------------------------------------

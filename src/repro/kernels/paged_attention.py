@@ -208,3 +208,30 @@ def paged_context_attention_pallas(q, k_pages, v_pages, block_tables, *,
         out_shape=jax.ShapeDtypeStruct((b, C, hq, d), q.dtype),
         interpret=interpret,
     )(tbl, starts, lens, q, k_pages, v_pages)
+
+
+# ---------------------------------------------------------------------------
+# Paged MULTI-TOKEN VERIFICATION (speculative decoding): T candidate tokens
+# per slot — the bonus token plus the draft proposals — run against the paged
+# cache in ONE kernel launch. The per-slot KV-START offset (the slot's
+# committed length) is the chunk origin: candidate j of slot i sits at
+# absolute position kv_start[i] + j, attends to the committed pages
+# [0, kv_start[i]) plus the candidate prefix up to itself, and the output is
+# kept at EVERY position (acceptance needs the target's distribution after
+# each candidate, not just the last). That is exactly the context grid with
+# the start scalars re-interpreted per slot, so the verification path rides
+# the same scalar-prefetch DMA routing — one grid, two serving roles.
+# ---------------------------------------------------------------------------
+
+def paged_verify_attention_pallas(q, k_pages, v_pages, block_tables, *,
+                                  kv_start, kv_len, scale=None,
+                                  interpret=False):
+    """q (b,T,hq,d) — T candidates per slot, row i's candidate j at
+    absolute position kv_start[i] + j; k_pages/v_pages
+    (n_blocks,block_size,hkv,d) already hold the candidates' K/V at
+    [kv_start, kv_len); block_tables (b,max_blocks) int32; kv_start,kv_len
+    (b,). Rows with kv_len == kv_start are dead (all-masked, exact
+    zeros). Returns (b,T,hq,d)."""
+    return paged_context_attention_pallas(
+        q, k_pages, v_pages, block_tables, q_start=kv_start, kv_len=kv_len,
+        scale=scale, interpret=interpret)

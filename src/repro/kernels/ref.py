@@ -161,6 +161,29 @@ def paged_context_attention_ref(q, k_pages, v_pages, block_tables, *,
                                  scale=scale)
 
 
+def paged_verify_attention_ref(q, k_pages, v_pages, block_tables, *,
+                               kv_start, kv_len, scale=None):
+    """MULTI-TOKEN VERIFICATION oracle (speculative decoding): q (b,T,hq,d)
+    is a chunk of T candidate tokens per slot — the bonus token plus the
+    draft proposals — whose row-i token j sits at absolute position
+    kv_start[i] + j, i.e. the chunk begins at the per-slot COMMITTED KV
+    length rather than a shared offset. Each candidate attends causally to
+    the committed pages [0, kv_start[i]) plus the candidate prefix up to
+    and including itself; the chunk's own K/V must already sit in the
+    pages at [kv_start, kv_len). kv_len (b,) = kv_start + real candidate
+    count (rows with kv_len == kv_start are dead and return exact zeros).
+
+    The semantics coincide with the context-prefill oracle with the
+    per-slot KV-start offset as the chunk origin — verification IS a
+    context pass that keeps every position's output (the acceptance test
+    needs the target's distribution after each candidate, not just the
+    last)."""
+    k = gather_pages(k_pages, block_tables)
+    v = gather_pages(v_pages, block_tables)
+    return context_attention_ref(q, k, v, q_start=kv_start, kv_len=kv_len,
+                                 scale=scale)
+
+
 def ssm_scan_ref(x, dt, A, B, C, D, *, h0=None):
     """Sequential selective-scan oracle (Mamba S6).
 

@@ -106,6 +106,31 @@ def main() -> None:
                     help="flat bandwidth of the prefill->decode KV link in "
                          "Gbit/s (0 = per-pair costs from the cluster's "
                          "comm matrices)")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="speculative decoding: propose up to --spec-k "
+                         "tokens per slot per iteration and commit the "
+                         "verified prefix in one multi-token target step "
+                         "(token-identical to greedy decode; paged layout "
+                         "+ attention-only stacks)")
+    ap.add_argument("--draft-model", default="",
+                    help="draft architecture from configs/ for the "
+                         "proposer (empty = weight-free n-gram / "
+                         "prompt-lookup proposing)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per target step; the "
+                         "scheduler's acceptance-aware search may deepen "
+                         "or shallow this per replica")
+    ap.add_argument("--spec-alpha", type=float, default=0.7,
+                    help="expected per-token draft acceptance rate the "
+                         "scheduler plans decode cost per COMMITTED "
+                         "token with")
+    ap.add_argument("--spec-draft-cost", type=float, default=0.0,
+                    help="modeled cost of one draft step: the scheduler "
+                         "treats it as absolute seconds (> 0 makes slow "
+                         "replicas speculate deeper), and virtual-clock "
+                         "replays charge it per proposed token as a "
+                         "fraction of an iteration — so served latencies "
+                         "include the draft overhead the plan assumed")
     args = ap.parse_args()
 
     if args.prefix_hit_rate and args.cache_layout != "paged":
@@ -129,17 +154,30 @@ def main() -> None:
             "--disaggregate needs --cache-layout paged (the KV handoff is "
             "a page transfer); serving colocated", stacklevel=1)
         args.disaggregate = False
+    if args.spec_decode and args.cache_layout != "paged":
+        import warnings
+        warnings.warn(
+            "--spec-decode needs --cache-layout paged (multi-token "
+            "verification runs through the paged context path); serving "
+            "without it", stacklevel=1)
+        args.spec_decode = False
     res = schedule(pool, args.arch, task, deadline=args.deadline,
                    rate=args.rate, iters=args.search_iters, seed=args.seed,
                    kv_block_size=(args.block_size
                                   if args.cache_layout == "paged" else None),
                    prefix_hit_rate=args.prefix_hit_rate,
                    disaggregate=args.disaggregate,
-                   kv_link_gbps=args.kv_link_gbps)
+                   kv_link_gbps=args.kv_link_gbps,
+                   spec_decode=args.spec_decode,
+                   spec_alpha=args.spec_alpha,
+                   spec_draft_cost=args.spec_draft_cost,
+                   max_spec_k=max(args.spec_k, 1))
     print(f"  assignment: {res.assignment.describe()}")
     print(f"  estimated SLO attainment: {res.attainment*100:.1f}%")
     if args.disaggregate:
         print(f"  roles: {res.roles if res.roles is not None else 'colocated'}")
+    if args.spec_decode:
+        print(f"  spec-k per replica: {res.spec_ks}")
 
     cfg = cfg_full.reduced() if args.reduced else cfg_full
     asg = scale_assignment(res.assignment, cfg_full.num_layers,
@@ -161,7 +199,15 @@ def main() -> None:
                              roles=res.roles if args.disaggregate else None,
                              kv_link_gbps=args.kv_link_gbps,
                              cluster=(pool if args.disaggregate
-                                      and args.kv_link_gbps <= 0 else None))
+                                      and args.kv_link_gbps <= 0 else None),
+                             spec_decode=args.spec_decode,
+                             spec_k=args.spec_k,
+                             draft_model=(args.draft_model or None),
+                             spec_draft_token_cost=args.spec_draft_cost,
+                             # the scheduler's acceptance-aware per-replica
+                             # depths (0 = plain decode on that replica)
+                             spec_ks=(res.spec_ks if args.spec_decode
+                                      else None))
     if args.shared_prefix:
         reqs = shared_prefix_workload(
             rate=args.rate, duration=args.duration, vocab=cfg.vocab_size,

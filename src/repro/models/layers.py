@@ -230,6 +230,49 @@ def attn_context_paged(p, x, cfg, *, positions, q_len, block_tables, cache):
     return out, {"k": nk, "v": nv}
 
 
+def attn_verify_paged(p, x, cfg, *, positions, q_len, block_tables, cache):
+    """MULTI-TOKEN VERIFICATION against a BLOCK-PAGED cache (speculative
+    decoding): x (b,T,d) is each slot's candidate chunk — the bonus token
+    plus its draft proposals — whose row-i token j sits at absolute
+    position positions[i, j] = positions[i, 0] + j, the slot's committed
+    KV length. The chunk's K/V scatter into the pages first (the same
+    write the decode path does, T tokens at once), then every candidate
+    attends causally to the committed pages AND the candidate prefix
+    through the per-slot-start verification kernel
+    (ops.paged_verify_attention). The caller keeps the output at EVERY
+    position: acceptance compares the target's next-token choice after
+    each candidate against the next candidate.
+
+    q_len (b,): real candidate count per row; rows with q_len == 0 (free /
+    mid-prefill slots riding the joint dispatch) scatter into the reserved
+    null page and come back dead. Rolling back REJECTED candidates is the
+    caller's job (BlockTable.truncate) — their stale page writes sit past
+    the committed length, masked by kv_len, and are overwritten by the
+    next verification chunk.
+    """
+    q, k, v = _qkv(p, x, cfg)
+    b, T = x.shape[:2]
+    positions = jnp.asarray(positions, jnp.int32)       # (b, T) absolute
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    bs = cache["k"].shape[1]
+    tbl = jnp.asarray(block_tables, jnp.int32)
+    max_pos = tbl.shape[1] * bs - 1
+    valid = jnp.arange(T)[None, :] < jnp.asarray(q_len, jnp.int32)[:, None]
+    posc = jnp.minimum(positions, max_pos)              # pad rows stay legal
+    blk = jnp.take_along_axis(tbl, posc // bs, axis=1)  # (b, T)
+    blk = jnp.where(valid, blk, 0)                      # pads -> null page
+    off = posc % bs
+    nk = cache["k"].at[blk, off].set(k.astype(cache["k"].dtype))
+    nv = cache["v"].at[blk, off].set(v.astype(cache["v"].dtype))
+    kv_start = positions[:, 0]
+    kv_len = kv_start + jnp.asarray(q_len, jnp.int32)
+    o = ops.paged_verify_attention(q, nk, nv, tbl, kv_start=kv_start,
+                                   kv_len=kv_len)
+    out = mm(o.reshape(b, T, -1), p["wo"])
+    return out, {"k": nk, "v": nv}
+
+
 def cross_attn(p, x, cfg, *, enc_kv=None, enc_out=None):
     """Whisper cross-attention. enc_kv: precomputed {"k","v"} over encoder
     frames (cached at prefill); or compute from enc_out."""

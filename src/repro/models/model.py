@@ -436,6 +436,44 @@ def apply_sublayer_context_paged(cfg, kind, sp, x, sc, *, positions, q_len,
     return x, nc
 
 
+def apply_sublayer_verify_paged(cfg, kind, sp, x, sc, *, positions, q_len,
+                                block_tables):
+    """One block over a slot's CANDIDATE CHUNK (bonus token + draft
+    proposals) against a PAGED cache — the speculative-decoding
+    verification step. The chunk's K/V scatter into pages at the slot's
+    committed offset and every candidate attends to the committed context
+    plus the candidate prefix (layers.attn_verify_paged); the caller reads
+    the head at EVERY chunk position to run acceptance. Attention-only by
+    construction, like the context path: a recurrent sublayer's state
+    cannot be rolled back when candidates are rejected.
+    Returns (x, new_cache)."""
+    assert kind == ATTN, \
+        "paged verification covers attention-only stacks " \
+        "(recurrent state cannot be rolled back on rejection)"
+    h = _norm(cfg, sp["ln1"], x)
+    o, nc = layers.attn_verify_paged(sp["mixer"], h, cfg,
+                                     positions=positions, q_len=q_len,
+                                     block_tables=block_tables,
+                                     cache={"k": sc["k"], "v": sc["v"]})
+    x = x + o
+    if "mlp" in sp:
+        x = x + layers.mlp(sp["mlp"], _norm(cfg, sp["ln2"], x), cfg)
+    elif "moe" in sp:
+        x = x + moe.moe_mlp(sp["moe"], _norm(cfg, sp["ln2"], x), cfg)
+    return x, nc
+
+
+def _apply_period_verify_paged(cfg, pp, x, cache_p, *, positions, q_len,
+                               block_tables):
+    new_cache = {}
+    for j, (kind, _) in enumerate(sub_kinds(cfg)):
+        x, nc = apply_sublayer_verify_paged(
+            cfg, kind, pp[f"sub{j}"], x, cache_p[f"sub{j}"],
+            positions=positions, q_len=q_len, block_tables=block_tables)
+        new_cache[f"sub{j}"] = nc
+    return x, new_cache
+
+
 def _apply_period_context_paged(cfg, pp, x, cache_p, *, positions, q_len,
                                 block_tables):
     new_cache = {}
@@ -815,6 +853,36 @@ def prefill_paged_context(cfg: ModelConfig, params, tokens, cache, q_start,
     x_last = x[jnp.arange(b), lens - 1][:, None]
     logits = _head(cfg, params, x_last)[:, 0]
     return logits, new_cache
+
+
+def verify_step_paged(cfg: ModelConfig, params, tokens, cache, kv_start,
+                      q_len, block_tables):
+    """MULTI-TOKEN VERIFICATION against the PAGED cache: run each row's
+    candidate chunk `tokens` (b, T) — bonus token + draft proposals, row
+    i's candidate j at absolute position kv_start[i] + j — in ONE forward
+    pass, scattering the chunk's K/V through `block_tables`
+    (b, max_blocks) and returning logits at EVERY chunk position:
+    (logits (b, T, V), cache). Greedy acceptance then commits the longest
+    candidate prefix matching the argmax chain; rejected candidates' page
+    writes sit past the committed length (masked, overwritten next step).
+    q_len (b,) real candidate counts (rows with 0 are dead padding).
+    Attention-only stacks (apply_sublayer_verify_paged asserts)."""
+    x = _embed(cfg, params, tokens)
+    b, T = tokens.shape
+    starts = jnp.asarray(kv_start, jnp.int32)
+    lens = jnp.asarray(q_len, jnp.int32)
+    positions = starts[:, None] + jnp.arange(T)[None]
+    bt = jnp.asarray(block_tables, jnp.int32)
+
+    def f(x, per):
+        pp, cp = per
+        x, nc = _apply_period_verify_paged(cfg, pp, x, cp,
+                                           positions=positions, q_len=lens,
+                                           block_tables=bt)
+        return x, nc
+
+    x, new_cache = jax.lax.scan(f, x, (params["blocks"], cache))
+    return _head(cfg, params, x), new_cache
 
 
 def decode_step_paged(cfg: ModelConfig, params, tokens, cache, pos,

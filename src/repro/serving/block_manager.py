@@ -141,6 +141,25 @@ class BlockTable:
             self.pool.free(b)
         self.blocks.clear()
 
+    def truncate(self, n_tokens: int) -> int:
+        """Shrink the table to exactly the blocks holding ``n_tokens`` —
+        the SPECULATIVE-PAGE ROLLBACK: a multi-token verification step
+        allocates blocks for the whole candidate chunk up front, and when
+        acceptance commits only a prefix, the trailing blocks (whose every
+        position lies past the committed length) go back to the pool.
+        Dropping is one reference like any release, so a trailing block
+        that is aliased elsewhere (a prefix-index entry, a fork) stays
+        resident for its other holders — COW- and prefix-index-safe by
+        construction. Stale candidate K/V in the KEPT tail block is
+        masked by kv_len and overwritten by the next chunk. Returns the
+        number of blocks dropped from this table."""
+        keep = blocks_for_tokens(n_tokens, self.pool.block_size)
+        dropped = 0
+        while len(self.blocks) > keep:
+            self.pool.free(self.blocks.pop())
+            dropped += 1
+        return dropped
+
     def adopt(self, blocks: Sequence[int]) -> None:
         """Append already-referenced block ids to the table, taking over
         their references — the landing step of prefix aliasing

@@ -44,6 +44,7 @@ from repro.serving.disagg import KVMigration
 from repro.serving.loop import (ServeStats, VirtualClock, WallClock,
                                 run_serve_loop)
 from repro.serving.request import Request
+from repro.serving.spec import SpecConfig, greedy_accept
 
 
 @dataclasses.dataclass
@@ -380,6 +381,21 @@ class PagedPipelineBatcher(SlotEngine):
     Disaggregation needs an attention-only stack: KV pages are the whole
     per-request state, so the handoff is a page transfer; recurrent
     running state has no page identity to ship.
+
+    ``spec`` (a ``serving.spec.SpecConfig``) turns on SPECULATIVE
+    DECODING: each decode iteration becomes a draft-then-verify step —
+    a proposer (prompt-lookup n-grams, or a small draft model) guesses up
+    to ``spec.k`` candidate tokens per slot, the target verifies the
+    bonus token plus all candidates in ONE multi-token pipeline step
+    (``pipeline.verify_slots_paged``), greedy acceptance commits the
+    longest candidate prefix matching the target's argmax chain (1 to
+    k + 1 tokens per step), and the speculative pages past the committed
+    length roll back onto the pool (``BlockTable.truncate``). The
+    committed stream is token-identical to plain greedy decode at any
+    acceptance rate; only the step count changes. Needs an attention-only
+    stack (the verification chunk cannot be rolled back through recurrent
+    state); composes with prefix caching, chunked prefill, preemption and
+    disaggregated decode replicas.
     """
 
     def __init__(self, pipeline, *, n_slots: int = 8, max_len: int = 256,
@@ -389,7 +405,8 @@ class PagedPipelineBatcher(SlotEngine):
                  virtual_step_cost: float = 1.0,
                  prefix_caching: bool = False, prefill_chunk: int = 0,
                  prefill_token_cost: float = 0.0,
-                 role: str = "both", replica_id: int = 0):
+                 role: str = "both", replica_id: int = 0,
+                 spec: Optional[SpecConfig] = None):
         from repro.serving.pipeline import (context_mode_supported,
                                             slot_mode_supported)
         assert slot_mode_supported(pipeline.cfg), \
@@ -459,6 +476,20 @@ class PagedPipelineBatcher(SlotEngine):
         # in-transit migrations: heap of (ready_time, seq, KVMigration)
         self._migrations: List = []
         self._mig_seq = 0
+        # ---- speculative decoding --------------------------------------
+        self.spec = spec
+        self._proposer = None
+        if spec is not None and not context_mode_supported(pipeline.cfg):
+            warnings.warn(
+                f"{pipeline.cfg.name}: speculative decoding needs an "
+                "attention-only stack (a recurrent sublayer's state cannot "
+                "roll back past a rejected candidate); serving without it",
+                stacklevel=2)
+            self.spec = None
+        if self.spec is not None:
+            self._proposer = self.spec.build(
+                n_slots=n_slots, max_len=max_len,
+                vocab_size=pipeline.cfg.vocab_size, pad_id=pad_id)
         # counters surfaced through ServeStats (loop reports deltas)
         self.prefix_lookups = 0
         self.prefix_hits = 0
@@ -467,7 +498,12 @@ class PagedPipelineBatcher(SlotEngine):
         self.cow_copies = 0
         self.migrations = 0            # prefills handed off (sender side)
         self.migrated_kv_bytes = 0     # payload bytes shipped (sender side)
+        self.spec_steps = 0            # target multi-token verify steps
+        self.spec_proposed = 0         # draft tokens proposed
+        self.spec_accepted = 0         # draft tokens the target agreed with
+        self.spec_tokens = 0           # tokens committed via verify steps
         self._iter_prefill_tokens = 0
+        self._iter_spec_proposed = 0
 
     # ---- block accounting -------------------------------------------------
     def _min_pool_free(self) -> int:
@@ -881,6 +917,8 @@ class PagedPipelineBatcher(SlotEngine):
             if tabs is not None:
                 tabs[i].release()
         self._bt_cache = None
+        if self._proposer is not None:
+            self._proposer.release(i)
         # recompute: the request restarts from its prompt (greedy decode
         # regenerates the same prefix), at the FRONT of the queue
         self._queue.appendleft(s.req)
@@ -892,6 +930,108 @@ class PagedPipelineBatcher(SlotEngine):
             if tabs is not None:
                 tabs[i].release()
         self._bt_cache = None
+        if self._proposer is not None:
+            self._proposer.release(i)
+
+    # ---- speculative decoding (draft -> multi-token verify -> accept) ----
+    def _spec_iteration(self, now: float):
+        """One target step under speculative decoding: PROPOSE a candidate
+        chunk per decoding slot (the bonus token — the argmax the plain
+        decode would feed next — plus up to ``spec.k`` drafts), ENSURE
+        blocks/COW for the whole chunk (a dry pool preempts the youngest
+        active slot, exactly like plain decode growth), VERIFY every
+        slot's chunk in one multi-token pipeline step, then ACCEPT the
+        longest draft prefix matching the target's argmax chain and ROLL
+        BACK the speculative pages past the committed length. Greedy
+        acceptance keeps the committed stream token-identical to plain
+        greedy decode; the win is committing up to k + 1 tokens per
+        target step."""
+        k = self.spec.k
+        items = []
+        for i, s in enumerate(self.slots):
+            if not s.decoding:
+                continue
+            bonus = int(self._last_logits[i].argmax())
+            # the chunk must fit the request's remaining budget AND the
+            # slot ceiling (writes stop at max_len - 2, like decode)
+            cap = max(min(k, s.remaining - 1, self.max_len - 2 - s.pos), 0)
+            hist = np.concatenate([
+                np.asarray(s.req.prompt, np.int32),
+                np.asarray(s.out, np.int32),
+                np.asarray([bonus], np.int32)])
+            items.append((i, bonus, hist, cap))
+        props = self._proposer.propose(
+            [(i, hist, cap) for i, _, hist, cap in items])
+        self._iter_spec_proposed += sum(len(p) for p in props.values())
+        # block growth + copy-on-write for the whole chunk, oldest first
+        plan = {}
+        empty = np.zeros(0, np.int32)
+        for i, bonus, hist, cap in sorted(
+                items, key=lambda it: self.slots[it[0]].seq):
+            if not self.slots[i].decoding:
+                continue           # preempted by an earlier slot's turn
+            drafts = np.asarray(props.get(i, empty), np.int32)[:cap]
+            while self.slots[i].decoding and not self._prepare_chunk(
+                    i, self.slots[i].pos + 1 + len(drafts)):
+                active = [j for j, sl in enumerate(self.slots)
+                          if not sl.free]
+                self._preempt(max(active, key=lambda j: self.slots[j].seq))
+            if self.slots[i].decoding:
+                plan[i] = (bonus, drafts)
+        if not plan:
+            return []              # everyone preempted themselves away
+        # joint verification dispatch: FIXED chunk width k + 1 (one
+        # compile), per-slot real counts; absent slots are dead rows with
+        # null tables, like free slots in the joint decode
+        T = k + 1
+        toks = np.zeros((self.n_slots, T), np.int32)
+        qlen = np.zeros((self.n_slots,), np.int32)
+        starts = np.zeros((self.n_slots,), np.int32)
+        for i, (bonus, drafts) in plan.items():
+            toks[i, 0] = bonus
+            toks[i, 1:1 + len(drafts)] = drafts
+            qlen[i] = 1 + len(drafts)
+            starts[i] = self.slots[i].pos
+        tables = [np.zeros((self.n_slots, self.max_blocks), np.int32)
+                  if tabs is None else
+                  np.stack([t.as_array(self.max_blocks) if j in plan
+                            else np.zeros(self.max_blocks, np.int32)
+                            for j, t in enumerate(tabs)])
+                  for tabs in self._tables]
+        logits = np.asarray(self.pipeline.verify_slots_paged(
+            toks, qlen, starts, tables))
+        done = []
+        for i, (bonus, drafts) in plan.items():
+            s = self.slots[i]
+            commit, a = greedy_accept(logits[i], bonus, drafts)
+            self.spec_steps += 1
+            self.spec_proposed += len(drafts)
+            self.spec_accepted += a
+            self.spec_tokens += len(commit)
+            # logits[a] is the distribution after the last committed
+            # token — its argmax is the next step's bonus token
+            self._last_logits[i] = logits[i, a]
+            if not s.out and s.req is not None:
+                s.req.first_token_time = now
+            s.out.extend(commit)
+            s.pos += len(commit)
+            s.remaining -= len(commit)
+            # speculative-page rollback: blocks wholly past the committed
+            # length return to the pool (prefix-index aliases survive —
+            # truncate drops one reference like any release)
+            freed = 0
+            for tabs in self._tables:
+                if tabs is not None:
+                    freed += tabs[i].truncate(s.pos)
+            if freed:
+                self._bt_cache = None
+            if s.remaining <= 0 or s.pos >= self.max_len - 1:
+                done.append((s.req, s.out))
+                self._on_slot_free(i)
+                self.slots[i] = _Slot()
+            else:
+                self._proposer.commit(i, a)
+        return done
 
     def _step(self, now: float):
         if self._incremental:
@@ -900,11 +1040,14 @@ class PagedPipelineBatcher(SlotEngine):
             self._migrate_ready(now)   # hand off instead of decoding
             return []
         if any(s.decoding for s in self.slots):
+            if self.spec is not None:
+                return self._spec_iteration(now)
             return self._decode_iteration(now)
         return []                  # every occupied slot is still prefilling
 
     def run_iteration(self, now: float):
         self._iter_prefill_tokens = 0
+        self._iter_spec_proposed = 0
         # land arrived migrations BEFORE the base iteration so their slots
         # join this very decode step (mirrors colocated serving, where a
         # prefill finishing in iteration i decodes its first token in i)
@@ -915,6 +1058,12 @@ class PagedPipelineBatcher(SlotEngine):
         if self._iter_prefill_tokens and self.prefill_token_cost:
             cost += (self.virtual_step_cost * self.prefill_token_cost
                      * self._iter_prefill_tokens)
+        # ... and draft proposals their configured fraction, so the
+        # acceptance-aware cost model's draft overhead is measurable
+        if self._iter_spec_proposed and self.spec is not None \
+                and self.spec.draft_token_cost:
+            cost += (self.virtual_step_cost * self.spec.draft_token_cost
+                     * self._iter_spec_proposed)
         return mig_comps + comps, cost
 
     def _decode_all(self, toks, pos):

@@ -23,6 +23,7 @@ from repro.serving.pipeline import (AsymmetricPipeline,
                                     slot_mode_supported)
 from repro.serving.request import Request
 from repro.serving.router import Router, ServeStats, default_roles
+from repro.serving.spec import SpecConfig
 
 
 class InferenceEngine:
@@ -32,7 +33,17 @@ class InferenceEngine:
     overrides the default split (e.g. the scheduler's SLO-scored one);
     the transfer is modeled as ``kv_bytes / link_bandwidth`` on the
     serving clock — flat via ``kv_link_gbps`` (0 = ideal interconnect),
-    or per-replica-pair from ``cluster``'s comm matrices when given."""
+    or per-replica-pair from ``cluster``'s comm matrices when given.
+
+    ``spec_decode=True`` turns on speculative decoding (serving.spec):
+    a proposer guesses up to ``spec_k`` tokens per slot per iteration and
+    the target commits the verified prefix in one multi-token step —
+    token-identical to plain greedy decode. ``draft_model`` names a small
+    draft architecture from ``configs/`` (or passes a ModelConfig
+    directly); without it the weight-free n-gram/prompt-lookup proposer
+    runs. ``spec_ks`` overrides the depth PER REPLICA (the scheduler's
+    acceptance-aware ``SearchResult.spec_ks``; 0 disables speculation on
+    that replica). Needs the paged layout and an attention-only stack."""
 
     def __init__(self, cfg: ModelConfig, assignment: Assignment, *,
                  params=None, key=None, devices: Optional[Sequence] = None,
@@ -45,7 +56,11 @@ class InferenceEngine:
                  roles: Optional[Sequence[str]] = None,
                  kv_link_gbps: float = 0.0, cluster=None,
                  step_costs: Optional[Sequence[float]] = None,
-                 prefill_token_cost: float = 0.0):
+                 prefill_token_cost: float = 0.0,
+                 spec_decode: bool = False, spec_k: int = 4,
+                 draft_model=None,
+                 spec_ks: Optional[Sequence[int]] = None,
+                 spec_draft_token_cost: float = 0.0):
         self.cfg = cfg
         devices = list(devices if devices is not None else jax.devices())
         if params is None:
@@ -86,6 +101,54 @@ class InferenceEngine:
                     "disaggregation needs >= 2 replicas; serving "
                     "colocated", stacklevel=2)
                 roles = None
+        # ---- speculative decoding --------------------------------------
+        spec = None
+        if spec_decode and spec_k < 1:
+            # consistent with per-replica spec_ks, where 0 = plain decode
+            warnings.warn("spec_k < 1 means plain decode; serving without "
+                          "speculation", stacklevel=2)
+            spec_decode = False
+            spec_ks = None
+        if spec_decode:
+            if not context_mode_supported(cfg):
+                warnings.warn(
+                    f"{cfg.name}: speculative decoding needs an "
+                    "attention-only stack (a recurrent sublayer's state "
+                    "cannot roll back past a rejected candidate); serving "
+                    "without it", stacklevel=2)
+                spec_ks = None
+            elif draft_model is not None:
+                draft_cfg = draft_model
+                if isinstance(draft_model, str):
+                    from repro.configs import get_config
+                    draft_cfg = get_config(draft_model)
+                    if cfg.name.endswith("-reduced"):
+                        draft_cfg = draft_cfg.reduced()
+                if not context_mode_supported(draft_cfg):
+                    warnings.warn(
+                        f"{draft_cfg.name}: draft models must be "
+                        "attention-only text decoders (recurrent draft "
+                        "state cannot roll back past a rejected "
+                        "candidate); falling back to the n-gram proposer",
+                        stacklevel=2)
+                    draft_cfg = None
+                elif draft_cfg.vocab_size != cfg.vocab_size:
+                    warnings.warn(
+                        f"{draft_cfg.name}: draft vocab "
+                        f"({draft_cfg.vocab_size}) differs from the "
+                        f"target's ({cfg.vocab_size}); falling back to "
+                        "the n-gram proposer", stacklevel=2)
+                    draft_cfg = None
+                if draft_cfg is not None:
+                    spec = SpecConfig(
+                        k=spec_k, proposer="draft", draft_cfg=draft_cfg,
+                        draft_token_cost=spec_draft_token_cost)
+                else:
+                    spec = SpecConfig(
+                        k=spec_k, draft_token_cost=spec_draft_token_cost)
+            else:
+                spec = SpecConfig(k=spec_k,
+                                  draft_token_cost=spec_draft_token_cost)
         kv_link = None
         if roles is not None and any(r != "both" for r in roles):
             if cluster is not None:
@@ -110,7 +173,10 @@ class InferenceEngine:
                              prefill_chunk=prefill_chunk,
                              roles=roles, kv_link=kv_link,
                              step_costs=step_costs,
-                             prefill_token_cost=prefill_token_cost)
+                             prefill_token_cost=prefill_token_cost,
+                             spec=spec,
+                             spec_ks=(list(spec_ks)
+                                      if spec_ks is not None else None))
         self.roles = self.router.roles
 
     def generate(self, prompts: Sequence[np.ndarray], *, max_new: int = 16

@@ -108,6 +108,11 @@ class ServeStats:
     # disaggregated prefill/decode (role="prefill" workers, sender side)
     migrations: int = 0            # finished prefills handed to a decoder
     migrated_kv_bytes: int = 0     # KV payload bytes shipped over the link
+    # speculative decoding (PagedPipelineBatcher with spec=SpecConfig)
+    spec_steps: int = 0            # target multi-token verification steps
+    spec_proposed: int = 0         # draft tokens proposed
+    spec_accepted: int = 0         # draft tokens the target agreed with
+    spec_tokens: int = 0           # tokens committed via verification steps
 
     def summary(self) -> str:
         lat = np.asarray(self.latencies)
@@ -125,6 +130,12 @@ class ServeStats:
         if self.migrations:
             extra += (f" mig={self.migrations} "
                       f"({self.migrated_kv_bytes / 1e6:.2f}MB)")
+        if self.spec_steps:
+            acc = (self.spec_accepted / self.spec_proposed
+                   if self.spec_proposed else 0.0)
+            extra += (f" spec={self.spec_tokens}tok"
+                      f"/{self.spec_steps}step "
+                      f"acc={acc * 100:.0f}%")
         return (f"n={len(lat)} {pct}"
                 f"slo={self.attainment * 100:.1f}% thpt={self.throughput:.2f} req/s "
                 f"rej={self.rejected} drop={self.dropped} "
@@ -176,7 +187,8 @@ def run_serve_loop(workers: Sequence, requests: Sequence, *, deadline: float,
     # workers persist across serve() calls: report this replay's deltas
     counters = ("rejected", "preemptions", "prefix_lookups", "prefix_hits",
                 "prefix_hit_tokens", "prefill_tokens", "cow_copies",
-                "migrations", "migrated_kv_bytes")
+                "migrations", "migrated_kv_bytes", "spec_steps",
+                "spec_proposed", "spec_accepted", "spec_tokens")
     base = {c: sum(getattr(w, c, 0) for w in workers) for c in counters}
     while idx < len(pending) or any(w.inflight() for w in workers):
         now = clock.now()

@@ -77,6 +77,8 @@ class StageExecutor:
                                          donate_argnums=(1,))
         self._context_paged_jit = jax.jit(self._stage_context_paged,
                                           donate_argnums=(1,))
+        self._verify_paged_jit = jax.jit(self._stage_verify_paged,
+                                         donate_argnums=(1,))
         self._copy_pages_jit = jax.jit(self._stage_copy_pages,
                                        donate_argnums=(0,))
         self._scatter_pages_jit = jax.jit(self._stage_scatter_pages,
@@ -120,6 +122,16 @@ class StageExecutor:
         new_caches = []
         for kind, lp, sc in zip(self.kinds, self.layer_params, caches):
             x, nc = M.apply_sublayer_context_paged(
+                self.cfg, kind, lp, x, sc, positions=positions, q_len=q_len,
+                block_tables=block_tables)
+            new_caches.append(nc)
+        return x, new_caches
+
+    def _stage_verify_paged(self, x, caches, positions, q_len,
+                            block_tables):
+        new_caches = []
+        for kind, lp, sc in zip(self.kinds, self.layer_params, caches):
+            x, nc = M.apply_sublayer_verify_paged(
                 self.cfg, kind, lp, x, sc, positions=positions, q_len=q_len,
                 block_tables=block_tables)
             new_caches.append(nc)
@@ -464,6 +476,40 @@ class AsymmetricPipeline:
                     x, self.paged_caches[si], positions, lens, bt)
         x_last = x[jnp.arange(m), lens - 1][:, None]
         return np.asarray(self._head(x_last)[:, 0])
+
+    def verify_slots_paged(self, tokens: np.ndarray, q_len: np.ndarray,
+                           q_start: np.ndarray,
+                           stage_tables: Sequence[np.ndarray]) -> np.ndarray:
+        """MULTI-TOKEN VERIFICATION over ALL slots (speculative decoding):
+        tokens (n_slots, T) is each slot's candidate chunk — the bonus
+        token plus its draft proposals, right-padded to the fixed chunk
+        width T = spec_k + 1 so the step compiles ONCE — with row i's
+        candidate j at absolute position q_start[i] + j (the slot's
+        committed KV length). q_len (n_slots,) real candidate counts;
+        rows of free / mid-prefill slots carry q_len == 0 and all-null
+        tables, scatter into the trash page, and return garbage the
+        engine discards — exactly like free slots in the joint decode.
+
+        Returns logits (n_slots, T, V) at EVERY chunk position: position
+        j is the target's next-token distribution after consuming
+        candidate j, which is what greedy (or rejection-sampling)
+        acceptance compares against candidate j + 1. With T == 1 this
+        degenerates to the plain joint decode step (one bonus token, no
+        proposals). Attention-only stacks (context_mode_supported)."""
+        assert self.paged_caches is not None, "call init_paged_caches first"
+        assert context_mode_supported(self.cfg)
+        n, T = tokens.shape
+        lens = jnp.asarray(q_len, jnp.int32)
+        starts = jnp.asarray(q_start, jnp.int32)
+        positions = starts[:, None] + jnp.arange(T)[None]
+        x = self._embed(jnp.asarray(tokens), {})
+        for si, st in enumerate(self.stages):
+            with st.mesh:
+                x = jax.device_put(x, _rep(st.mesh))
+                bt = jnp.asarray(stage_tables[si], jnp.int32)
+                x, self.paged_caches[si] = st._verify_paged_jit(
+                    x, self.paged_caches[si], positions, lens, bt)
+        return np.asarray(self._head(x))
 
     # ---- KV migration (disaggregated prefill/decode) -----------------------
     # The wire format is per-GLOBAL-LAYER so the source and destination

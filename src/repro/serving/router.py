@@ -10,6 +10,7 @@ measurement — there is exactly one serve-loop implementation either way.
 """
 from __future__ import annotations
 
+import dataclasses
 import warnings
 from typing import List, Optional, Sequence
 
@@ -19,6 +20,7 @@ from repro.serving.continuous import PagedPipelineBatcher, PipelineBatcher
 from repro.serving.disagg import KVLink, wire_disaggregation
 from repro.serving.loop import ServeStats, WallClock, run_serve_loop
 from repro.serving.request import Request
+from repro.serving.spec import SpecConfig
 
 __all__ = ["Router", "ServeStats", "StaticBatcher", "default_roles"]
 
@@ -127,12 +129,35 @@ class Router:
                  roles: Optional[Sequence[str]] = None,
                  kv_link: Optional[KVLink] = None,
                  prefill_token_cost: float = 0.0,
-                 step_costs: Optional[Sequence[float]] = None):
+                 step_costs: Optional[Sequence[float]] = None,
+                 spec: Optional[SpecConfig] = None,
+                 spec_ks: Optional[Sequence[int]] = None):
         assert policy in ("continuous", "static"), policy
         assert cache_layout in ("contiguous", "paged"), cache_layout
         self.replicas = list(replicas)
         self.policy = policy
         self.cache_layout = cache_layout
+        # speculative decoding: a SpecConfig shared by every replica, with
+        # optional PER-REPLICA depths (the scheduler's acceptance-aware
+        # spec_ks — 0 disables speculation on that replica)
+        if spec is not None and (cache_layout != "paged"
+                                 or policy == "static"):
+            warnings.warn(
+                "speculative decoding needs policy='continuous' with "
+                "cache_layout='paged' (multi-token verification runs "
+                "through the paged context path); serving without it",
+                stacklevel=2)
+            spec = None
+        if spec_ks is not None:
+            assert len(spec_ks) == len(self.replicas), (spec_ks,)
+
+        def replica_spec(i: int) -> Optional[SpecConfig]:
+            if spec is None:
+                return None
+            if spec_ks is None:
+                return spec
+            return dataclasses.replace(spec, k=spec_ks[i]) \
+                if spec_ks[i] >= 1 else None
         if (prefix_caching or prefill_chunk) and (
                 cache_layout != "paged" or policy == "static"):
             warnings.warn(
@@ -171,7 +196,8 @@ class Router:
                 block_size=block_size, stage_blocks=stage_blocks,
                 prefix_caching=prefix_caching, prefill_chunk=prefill_chunk,
                 prefill_token_cost=prefill_token_cost,
-                virtual_step_cost=sc, role=role, replica_id=i)
+                virtual_step_cost=sc, role=role, replica_id=i,
+                spec=replica_spec(i))
                 for i, (r, role, sc) in enumerate(
                     zip(self.replicas, self.roles, step_costs))]
             self.dispatcher = wire_disaggregation(self.workers, self.roles,

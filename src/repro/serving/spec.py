@@ -1,0 +1,367 @@
+"""Speculative decoding: draft proposals + acceptance, host-side pieces.
+
+Decode is the serving stack's last one-token-per-iteration bottleneck: every
+target-model step scans the weights once and commits exactly one token, so a
+slow replica's decode latency is pinned to its weight-scan time however much
+spare compute its step leaves idle. Speculative decoding (Leviathan et al.;
+shipped as a first-class subsystem by vLLM/Aphrodite) converts that spare
+per-step compute into MULTIPLE committed tokens: a cheap PROPOSER guesses k
+candidate tokens, the target verifies the bonus token plus all k candidates
+in ONE multi-token step (ops.paged_verify_attention through
+AsymmetricPipeline.verify_slots_paged), and acceptance commits the longest
+candidate prefix the target agrees with — between 1 and k + 1 tokens per
+target step, never fewer than plain decode.
+
+This module holds the proposers and the acceptance rules; the engine-side
+iteration (block growth, COW, joint verify dispatch, page rollback) lives in
+``serving.continuous.PagedPipelineBatcher``, the verification kernel path in
+``kernels``/``models``, and the acceptance-aware scheduling in
+``core.cost_model`` / ``core.genetic``.
+
+Proposers implement one duck-typed protocol, batched per engine iteration:
+
+  propose(items) -> {slot: proposals}
+      items: (slot_id, history, k_cap) triples for every slot proposing
+      this iteration; `history` is the slot's committed tokens (prompt +
+      outputs) plus the bonus token, `k_cap` its per-slot draft budget.
+      Returns int32 proposal arrays (possibly shorter than k_cap; slots
+      may be absent = no proposal, plain single-token verify).
+  commit(slot, n_accepted) -> None
+      acceptance outcome, so stateful proposers can keep their per-slot
+      state aligned with the committed stream.
+  release(slot) -> None
+      the slot was freed or preempted; drop its state (the request may
+      come back in a different slot).
+
+Two proposers ship:
+
+  * ``NgramProposer`` — prompt-lookup (n-gram) proposing, no extra weights:
+    the longest recent n-gram that re-occurred earlier in the slot's
+    history proposes its historical continuation. Free to run, surprisingly
+    strong on template-heavy / self-repetitive generations.
+  * ``DraftModelProposer`` — a small draft model (any attention-only config
+    from ``configs/``) decoded greedily k steps ahead per slot, with its
+    own per-slot KV rows. Rollback is positional: rejected candidates'
+    cache writes sit past the synced length and are overwritten on the
+    next proposal, so the draft never needs recomputation on rejection.
+
+The serving engine is greedy end to end (bit-identity is the repo's
+correctness bar), so acceptance in the engine is ``greedy_accept``:
+committed tokens are exactly the target's argmax chain, making spec-enabled
+serving TOKEN-IDENTICAL to plain greedy decode at any acceptance rate. The
+standard rejection-sampling rule (which preserves the target DISTRIBUTION
+under stochastic sampling) ships as ``rejection_sample_accept`` for
+sampling engines and is unit-tested, but is not wired into the greedy loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+ProposeItem = Tuple[int, np.ndarray, int]       # (slot, history, k_cap)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance rules
+# ---------------------------------------------------------------------------
+
+def greedy_accept(logits: np.ndarray, bonus: int,
+                  drafts: Sequence[int]) -> Tuple[List[int], int]:
+    """Greedy acceptance: commit the longest draft prefix that matches the
+    target's argmax chain.
+
+    ``logits`` (T, V) are the target's next-token distributions after each
+    chunk position (the bonus token at position 0, draft j at position
+    j + 1); ``drafts`` holds at most T - 1 proposals. Returns
+    ``(commit, a)``: the committed tokens ``[bonus, *accepted drafts]``
+    and the accepted draft count ``a`` — ``logits[a]`` is the sampling
+    state to carry forward (the distribution after the last committed
+    token), whose argmax is the NEXT step's bonus token. By construction
+    the committed stream equals plain greedy decode token for token.
+    """
+    commit = [int(bonus)]
+    a = 0
+    for j, dj in enumerate(drafts):
+        if int(np.argmax(logits[j])) != int(dj):
+            break
+        commit.append(int(dj))
+        a = j + 1
+    return commit, a
+
+
+def rejection_sample_accept(p_target: np.ndarray, p_draft: np.ndarray,
+                            drafts: Sequence[int], u: np.ndarray
+                            ) -> Tuple[List[int], int]:
+    """Rejection-sampling acceptance (Leviathan et al. 2023): accept draft
+    j with probability min(1, p_t[d_j] / p_d[d_j]); on the first
+    rejection, resample from the residual max(p_t - p_d, 0). Preserves
+    the target distribution exactly, whatever the draft proposes.
+
+    p_target (T, V) target probabilities after each chunk position;
+    p_draft (len(drafts), V) the draft's probabilities for its proposals;
+    u (len(drafts),) uniform variates. Returns (committed tokens AFTER
+    the bonus token, accepted draft count) — the caller samples the bonus
+    continuation from p_target[a] itself when all drafts are accepted.
+    The greedy serving loop does not use this rule (it would break
+    bit-identity with greedy decode); sampling engines can.
+    """
+    commit: List[int] = []
+    for j, dj in enumerate(drafts):
+        dj = int(dj)
+        pt = float(p_target[j, dj])
+        pd = float(p_draft[j, dj])
+        thr = min(1.0, pt / max(pd, 1e-30))
+        if pd <= 0.0 or u[j] < thr:
+            commit.append(dj)
+            continue
+        residual = np.maximum(p_target[j] - p_draft[j], 0.0)
+        tot = residual.sum()
+        if tot <= 0.0:
+            resampled = int(np.argmax(p_target[j]))
+        else:
+            # conditioned on rejection u[j] is uniform on [thr, 1);
+            # renormalize it back to [0, 1) so the inverse-CDF draw from
+            # the residual stays exact without a fresh variate
+            u_res = (u[j] - thr) / max(1.0 - thr, 1e-30)
+            resampled = int(np.argmax(np.cumsum(residual / tot) > u_res))
+        commit.append(resampled)
+        return commit, j
+    return commit, len(commit)
+
+
+# ---------------------------------------------------------------------------
+# Proposers
+# ---------------------------------------------------------------------------
+
+class NgramProposer:
+    """Prompt-lookup proposing: find the longest n-gram (ngram_max down to
+    ngram_min) ending the slot's history that also occurred EARLIER in the
+    history, and propose the tokens that followed that earlier occurrence.
+    No weights, no state — the history IS the model. Wins big whenever
+    generations echo their context (templates, code, summaries, greedy
+    loops); proposes nothing when the history never repeats, which costs
+    only the unused chunk width."""
+
+    def __init__(self, *, ngram_max: int = 3, ngram_min: int = 1):
+        assert 1 <= ngram_min <= ngram_max, (ngram_min, ngram_max)
+        self.ngram_max = ngram_max
+        self.ngram_min = ngram_min
+
+    def propose(self, items: Sequence[ProposeItem]
+                ) -> Dict[int, np.ndarray]:
+        out: Dict[int, np.ndarray] = {}
+        for slot, hist, cap in items:
+            if cap <= 0:
+                continue
+            p = self._lookup(np.asarray(hist), cap)
+            if len(p):
+                out[slot] = p
+        return out
+
+    def _lookup(self, h: np.ndarray, cap: int) -> np.ndarray:
+        L = len(h)
+        for n in range(min(self.ngram_max, L - 1), self.ngram_min - 1, -1):
+            suffix = h[L - n:]
+            # windows at p in [0, L-n-1]: every occurrence strictly before
+            # the suffix itself (p = L-n), most recent match wins
+            win = np.lib.stride_tricks.sliding_window_view(h, n)[:L - n]
+            hits = np.flatnonzero((win == suffix).all(axis=1))
+            if len(hits):
+                p = int(hits[-1])
+                return h[p + n:p + n + cap].astype(np.int32)
+        return np.zeros(0, np.int32)
+
+    def commit(self, slot: int, n_accepted: int) -> None:
+        pass
+
+    def release(self, slot: int) -> None:
+        pass
+
+
+class DraftModelProposer:
+    """A small draft model decoded greedily ``k_cap`` steps ahead per slot.
+
+    The draft keeps ONE monolithic cache pool whose batch rows mirror the
+    engine's slots (contiguous layout — the draft is tiny, reservation
+    waste is noise). Per slot it tracks ``_pos[slot]``: how many history
+    tokens its cache currently holds. Proposing feeds the bonus token at
+    position len(history) - 1 and argmax-continues k steps, caching as it
+    goes; ``commit`` extends the synced length by the accepted count, so
+    accepted candidates' K/V (already written during proposing) are kept
+    and rejected candidates' writes sit PAST the synced length — masked by
+    kv_len and overwritten by the next proposal, the same positional
+    rollback the target's paged verification uses. A slot whose cache
+    drifts from its history (fresh request, preemption recompute,
+    migration landing) is re-prefilled from scratch; ``release`` just
+    zeroes the synced length.
+
+    Attention-only draft configs (same predicate as the verification
+    path): recurrent draft state is a running summary that cannot rewind
+    past a rejected candidate.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int,
+                 max_len: int, pad_id: int = 0):
+        import jax
+
+        from repro.models import model as M
+        from repro.serving.pipeline import context_mode_supported
+        assert context_mode_supported(cfg), \
+            "draft models must be attention-only text decoders " \
+            "(recurrent draft state cannot be rolled back on rejection)"
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.pad_id = pad_id
+        self._M = M
+        self._jnp_asarray = jax.numpy.asarray
+        self.cache = M.init_cache(cfg, n_slots, max_len)
+        # tokens of each slot's history currently cached (0 = unsynced)
+        self._pos = np.zeros(n_slots, np.int64)
+        self._decode = jax.jit(
+            lambda p, t, c, pos: M.decode_step(cfg, p, t, c, pos))
+        self._prefill = jax.jit(
+            lambda p, toks, lens, c: M.prefill(cfg, p, {"tokens": toks}, c,
+                                               lens=lens))
+        self.draft_steps = 0           # draft forward passes run (profiling)
+
+    # ---- sync: (re)prefill slots whose cache doesn't hold history[:-1] ----
+    def _sync(self, items: Sequence[ProposeItem]) -> None:
+        need = [(slot, h) for slot, h, _ in items
+                if self._pos[slot] != len(h) - 1]
+        if not need:
+            return
+        m = len(need)
+        lens = np.asarray([len(h) - 1 for _, h in need], np.int32)
+        assert int(lens.max()) < self.max_len, "history exceeds draft cache"
+        # same compile-shape bucketing as the engine's insert path
+        P = min(-(-int(lens.max()) // 16) * 16, self.max_len - 1)
+        m_pad = min(1 << (m - 1).bit_length(), self.n_slots)
+        m_pad = max(m_pad, m)
+        toks = np.full((m_pad, P), self.pad_id, np.int32)
+        plens = np.ones((m_pad,), np.int32)
+        plens[:m] = lens
+        for i, (_, h) in enumerate(need):
+            toks[i, :lens[i]] = h[:-1]
+        import jax
+        scratch = self._M.init_cache(self.cfg, m_pad, self.max_len)
+        _, scratch = self._prefill(self.params, self._jnp_asarray(toks),
+                                   self._jnp_asarray(plens), scratch)
+        rows = jax.tree.map(lambda l: l[:, :m], scratch)
+        self.cache = self._M.scatter_cache_rows(
+            self.cache, rows, [slot for slot, _ in need], batch_axis=1)
+        for slot, h in need:
+            self._pos[slot] = len(h) - 1
+
+    def propose(self, items: Sequence[ProposeItem]
+                ) -> Dict[int, np.ndarray]:
+        act = [(slot, h, cap) for slot, h, cap in items if cap > 0]
+        if not act:
+            return {}
+        self._sync(act)
+        # steps 0..cap-1 produce the proposals; one EXTRA step per slot
+        # feeds its final proposal back purely to write that candidate's
+        # K/V (its logits are discarded) — without it a fully-accepted
+        # round would leave the cache one position short of what commit()
+        # marks synced, silently degrading every later proposal
+        steps = max(cap for _, _, cap in act) + 1
+        # rows not proposing this step PARK at the last cache position:
+        # their write lands in a slot row's never-read tail (the target
+        # caps committed positions at max_len - 2, so the draft never
+        # legitimately writes max_len - 1) and their logits are discarded
+        toks = np.zeros((self.n_slots,), np.int32)
+        pos = np.full((self.n_slots,), self.max_len - 1, np.int64)
+        for slot, h, _ in act:
+            toks[slot] = int(h[-1])
+            pos[slot] = len(h) - 1
+        out: Dict[int, List[int]] = {slot: [] for slot, _, _ in act}
+        for step in range(steps):
+            logits, self.cache = self._decode(
+                self.params, self._jnp_asarray(toks), self.cache,
+                self._jnp_asarray(pos))
+            self.draft_steps += 1
+            logits = np.asarray(logits)
+            for slot, h, cap in act:
+                if step < cap:
+                    nxt = int(logits[slot].argmax())
+                    out[slot].append(nxt)
+                    toks[slot] = nxt
+                    pos[slot] += 1
+                elif step == cap:
+                    # the final proposal's K/V was written by the decode
+                    # call just above; park from here on
+                    pos[slot] = self.max_len - 1
+        for slot, h, _ in act:
+            # cache now holds the history through the bonus token; the
+            # proposals' K/V past it become valid only via commit()
+            self._pos[slot] = len(h)
+        return {slot: np.asarray(v, np.int32) for slot, v in out.items()}
+
+    def commit(self, slot: int, n_accepted: int) -> None:
+        """Accepted candidates' K/V were written during proposing; extend
+        the synced length over exactly those positions."""
+        self._pos[slot] += n_accepted
+
+    def release(self, slot: int) -> None:
+        self._pos[slot] = 0
+
+
+# ---------------------------------------------------------------------------
+# Config / builder
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SpecConfig:
+    """Speculative-decoding knobs, carried from the launcher through
+    Router/InferenceEngine to each replica's engine.
+
+    k:        draft tokens proposed per target step (chunk width k + 1).
+              The scheduler's acceptance-aware search can override this
+              PER REPLICA (slow replicas speculate deeper) via
+              ``Router(spec_ks=...)``.
+    proposer: "ngram" (prompt lookup, no weights) or "draft" (small draft
+              model decoded k ahead; requires ``draft_cfg``).
+    draft_token_cost: virtual-clock cost of ONE draft proposal as a
+              fraction of a target iteration (0 = free proposals). Lets
+              simulated latencies charge the draft overhead the
+              acceptance-aware cost model reasons about.
+    """
+    k: int = 4
+    proposer: str = "ngram"
+    ngram_max: int = 3
+    ngram_min: int = 1
+    draft_cfg: Optional[ModelConfig] = None
+    draft_params: Optional[dict] = None
+    draft_seed: int = 0
+    draft_token_cost: float = 0.0
+
+    def __post_init__(self):
+        assert self.k >= 1, self.k
+        assert self.proposer in ("ngram", "draft"), self.proposer
+        if self.proposer == "draft":
+            assert self.draft_cfg is not None, \
+                "proposer='draft' needs a draft_cfg"
+
+    def build(self, *, n_slots: int, max_len: int, vocab_size: int,
+              pad_id: int = 0):
+        """Instantiate this config's proposer for one replica engine."""
+        if self.proposer == "ngram":
+            return NgramProposer(ngram_max=self.ngram_max,
+                                 ngram_min=self.ngram_min)
+        assert self.draft_cfg.vocab_size == vocab_size, \
+            (self.draft_cfg.vocab_size, vocab_size,
+             "draft and target must share a vocabulary")
+        params = self.draft_params
+        if params is None:
+            import jax
+
+            from repro.models import model as M
+            params = M.init_params(self.draft_cfg,
+                                   jax.random.PRNGKey(self.draft_seed))
+        return DraftModelProposer(self.draft_cfg, params, n_slots=n_slots,
+                                  max_len=max_len, pad_id=pad_id)

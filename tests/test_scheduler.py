@@ -177,6 +177,84 @@ def test_attainment_monotone_in_replicas(n, seed):
     assert a2 >= a1 - 1e-9
 
 
+# ---------------------------------------------------------------------------
+# Acceptance-aware speculative decoding (serving.spec)
+# ---------------------------------------------------------------------------
+
+def test_expected_commit_per_step_bounds_and_monotonicity():
+    assert cm.expected_commit_per_step(0.0, 4) == 1.0    # nothing accepted
+    assert cm.expected_commit_per_step(1.0, 4) == 5.0    # everything accepted
+    assert cm.expected_commit_per_step(0.5, 0) == 1.0    # plain decode
+    prev = 0.0
+    for a in (0.1, 0.3, 0.5, 0.7, 0.9):
+        e = cm.expected_commit_per_step(a, 4)
+        assert 1.0 < e < 5.0 and e > prev
+        prev = e
+    assert cm.expected_commit_per_step(0.8, 6) \
+        > cm.expected_commit_per_step(0.8, 2)
+
+
+def test_best_spec_k_deeper_for_slower_replica():
+    """The acceptance-aware depth choice: the draft cost is absolute, so
+    a slow replica amortizes each draft over a bigger saved target step
+    and speculates DEEPER — the heterogeneity lever."""
+    fast = cm.best_spec_k(1.0, 0.5, 0.8, max_k=8)
+    slow = cm.best_spec_k(10.0, 0.5, 0.8, max_k=8)
+    assert slow > fast >= 1
+    assert cm.best_spec_k(1.0, 0.0, 0.8, max_k=8) == 8   # free drafts
+    assert cm.best_spec_k(1.0, 0.5, 0.0, max_k=8) == 0   # hopeless drafts
+    assert cm.spec_step_cost(3.0, 0.7, 0.6, 0) == 3.0    # k=0 = plain cost
+
+
+def test_choose_spec_ks_slowed_replica_speculates_deeper():
+    """genetic.choose_spec_ks on a fast/slow replica pair: the slowed-down
+    replica gets the deeper per-replica spec-k, and the decode multiplier
+    scales ONLY the decode phase of the simulated worker."""
+    from repro.core.genetic import choose_spec_ks
+    fast = slo_sim.PhasedReplicaModel(
+        prefill_latency=1.0, prefill_bottleneck=0.5,
+        decode_latency=2.0, decode_bottleneck=2.0)
+    slow = slo_sim.PhasedReplicaModel(
+        prefill_latency=1.0, prefill_bottleneck=0.5,
+        decode_latency=20.0, decode_bottleneck=20.0)
+    ks, mults = choose_spec_ks([fast, slow], alpha=0.8,
+                               draft_step_cost=0.02, s_out=64, max_k=8)
+    assert ks[1] > ks[0] >= 1
+    assert all(0.0 < m <= 1.0 + 1e-9 for m in mults)
+    scaled = slow.with_spec(mults[1])
+    assert scaled.prefill_latency == slow.prefill_latency
+    assert scaled.prefill_bottleneck == slow.prefill_bottleneck
+    assert scaled.decode_bottleneck < slow.decode_bottleneck
+
+
+def test_spec_multi_token_commits_improve_attainment():
+    """slo_sim workers consuming multi-token commits: a decode-bound
+    replica that misses its deadline at one token per step makes it once
+    speculation shrinks time per committed token."""
+    rep = slo_sim.PhasedReplicaModel(
+        prefill_latency=0.2, prefill_bottleneck=0.2,
+        decode_latency=2.0, decode_bottleneck=1.0)
+    base = slo_sim.simulate([rep.colocated()], 2.0, 1.5, duration=30)
+    spec = slo_sim.simulate([rep.with_spec(0.4).colocated()], 2.0, 1.5,
+                            duration=30)
+    assert spec > base
+
+
+def test_schedule_threads_spec_ks():
+    half = cl.hetero_half_price()
+    task = cm.Task(batch=1, s_in=128, s_out=32)
+    res = schedule(half, "llama2-70b", task, deadline=8.0, rate=4.0,
+                   iters=6, seed=0, paper_exact=True, spec_decode=True,
+                   spec_alpha=0.8, spec_draft_cost=1e-4, max_spec_k=6)
+    assert res.spec_ks is not None
+    assert len(res.spec_ks) == res.assignment.num_replicas
+    assert all(0 <= k <= 6 for k in res.spec_ks)
+    # without spec_decode the field stays None (baseline behavior intact)
+    res0 = schedule(half, "llama2-70b", task, deadline=8.0, rate=4.0,
+                    iters=6, seed=0, paper_exact=True)
+    assert res0.spec_ks is None
+
+
 def test_peak_rate_bisection():
     reps = [slo_sim.ReplicaModel(latency=0.5, bottleneck=0.25)] * 2
     peak = slo_sim.peak_rate_for_attainment(reps, deadline=1.0, target=0.99,
