@@ -14,8 +14,8 @@ from benchmarks import (bench_case_study, bench_continuous,
                         bench_disagg, bench_dryrun_table, bench_kernels,
                         bench_layout_breakdown, bench_offline_resilience,
                         bench_paged, bench_quant_economics,
-                        bench_slo_attainment, bench_spec,
-                        bench_swarm_compare)
+                        bench_quant_kv, bench_slo_attainment,
+                        bench_spec, bench_swarm_compare)
 from benchmarks.common import validate_results
 
 SUITES = {
@@ -32,6 +32,7 @@ SUITES = {
     "disagg": bench_disagg.run,                     # beyond-paper (HexGen-2)
     "spec": bench_spec.run,                         # beyond-paper (spec decode)
     "quant_economics": bench_quant_economics.run,   # beyond-paper (int8)
+    "quant_kv": bench_quant_kv.run,                 # beyond-paper (int8 KV)
     "dryrun_table": bench_dryrun_table.run,         # deliverable (g)
 }
 

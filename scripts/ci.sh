@@ -3,7 +3,9 @@
 #
 #   scripts/ci.sh --fast   fast gate: pytest -m "not slow" + interpret-mode
 #                          kernel smoke (decode/context/verify) + the
-#                          spec==greedy smoke (~5 min on a laptop CPU)
+#                          spec==greedy smoke + the quantized-KV smoke
+#                          (fused-dequant kernels + int8-pool serving)
+#                          (~5 min on a laptop CPU)
 #   scripts/ci.sh --full   everything: full pytest (incl. @slow multi-device
 #                          subprocess sweeps), every serving smoke on 4
 #                          virtual devices (continuous/paged/prefix/disagg/
@@ -42,6 +44,11 @@ echo "=== speculative-decoding smoke (4 virtual devices) ==="
 # spec == greedy token identity on the multi-device pipeline gates every
 # tier: speculation must never change WHICH tokens serving produces
 python scripts/smoke_serving.py spec
+
+echo "=== quantized-KV smoke (interpret kernels + int8-pool serving) ==="
+# the exactness gate for fused dequant (bitwise vs the unquantized
+# kernels on materialized-dequant pages) plus int8 page pools end to end
+python scripts/smoke_serving.py quant
 
 if [[ "$TIER" == "--full" ]]; then
   echo "=== serving smokes (4 virtual devices) ==="

@@ -29,6 +29,41 @@ class Task:
     bytes_per_el: int = 2     # B_type (FP16/bf16)
 
 
+# ---------------------------------------------------------------------------
+# Quantized KV pages (models.quant.KV_DTYPES): effective cache bytes per
+# element by pool storage precision. Quantized layouts add a float32
+# per-token-per-head scale, amortized here over head_dim elements.
+# ---------------------------------------------------------------------------
+
+KV_DTYPE_PAYLOAD_BYTES = {"fp32": 4.0, "bf16": 2.0, "int8": 1.0, "fp8": 1.0}
+_KV_QUANTIZED = ("int8", "fp8")
+_KV_SCALE_HEAD_DIM = 128       # modeling default for the scale amortization
+
+
+def kv_dtype_bytes_per_el(kv_dtype: Optional[str], *,
+                          head_dim: int = _KV_SCALE_HEAD_DIM
+                          ) -> Optional[float]:
+    """Effective KV-cache bytes per element for a paged pool at `kv_dtype`,
+    scale overhead included (4 / head_dim per element for int8/fp8).
+    None (model-default precision) returns None: callers keep the
+    bytes_per_el the profile was built with."""
+    if kv_dtype is None:
+        return None
+    b = KV_DTYPE_PAYLOAD_BYTES[kv_dtype]
+    if kv_dtype in _KV_QUANTIZED:
+        b += 4.0 / head_dim
+    return b
+
+
+def _kv_width_factor(task: Task, kv_dtype: Optional[str]) -> float:
+    """Multiplier rescaling a profile's kv_bytes_per_token_per_layer (baked
+    at task.bytes_per_el) to the actual pool storage precision."""
+    eff = kv_dtype_bytes_per_el(kv_dtype)
+    if eff is None:
+        return 1.0
+    return eff / task.bytes_per_el
+
+
 @dataclasses.dataclass(frozen=True)
 class ModelProfile:
     """What the cost model needs to know about the served model."""
@@ -159,17 +194,21 @@ def _kv_tokens_per_seq(task: Task, block_size: int = 0,
 
 def mem_bytes_per_device(cluster: Cluster, devices: Sequence[int],
                          layers: int, model: ModelProfile,
-                         task: Task, block_size: int = 0) -> float:
+                         task: Task, block_size: int = 0,
+                         kv_dtype: Optional[str] = None) -> float:
     """C_mem^d: params + KV cache (sharded over the TP group) + 4 activation
     buffers. block_size > 0 accounts the KV term at paged-block granularity
-    (serving.block_manager) instead of contiguous rows."""
+    (serving.block_manager) instead of contiguous rows; kv_dtype reprices
+    the cache term at the pool's storage precision (int8/fp8 pages)."""
     n = len(devices)
     B = task.bytes_per_el
     H = model.d_model
     s_total = task.s_in + task.s_out
     s_kv = _kv_tokens_per_seq(task, block_size)
+    kv_b = model.kv_bytes_per_token_per_layer * _kv_width_factor(task,
+                                                                 kv_dtype)
     per_layer = model.params_per_layer * B / n \
-        + model.kv_bytes_per_token_per_layer * task.batch * s_kv / n
+        + kv_b * task.batch * s_kv / n
     return per_layer * layers + 4 * task.batch * s_total * H * B
 
 
@@ -179,9 +218,10 @@ MEM_UTIL = 0.9
 
 
 def mem_ok(cluster: Cluster, devices: Sequence[int], layers: int,
-           model: ModelProfile, task: Task, block_size: int = 0) -> bool:
+           model: ModelProfile, task: Task, block_size: int = 0,
+           kv_dtype: Optional[str] = None) -> bool:
     need = mem_bytes_per_device(cluster, devices, layers, model, task,
-                                block_size)
+                                block_size, kv_dtype)
     return all(need <= MEM_UTIL * cluster.devices[d].spec.mem_bytes
                for d in devices)
 
@@ -189,7 +229,8 @@ def mem_ok(cluster: Cluster, devices: Sequence[int], layers: int,
 def concurrent_capacity(cluster: Cluster, devices: Sequence[int],
                         layers: int, model: ModelProfile, task: Task, *,
                         max_len: int = 0, block_size: int = 0,
-                        prefix_hit_rate: float = 0.0) -> int:
+                        prefix_hit_rate: float = 0.0,
+                        kv_dtype: Optional[str] = None) -> int:
     """How many sequences of `task`'s shape fit in the memory left after
     parameters and activation buffers on this stage's TP group — the
     scheduler-facing capacity number behind the paged refactor.
@@ -205,6 +246,11 @@ def concurrent_capacity(cluster: Cluster, devices: Sequence[int],
     them, so a shared-system-prompt workload fits proportionally more
     concurrent sequences (benchmarks/bench_prefix.py measures the realized
     gap).
+
+    kv_dtype reprices the per-sequence KV demand at the pool's storage
+    precision: int8/fp8 pages fit ~2x the sequences of bf16 pools in the
+    same free memory (benchmarks/bench_quant_kv.py measures the realized
+    capacity gap).
     """
     n = len(devices)
     B = task.bytes_per_el
@@ -219,7 +265,8 @@ def concurrent_capacity(cluster: Cluster, devices: Sequence[int],
         toks = _kv_tokens_per_seq(task, block_size, prefix_hit_rate)
     else:
         toks = max(max_len, s_total)
-    per_seq = model.kv_bytes_per_token_per_layer * toks * layers / n
+    per_seq = model.kv_bytes_per_token_per_layer \
+        * _kv_width_factor(task, kv_dtype) * toks * layers / n
     if per_seq <= 0:
         return 1 << 30              # recurrent-only stacks: O(1) state
     return int(free // per_seq)
@@ -306,14 +353,18 @@ def pipeline_phase_costs(cluster: Cluster, stages: List[Sequence[int]],
 
 
 def kv_migration_bytes(model: ModelProfile, task: Task,
-                       block_size: int = 0) -> float:
+                       block_size: int = 0,
+                       kv_dtype: Optional[str] = None) -> float:
     """Wire size of one request's prefilled KV (every layer, the whole
     prompt, rounded up to whole blocks when paged): what a prefill->decode
-    handoff ships over the modeled link."""
+    handoff ships over the modeled link. The wire carries the CACHE dtype
+    — int8/fp8 pages ship their payload + float32 scales, ~1/4 the fp32
+    bytes — so kv_dtype reprices the transfer, not just residency."""
     toks = task.s_in
     if block_size:
         toks = -(-toks // block_size) * block_size
-    return model.kv_bytes_per_token_per_layer * toks * model.num_layers \
+    return model.kv_bytes_per_token_per_layer \
+        * _kv_width_factor(task, kv_dtype) * toks * model.num_layers \
         * task.batch
 
 

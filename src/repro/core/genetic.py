@@ -154,6 +154,35 @@ class SearchResult:
     # without spec_decode. Slow replicas speculate deeper — pass to
     # InferenceEngine(spec_ks=...).
     spec_ks: Optional[List[int]] = None
+    # quantized KV pages: per-pipeline pool precision (None entry = model
+    # default, "int8" = quantized pages), aligned with
+    # assignment.pipelines; None = search ran without kv_dtype_search.
+    # Memory-constrained replicas quantize — pass to
+    # InferenceEngine(kv_dtypes=...).
+    kv_dtypes: Optional[List[Optional[str]]] = None
+
+
+def choose_kv_dtypes(plans: Sequence[PipelinePlan],
+                     capacity_at, *, rate: float
+                     ) -> List[Optional[str]]:
+    """The precision dimension of the search: per replica, keep the pool
+    at model precision unless its KV capacity cannot hold its share of
+    the in-flight demand, in which case quantize to int8 pages (~2-4x
+    the sequences in the same memory, cost_model.kv_dtype_bytes_per_el).
+
+    ``capacity_at(plan, kv_dtype)`` returns the replica's concurrent-
+    sequence bound at a candidate precision. Demand is Little's law:
+    rate/N arrivals/s held for the replica's end-to-end latency each.
+    Quantization costs accuracy (bounded, but nonzero), so a replica
+    that FITS at full precision stays there — only the memory-bound
+    ones trade precision for capacity."""
+    n = max(len(plans), 1)
+    out: List[Optional[str]] = []
+    for p in plans:
+        need = rate / n * p.cost
+        cap = capacity_at(p, None)
+        out.append(None if cap >= need else "int8")
+    return out
 
 
 def choose_spec_ks(models: Sequence[slo_sim.PhasedReplicaModel], *,
@@ -228,7 +257,9 @@ class Evaluator:
                  prefix_hit_rate: float = 0.0,
                  disaggregate: bool = False, kv_link_gbps: float = 0.0,
                  spec_decode: bool = False, spec_alpha: float = 0.7,
-                 spec_draft_cost: float = 0.0, max_spec_k: int = 8):
+                 spec_draft_cost: float = 0.0, max_spec_k: int = 8,
+                 kv_dtype: Optional[str] = None,
+                 kv_dtype_search: bool = False):
         self.cluster = cluster
         self.model = model
         self.task = task
@@ -259,10 +290,18 @@ class Evaluator:
         self.spec_alpha = spec_alpha
         self.spec_draft_cost = spec_draft_cost
         self.max_spec_k = max_spec_k
+        # quantized KV pages: kv_dtype fixes ONE pool precision for every
+        # replica (None = model default); kv_dtype_search instead picks
+        # precision PER REPLICA (choose_kv_dtypes) — memory-bound replicas
+        # quantize, the rest stay at model precision
+        self.kv_dtype = kv_dtype
+        self.kv_dtype_search = kv_dtype_search
         self._plan_cache: Dict[FrozenSet[int], Optional[PipelinePlan]] = {}
         self._fit_cache: Dict[Individual, Tuple[float, float]] = {}
         self._roles_cache: Dict[Individual, Optional[List[str]]] = {}
         self._spec_cache: Dict[Individual, Optional[List[int]]] = {}
+        self._kvd_cache: Dict[Individual,
+                              Optional[List[Optional[str]]]] = {}
         self.evaluations = 0
 
     def _feasible(self, group: FrozenSet[int]) -> bool:
@@ -286,19 +325,25 @@ class Evaluator:
         plans = [self.plan(g) for g in ind]
         return Assignment([p for p in plans if p is not None])
 
-    def _max_concurrent(self, plan: PipelinePlan) -> int:
+    def _max_concurrent(self, plan: PipelinePlan,
+                        kv_dtype: Optional[str] = "__default__") -> int:
         """KV-capacity bound of one replica: the tightest stage's
         concurrent-sequence count at the configured block granularity
-        (0 when capacity is idealized as unbounded)."""
+        (0 when capacity is idealized as unbounded) and pool precision
+        (the evaluator-wide kv_dtype unless overridden per replica)."""
         if self.kv_block_size is None:
             return 0
+        if kv_dtype == "__default__":
+            kv_dtype = self.kv_dtype
         return min(cm.concurrent_capacity(
             self.cluster, st.device_ids, st.num_layers, self.model,
             self.task, block_size=self.kv_block_size,
-            prefix_hit_rate=self.prefix_hit_rate)
+            prefix_hit_rate=self.prefix_hit_rate, kv_dtype=kv_dtype)
             for st in plan.stages)
 
-    def _phase_model(self, plan: PipelinePlan) -> slo_sim.PhasedReplicaModel:
+    def _phase_model(self, plan: PipelinePlan,
+                     kv_dtype: Optional[str] = "__default__"
+                     ) -> slo_sim.PhasedReplicaModel:
         stages = [st.device_ids for st in plan.stages]
         pc = cm.pipeline_phase_costs(self.cluster, stages, plan.layer_split,
                                      self.model, self.task)
@@ -307,7 +352,7 @@ class Evaluator:
             prefill_bottleneck=pc.prefill_bottleneck,
             decode_latency=pc.decode_latency,
             decode_bottleneck=pc.decode_bottleneck,
-            max_concurrent=self._max_concurrent(plan))
+            max_concurrent=self._max_concurrent(plan, kv_dtype))
 
     def _pair_delay_fn(self, plans: List[PipelinePlan], kv_bytes: float):
         """Per-pair transfer delay over the cluster's best link from the
@@ -331,6 +376,13 @@ class Evaluator:
         self.fitness(ind)
         return self._spec_cache[ind]
 
+    def kv_dtypes_for(self, ind: Individual
+                      ) -> Optional[List[Optional[str]]]:
+        """The per-replica pool precisions fitness() chose for `ind`
+        (None = search ran without kv_dtype_search)."""
+        self.fitness(ind)
+        return self._kvd_cache[ind]
+
     def fitness(self, ind: Individual) -> Tuple[float, float]:
         """(SLO attainment, -mean latency) to maximize lexicographically.
         With disaggregate=True the attainment is the better of colocated
@@ -341,10 +393,24 @@ class Evaluator:
             return self._fit_cache[ind]
         self.evaluations += 1
         asg = self.assignment(ind)
+        # precision per replica: memory-bound replicas quantize to int8
+        # pages, the rest keep the model default (choose_kv_dtypes)
+        kv_dtypes = None
+        if self.kv_dtype_search and self.kv_block_size is not None \
+                and asg.pipelines:
+            kv_dtypes = choose_kv_dtypes(
+                asg.pipelines,
+                lambda p, kvd: self._max_concurrent(p, kvd),
+                rate=self.rate)
+
+        def kvd(i: int) -> Optional[str]:
+            return kv_dtypes[i] if kv_dtypes is not None else self.kv_dtype
+
         models = None
         spec_ks = None
         if (self.spec_decode or self.disaggregate) and asg.pipelines:
-            models = [self._phase_model(p) for p in asg.pipelines]
+            models = [self._phase_model(p, kvd(i))
+                      for i, p in enumerate(asg.pipelines)]
         if self.spec_decode and models:
             spec_ks, mults = choose_spec_ks(
                 models, alpha=self.spec_alpha,
@@ -357,14 +423,22 @@ class Evaluator:
         else:
             reps = [slo_sim.ReplicaModel(
                 p.cost, p.bottleneck,
-                max_concurrent=self._max_concurrent(p))
-                for p in asg.pipelines]
+                max_concurrent=self._max_concurrent(p, kvd(i)))
+                for i, p in enumerate(asg.pipelines)]
         att = slo_sim.simulate(reps, self.rate, self.deadline,
                                duration=self.sim_duration, seed=self.seed)
         roles = None
         if self.disaggregate and len(asg.pipelines) >= 2:
+            # migration ships the CACHE dtype over the link; with per-
+            # replica search the wire runs at the quantized width as soon
+            # as any replica quantized (the serving layer coerces one
+            # uniform pool dtype across a disaggregated group)
+            wire_kvd = self.kv_dtype
+            if kv_dtypes is not None and any(kv_dtypes):
+                wire_kvd = next(d for d in kv_dtypes if d)
             kv_bytes = cm.kv_migration_bytes(self.model, self.task,
-                                             self.kv_block_size or 0)
+                                             self.kv_block_size or 0,
+                                             kv_dtype=wire_kvd)
             if self.kv_link_gbps > 0:
                 kw = dict(kv_bytes=kv_bytes,
                           link_bw=self.kv_link_gbps * 1e9 / 8)
@@ -378,6 +452,7 @@ class Evaluator:
                 att, roles = d_att, d_roles
         self._roles_cache[ind] = roles
         self._spec_cache[ind] = spec_ks
+        self._kvd_cache[ind] = kv_dtypes
         mean_lat = np.mean([p.cost for p in asg.pipelines]) if asg.pipelines \
             else float("inf")
         out = (att, -mean_lat)
@@ -394,12 +469,16 @@ def search(cluster: Cluster, model: cm.ModelProfile, task: cm.Task, *,
            disaggregate: bool = False, kv_link_gbps: float = 0.0,
            spec_decode: bool = False, spec_alpha: float = 0.7,
            spec_draft_cost: float = 0.0, max_spec_k: int = 8,
+           kv_dtype: Optional[str] = None, kv_dtype_search: bool = False,
            init: Optional[List[Individual]] = None) -> SearchResult:
     """The full two-phase search: genetic over partitions, DP inside.
     disaggregate=True adds the prefill/decode role split as a scored
     search dimension (SearchResult.roles); spec_decode=True scores every
     replica at its acceptance-aware best speculation depth
-    (SearchResult.spec_ks — slow replicas speculate deeper)."""
+    (SearchResult.spec_ks — slow replicas speculate deeper);
+    kv_dtype fixes one pool precision for every replica, while
+    kv_dtype_search=True picks precision PER REPLICA instead
+    (SearchResult.kv_dtypes — memory-bound replicas quantize)."""
     rng = np.random.default_rng(seed)
     ev = Evaluator(cluster, model, task, deadline=deadline, rate=rate,
                    sim_duration=sim_duration, seed=seed,
@@ -407,7 +486,8 @@ def search(cluster: Cluster, model: cm.ModelProfile, task: cm.Task, *,
                    prefix_hit_rate=prefix_hit_rate,
                    disaggregate=disaggregate, kv_link_gbps=kv_link_gbps,
                    spec_decode=spec_decode, spec_alpha=spec_alpha,
-                   spec_draft_cost=spec_draft_cost, max_spec_k=max_spec_k)
+                   spec_draft_cost=spec_draft_cost, max_spec_k=max_spec_k,
+                   kv_dtype=kv_dtype, kv_dtype_search=kv_dtype_search)
     if init is None:
         if mutation == "hexgen":
             pop = kmeans_init(cluster, rng)
@@ -446,4 +526,5 @@ def search(cluster: Cluster, model: cm.ModelProfile, task: cm.Task, *,
     return SearchResult(assignment=asg, attainment=scored[0][0][0],
                         history=history, evaluations=ev.evaluations,
                         roles=ev.roles_for(best),
-                        spec_ks=ev.spec_ks_for(best))
+                        spec_ks=ev.spec_ks_for(best),
+                        kv_dtypes=ev.kv_dtypes_for(best))

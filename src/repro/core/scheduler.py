@@ -21,7 +21,9 @@ def schedule(cluster: Cluster, arch: str, task: cm.Task, *,
              spec_decode: bool = False,
              spec_alpha: float = 0.7,
              spec_draft_cost: float = 0.0,
-             max_spec_k: int = 8) -> SearchResult:
+             max_spec_k: int = 8,
+             kv_dtype: Optional[str] = None,
+             kv_dtype_search: bool = False) -> SearchResult:
     """Find an assignment of `cluster` serving `arch` replicas.
 
     deadline: SLO latency bound (s); rate: request rate (req/s).
@@ -48,6 +50,14 @@ def schedule(cluster: Cluster, arch: str, task: cm.Task, *,
     replicas speculate deeper. The chosen depths land in
     SearchResult.spec_ks, aligned with assignment.pipelines — pass them
     to InferenceEngine(spec_ks=...).
+
+    kv_dtype prices every replica's KV capacity (and the disaggregation
+    wire) at that paged-pool storage precision ("int8"/"fp8" pages hold
+    ~2-4x the sequences of fp32 in the same memory);
+    kv_dtype_search=True instead picks precision PER REPLICA — only the
+    memory-bound replicas quantize. The choices land in
+    SearchResult.kv_dtypes, aligned with assignment.pipelines — pass
+    them to InferenceEngine(kv_dtypes=...).
     """
     cfg = get_config(arch)
     profile = cm.ModelProfile.from_config(cfg, paper_exact=paper_exact,
@@ -61,6 +71,7 @@ def schedule(cluster: Cluster, arch: str, task: cm.Task, *,
                          kv_link_gbps=kv_link_gbps,
                          spec_decode=spec_decode, spec_alpha=spec_alpha,
                          spec_draft_cost=spec_draft_cost,
-                         max_spec_k=max_spec_k)
+                         max_spec_k=max_spec_k, kv_dtype=kv_dtype,
+                         kv_dtype_search=kv_dtype_search)
     res.assignment.validate(cfg.num_layers)
     return res

@@ -385,7 +385,7 @@ def _decode_attention_xla(q, k, v, *, kv_len, kv_start, scale):
 # ---------------------------------------------------------------------------
 
 def paged_decode_attention(q, k_pages, v_pages, block_tables, *, kv_len=None,
-                           scale=None):
+                           scale=None, k_scale=None, v_scale=None):
     """q (b,1,hq,d) against a paged cache: k_pages/v_pages
     (n_blocks, block_size, hkv, d) shared by all sequences, block_tables
     (b, max_blocks) int32 mapping logical block j of row i to a physical
@@ -398,7 +398,27 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, *, kv_len=None,
     positions contribute exact zeros either way). The Pallas path streams
     pages directly through the block table (kernels.paged_attention) and
     never materializes the gather.
+
+    k_scale/v_scale (n_blocks, block_size, hkv) f32 mark a QUANTIZED pool
+    (int8/fp8 payload, models/quant.py): the Pallas path fuses the dequant
+    in-register before the score dot, the XLA path dequantizes the pool and
+    gathers — both match ref.paged_decode_attention_quant_ref.
     """
+    if k_scale is not None:
+        if _BACKEND in ("pallas", "pallas_interpret"):
+            from repro.kernels import paged_attention as pa
+            return pa.paged_decode_attention_quant_pallas(
+                q, k_pages, v_pages, k_scale, v_scale, block_tables,
+                kv_len=kv_len, scale=scale,
+                interpret=(_BACKEND == "pallas_interpret"))
+        k = ref.gather_pages(ref.dequant_pages(k_pages, k_scale),
+                             block_tables)
+        v = ref.gather_pages(ref.dequant_pages(v_pages, v_scale),
+                             block_tables)
+        if kv_len is None:
+            kv_len = jnp.full((q.shape[0],), k.shape[1], jnp.int32)
+        return _decode_attention_xla(q, k, v, kv_len=kv_len, kv_start=None,
+                                     scale=scale)
     if _BACKEND in ("pallas", "pallas_interpret"):
         from repro.kernels import paged_attention as pa
         return pa.paged_decode_attention_pallas(
@@ -413,7 +433,7 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, *, kv_len=None,
 
 
 def paged_context_attention(q, k_pages, v_pages, block_tables, *, q_start,
-                            kv_len, scale=None):
+                            kv_len, scale=None, k_scale=None, v_scale=None):
     """CONTEXT PREFILL against a block-paged cache: q (b,C,hq,d) is a chunk
     of new tokens (row i's token j at absolute position q_start[i] + j)
     attending causally to the prior pages AND itself — the chunk's K/V must
@@ -428,7 +448,22 @@ def paged_context_attention(q, k_pages, v_pages, block_tables, *, q_start,
     C is a bounded chunk width, so this stays small; the Pallas path
     streams pages through the block table with online softmax
     (kernels.paged_attention.paged_context_attention_pallas).
+
+    k_scale/v_scale mark a quantized pool, as in paged_decode_attention.
     """
+    if k_scale is not None:
+        if _BACKEND in ("pallas", "pallas_interpret"):
+            from repro.kernels import paged_attention as pa
+            return pa.paged_context_attention_quant_pallas(
+                q, k_pages, v_pages, k_scale, v_scale, block_tables,
+                q_start=q_start, kv_len=kv_len, scale=scale,
+                interpret=(_BACKEND == "pallas_interpret"))
+        k = ref.gather_pages(ref.dequant_pages(k_pages, k_scale),
+                             block_tables)
+        v = ref.gather_pages(ref.dequant_pages(v_pages, v_scale),
+                             block_tables)
+        return ref.context_attention_ref(q, k, v, q_start=q_start,
+                                         kv_len=kv_len, scale=scale)
     if _BACKEND in ("pallas", "pallas_interpret"):
         from repro.kernels import paged_attention as pa
         return pa.paged_context_attention_pallas(
@@ -442,7 +477,7 @@ def paged_context_attention(q, k_pages, v_pages, block_tables, *, q_start,
 
 
 def paged_verify_attention(q, k_pages, v_pages, block_tables, *, kv_start,
-                           kv_len, scale=None):
+                           kv_len, scale=None, k_scale=None, v_scale=None):
     """MULTI-TOKEN VERIFICATION against a block-paged cache (speculative
     decoding): q (b,T,hq,d) is each slot's candidate chunk — the bonus
     token plus up to T-1 draft proposals — whose row-i token j sits at
@@ -462,7 +497,22 @@ def paged_verify_attention(q, k_pages, v_pages, block_tables, *, kv_start,
     (kernels.paged_attention.paged_verify_attention_pallas); the XLA path
     gathers pages into a contiguous view and runs the oracle — T is k+1,
     a handful of tokens, so the (T, S) score tile stays tiny.
+
+    k_scale/v_scale mark a quantized pool, as in paged_decode_attention.
     """
+    if k_scale is not None:
+        if _BACKEND in ("pallas", "pallas_interpret"):
+            from repro.kernels import paged_attention as pa
+            return pa.paged_verify_attention_quant_pallas(
+                q, k_pages, v_pages, k_scale, v_scale, block_tables,
+                kv_start=kv_start, kv_len=kv_len, scale=scale,
+                interpret=(_BACKEND == "pallas_interpret"))
+        k = ref.gather_pages(ref.dequant_pages(k_pages, k_scale),
+                             block_tables)
+        v = ref.gather_pages(ref.dequant_pages(v_pages, v_scale),
+                             block_tables)
+        return ref.context_attention_ref(q, k, v, q_start=kv_start,
+                                         kv_len=kv_len, scale=scale)
     if _BACKEND in ("pallas", "pallas_interpret"):
         from repro.kernels import paged_attention as pa
         return pa.paged_verify_attention_pallas(

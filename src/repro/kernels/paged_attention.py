@@ -114,6 +114,108 @@ def paged_decode_attention_pallas(q, k_pages, v_pages, block_tables, *,
 
 
 # ---------------------------------------------------------------------------
+# Quantized page pools (int8 / fp8 payloads + per-token-per-head f32 scales,
+# models/quant.py): the SAME grid and DMA routing, with two extra tensor
+# operands — the scale pools (n_blocks, block_size, h_kv) — riding the same
+# scalar-prefetch block-table index map as the pages they describe. Dequant
+# is fused in-register: each tile's payload is widened to f32 and multiplied
+# by its scale column right before the online-softmax dot, so a full-width
+# page is never materialized in HBM or VMEM.
+# ---------------------------------------------------------------------------
+
+def _kernel_quant(tbl_ref, len_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                  o_ref, acc_ref, m_ref, l_ref, *, scale, nb, block_size):
+    ib = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kpos = ik * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_size), 1)
+    mask = kpos < len_ref[ib]
+
+    q = q_ref[0, 0].astype(jnp.float32)                 # (1, d)
+    k = k_ref[0, :, 0].astype(jnp.float32) \
+        * ks_ref[0, :, 0].astype(jnp.float32)[:, None]  # (block_size, d)
+    v = v_ref[0, :, 0].astype(jnp.float32) \
+        * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m_new[:, None]))
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == nb - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_quant_pallas(q, k_pages, v_pages, k_scale,
+                                        v_scale, block_tables, *,
+                                        kv_len=None, scale=None,
+                                        interpret=False):
+    """Quantized-pool decode: k_pages/v_pages (n_blocks,block_size,hkv,d)
+    int8/fp8 payloads, k_scale/v_scale (n_blocks,block_size,hkv) f32.
+    Otherwise identical to paged_decode_attention_pallas."""
+    b, one, hq, d = q.shape
+    assert one == 1
+    n_blocks, block_size, hkv, _ = k_pages.shape
+    g = hq // hkv
+    nb = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    if kv_len is None:
+        kv_len = jnp.full((b,), nb * block_size, jnp.int32)
+    tbl = jnp.asarray(block_tables, jnp.int32)
+    lens = jnp.asarray(kv_len, jnp.int32)
+
+    page_spec = pl.BlockSpec((1, block_size, 1, d),
+                             lambda ib, ih, ik, tbl, lens:
+                             (tbl[ib, ik], 0, ih // g, 0))
+    scale_spec = pl.BlockSpec((1, block_size, 1),
+                              lambda ib, ih, ik, tbl, lens:
+                              (tbl[ib, ik], 0, ih // g))
+    kern = functools.partial(_kernel_quant, scale=scale, nb=nb,
+                             block_size=block_size)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hq, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d),
+                         lambda ib, ih, ik, tbl, lens: (ib, 0, ih, 0)),
+            page_spec,
+            page_spec,
+            scale_spec,
+            scale_spec,
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d),
+                               lambda ib, ih, ik, tbl, lens: (ib, 0, ih, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, d), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, 1, hq, d), q.dtype),
+        interpret=interpret,
+    )(tbl, lens, q, k_pages, v_pages, k_scale, v_scale)
+
+
+# ---------------------------------------------------------------------------
 # Paged CONTEXT prefill: a chunk of C new tokens against the paged cache
 # (prior pages + the chunk's own K/V, already scattered in) — the warm-prefix
 # and chunked-prefill kernel. Identical grid/DMA structure to the decode
@@ -210,6 +312,102 @@ def paged_context_attention_pallas(q, k_pages, v_pages, block_tables, *,
     )(tbl, starts, lens, q, k_pages, v_pages)
 
 
+def _ctx_kernel_quant(tbl_ref, start_ref, len_ref, q_ref, k_ref, v_ref,
+                      ks_ref, vs_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                      scale, nb, block_size, C):
+    ib = pl.program_id(0)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kpos = ik * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, (C, block_size), 1)
+    qpos = start_ref[ib] + jax.lax.broadcasted_iota(
+        jnp.int32, (C, block_size), 0)
+    mask = (kpos <= qpos) & (kpos < len_ref[ib])
+
+    q = q_ref[0, :, 0].astype(jnp.float32)              # (C, d)
+    k = k_ref[0, :, 0].astype(jnp.float32) \
+        * ks_ref[0, :, 0].astype(jnp.float32)[:, None]  # (block_size, d)
+    v = v_ref[0, :, 0].astype(jnp.float32) \
+        * vs_ref[0, :, 0].astype(jnp.float32)[:, None]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m_new[:, None]))
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == nb - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o = acc_ref[...] / l[:, None]
+        o = jnp.where(m_ref[...][:, None] <= NEG_INF / 2, 0.0, o)
+        o_ref[0, :, 0] = o.astype(o_ref.dtype)
+
+
+def paged_context_attention_quant_pallas(q, k_pages, v_pages, k_scale,
+                                         v_scale, block_tables, *, q_start,
+                                         kv_len, scale=None,
+                                         interpret=False):
+    """Quantized-pool context prefill: same contract as
+    paged_context_attention_pallas with int8/fp8 payload pools plus
+    (n_blocks,block_size,hkv) f32 scale pools."""
+    b, C, hq, d = q.shape
+    n_blocks, block_size, hkv, _ = k_pages.shape
+    g = hq // hkv
+    nb = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    tbl = jnp.asarray(block_tables, jnp.int32)
+    starts = jnp.asarray(q_start, jnp.int32)
+    lens = jnp.asarray(kv_len, jnp.int32)
+
+    page_spec = pl.BlockSpec((1, block_size, 1, d),
+                             lambda ib, ih, ik, tbl, st, ln:
+                             (tbl[ib, ik], 0, ih // g, 0))
+    scale_spec = pl.BlockSpec((1, block_size, 1),
+                              lambda ib, ih, ik, tbl, st, ln:
+                              (tbl[ib, ik], 0, ih // g))
+    kern = functools.partial(_ctx_kernel_quant, scale=scale, nb=nb,
+                             block_size=block_size, C=C)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, hq, nb),
+        in_specs=[
+            pl.BlockSpec((1, C, 1, d),
+                         lambda ib, ih, ik, tbl, st, ln: (ib, 0, ih, 0)),
+            page_spec,
+            page_spec,
+            scale_spec,
+            scale_spec,
+        ],
+        out_specs=pl.BlockSpec((1, C, 1, d),
+                               lambda ib, ih, ik, tbl, st, ln:
+                               (ib, 0, ih, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((C, d), jnp.float32),
+            pltpu.VMEM((C,), jnp.float32),
+            pltpu.VMEM((C,), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, C, hq, d), q.dtype),
+        interpret=interpret,
+    )(tbl, starts, lens, q, k_pages, v_pages, k_scale, v_scale)
+
+
 # ---------------------------------------------------------------------------
 # Paged MULTI-TOKEN VERIFICATION (speculative decoding): T candidate tokens
 # per slot — the bonus token plus the draft proposals — run against the paged
@@ -235,3 +433,13 @@ def paged_verify_attention_pallas(q, k_pages, v_pages, block_tables, *,
     return paged_context_attention_pallas(
         q, k_pages, v_pages, block_tables, q_start=kv_start, kv_len=kv_len,
         scale=scale, interpret=interpret)
+
+
+def paged_verify_attention_quant_pallas(q, k_pages, v_pages, k_scale,
+                                        v_scale, block_tables, *, kv_start,
+                                        kv_len, scale=None, interpret=False):
+    """Quantized-pool verification: the quantized context grid with the
+    per-slot committed length as the chunk origin."""
+    return paged_context_attention_quant_pallas(
+        q, k_pages, v_pages, k_scale, v_scale, block_tables,
+        q_start=kv_start, kv_len=kv_len, scale=scale, interpret=interpret)

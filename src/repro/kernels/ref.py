@@ -184,6 +184,44 @@ def paged_verify_attention_ref(q, k_pages, v_pages, block_tables, *,
                                  scale=scale)
 
 
+# ---------------------------------------------------------------------------
+# Quantized paged oracles (int8/fp8 page pools with per-token-per-head
+# scales; models/quant.py KV helpers). Each dequantizes the WHOLE pool to
+# float32 pages and reuses the unquantized paged oracle — obviously correct,
+# and the arithmetic (dequant before the f32 score dot) matches what the
+# Pallas kernels fuse in-register, so exact-match tests are meaningful.
+# ---------------------------------------------------------------------------
+
+def dequant_pages(pages, scales):
+    """(n_blocks, bs, h, d) quantized payload + (n_blocks, bs, h) f32
+    scales -> float32 pages."""
+    return pages.astype(jnp.float32) * scales[..., None].astype(jnp.float32)
+
+
+def paged_decode_attention_quant_ref(q, k_pages, v_pages, k_scale, v_scale,
+                                     block_tables, *, kv_len=None,
+                                     scale=None):
+    return paged_decode_attention_ref(
+        q, dequant_pages(k_pages, k_scale), dequant_pages(v_pages, v_scale),
+        block_tables, kv_len=kv_len, scale=scale)
+
+
+def paged_context_attention_quant_ref(q, k_pages, v_pages, k_scale, v_scale,
+                                      block_tables, *, q_start, kv_len,
+                                      scale=None):
+    return paged_context_attention_ref(
+        q, dequant_pages(k_pages, k_scale), dequant_pages(v_pages, v_scale),
+        block_tables, q_start=q_start, kv_len=kv_len, scale=scale)
+
+
+def paged_verify_attention_quant_ref(q, k_pages, v_pages, k_scale, v_scale,
+                                     block_tables, *, kv_start, kv_len,
+                                     scale=None):
+    return paged_verify_attention_ref(
+        q, dequant_pages(k_pages, k_scale), dequant_pages(v_pages, v_scale),
+        block_tables, kv_start=kv_start, kv_len=kv_len, scale=scale)
+
+
 def ssm_scan_ref(x, dt, A, B, C, D, *, h0=None):
     """Sequential selective-scan oracle (Mamba S6).
 

@@ -124,6 +124,20 @@ def main() -> None:
                     help="expected per-token draft acceptance rate the "
                          "scheduler plans decode cost per COMMITTED "
                          "token with")
+    ap.add_argument("--kv-dtype", default="auto",
+                    choices=("auto", "search", "fp32", "bf16", "int8",
+                             "fp8"),
+                    help="paged KV pool storage precision: 'auto' keeps "
+                         "the model default, int8/fp8 quantize pages with "
+                         "per-token-per-head scales (dequant fused into "
+                         "the paged kernels), and 'search' lets the "
+                         "scheduler pick PER REPLICA — memory-bound "
+                         "replicas quantize (docs/serving.md)")
+    ap.add_argument("--kv-guard-layers", type=int, default=0,
+                    help="pin this many layers at EACH END of the stack "
+                         "at model precision under a quantized --kv-dtype "
+                         "(quality guard: first/last layers are the "
+                         "usual outliers)")
     ap.add_argument("--spec-draft-cost", type=float, default=0.0,
                     help="modeled cost of one draft step: the scheduler "
                          "treats it as absolute seconds (> 0 makes slow "
@@ -161,6 +175,15 @@ def main() -> None:
             "verification runs through the paged context path); serving "
             "without it", stacklevel=1)
         args.spec_decode = False
+    if args.kv_dtype != "auto" and args.cache_layout != "paged":
+        import warnings
+        warnings.warn(
+            "--kv-dtype needs --cache-layout paged (precision is a "
+            "page-pool layout); serving at model precision", stacklevel=1)
+        args.kv_dtype = "auto"
+    # "auto" = model default everywhere; "search" = per-replica scheduler
+    # choice; anything else fixes one pool precision for planning + serving
+    kv_dtype = None if args.kv_dtype in ("auto", "search") else args.kv_dtype
     res = schedule(pool, args.arch, task, deadline=args.deadline,
                    rate=args.rate, iters=args.search_iters, seed=args.seed,
                    kv_block_size=(args.block_size
@@ -171,17 +194,28 @@ def main() -> None:
                    spec_decode=args.spec_decode,
                    spec_alpha=args.spec_alpha,
                    spec_draft_cost=args.spec_draft_cost,
-                   max_spec_k=max(args.spec_k, 1))
+                   max_spec_k=max(args.spec_k, 1),
+                   kv_dtype=kv_dtype,
+                   kv_dtype_search=(args.kv_dtype == "search"))
     print(f"  assignment: {res.assignment.describe()}")
     print(f"  estimated SLO attainment: {res.attainment*100:.1f}%")
     if args.disaggregate:
         print(f"  roles: {res.roles if res.roles is not None else 'colocated'}")
     if args.spec_decode:
         print(f"  spec-k per replica: {res.spec_ks}")
+    if args.kv_dtype == "search":
+        shown = [d or "auto" for d in (res.kv_dtypes or [])]
+        print(f"  kv-dtype per replica: {shown}")
 
     cfg = cfg_full.reduced() if args.reduced else cfg_full
     asg = scale_assignment(res.assignment, cfg_full.num_layers,
                            cfg.num_layers) if args.reduced else res.assignment
+    # quality guard: pin the first/last N layers of the SERVED stack
+    guard = []
+    if args.kv_guard_layers > 0:
+        n = min(args.kv_guard_layers, cfg.num_layers // 2)
+        guard = list(range(n)) + list(range(cfg.num_layers - n,
+                                            cfg.num_layers))
     max_len = args.prompt_len + args.shared_prefix + 8 + args.out_len
     if args.cache_layout == "paged":
         max_len += (-max_len) % args.block_size    # whole blocks
@@ -207,7 +241,14 @@ def main() -> None:
                              # the scheduler's acceptance-aware per-replica
                              # depths (0 = plain decode on that replica)
                              spec_ks=(res.spec_ks if args.spec_decode
-                                      else None))
+                                      else None),
+                             kv_dtype=kv_dtype,
+                             # per-replica precision: the scheduler's
+                             # choices (None entry = model default)
+                             kv_dtypes=(res.kv_dtypes
+                                        if args.kv_dtype == "search"
+                                        else None),
+                             kv_guard_layers=guard)
     if args.shared_prefix:
         reqs = shared_prefix_workload(
             rate=args.rate, duration=args.duration, vocab=cfg.vocab_size,

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
-from repro.models.quant import mm
+from repro.models.quant import kv_dtype_name, mm, quantize_kv_rows
 
 
 def rms_norm(x, w, eps=1e-5):
@@ -172,6 +172,10 @@ def attn_decode_paged(p, x, cfg, *, pos, block_tables, cache):
     Rows whose table is all-null (free slots riding a joint iteration)
     write into the reserved trash page and read garbage that the caller
     discards — exactly like free slots in the contiguous path.
+
+    A QUANTIZED pool (cache carries "k_scale"/"v_scale") quantizes the new
+    token's K/V row on write (models/quant.quantize_kv_rows) and hands the
+    scale pools to the fused-dequant kernel.
     """
     q, k, v = _qkv(p, x, cfg)
     b = x.shape[0]
@@ -184,9 +188,22 @@ def attn_decode_paged(p, x, cfg, *, pos, block_tables, cache):
     ridx = jnp.arange(b)
     blk = jnp.asarray(block_tables, jnp.int32)[ridx, pos // bs]
     off = pos % bs
+    kv_len = pos + 1
+    if "k_scale" in cache:
+        kvd = kv_dtype_name(cache["k"].dtype)
+        kq, ks = quantize_kv_rows(k[:, 0], kvd)
+        vq, vs = quantize_kv_rows(v[:, 0], kvd)
+        nk = cache["k"].at[blk, off].set(kq)
+        nv = cache["v"].at[blk, off].set(vq)
+        nks = cache["k_scale"].at[blk, off].set(ks)
+        nvs = cache["v_scale"].at[blk, off].set(vs)
+        o = ops.paged_decode_attention(q, nk, nv, block_tables,
+                                       kv_len=kv_len, k_scale=nks,
+                                       v_scale=nvs)
+        out = mm(o.reshape(b, 1, -1), p["wo"])
+        return out, {"k": nk, "v": nv, "k_scale": nks, "v_scale": nvs}
     nk = cache["k"].at[blk, off].set(k[:, 0].astype(cache["k"].dtype))
     nv = cache["v"].at[blk, off].set(v[:, 0].astype(cache["v"].dtype))
-    kv_len = pos + 1
     o = ops.paged_decode_attention(q, nk, nv, block_tables, kv_len=kv_len)
     out = mm(o.reshape(b, 1, -1), p["wo"])
     return out, {"k": nk, "v": nv}
@@ -220,10 +237,23 @@ def attn_context_paged(p, x, cfg, *, positions, q_len, block_tables, cache):
     blk = jnp.take_along_axis(tbl, posc // bs, axis=1)  # (b, C)
     blk = jnp.where(valid, blk, 0)                      # pads -> null page
     off = posc % bs
-    nk = cache["k"].at[blk, off].set(k.astype(cache["k"].dtype))
-    nv = cache["v"].at[blk, off].set(v.astype(cache["v"].dtype))
     q_start = positions[:, 0]
     kv_len = q_start + jnp.asarray(q_len, jnp.int32)
+    if "k_scale" in cache:
+        kvd = kv_dtype_name(cache["k"].dtype)
+        kq, ks = quantize_kv_rows(k, kvd)
+        vq, vs = quantize_kv_rows(v, kvd)
+        nk = cache["k"].at[blk, off].set(kq)
+        nv = cache["v"].at[blk, off].set(vq)
+        nks = cache["k_scale"].at[blk, off].set(ks)
+        nvs = cache["v_scale"].at[blk, off].set(vs)
+        o = ops.paged_context_attention(q, nk, nv, tbl, q_start=q_start,
+                                        kv_len=kv_len, k_scale=nks,
+                                        v_scale=nvs)
+        out = mm(o.reshape(b, C, -1), p["wo"])
+        return out, {"k": nk, "v": nv, "k_scale": nks, "v_scale": nvs}
+    nk = cache["k"].at[blk, off].set(k.astype(cache["k"].dtype))
+    nv = cache["v"].at[blk, off].set(v.astype(cache["v"].dtype))
     o = ops.paged_context_attention(q, nk, nv, tbl, q_start=q_start,
                                     kv_len=kv_len)
     out = mm(o.reshape(b, C, -1), p["wo"])
@@ -263,10 +293,23 @@ def attn_verify_paged(p, x, cfg, *, positions, q_len, block_tables, cache):
     blk = jnp.take_along_axis(tbl, posc // bs, axis=1)  # (b, T)
     blk = jnp.where(valid, blk, 0)                      # pads -> null page
     off = posc % bs
-    nk = cache["k"].at[blk, off].set(k.astype(cache["k"].dtype))
-    nv = cache["v"].at[blk, off].set(v.astype(cache["v"].dtype))
     kv_start = positions[:, 0]
     kv_len = kv_start + jnp.asarray(q_len, jnp.int32)
+    if "k_scale" in cache:
+        kvd = kv_dtype_name(cache["k"].dtype)
+        kq, ks = quantize_kv_rows(k, kvd)
+        vq, vs = quantize_kv_rows(v, kvd)
+        nk = cache["k"].at[blk, off].set(kq)
+        nv = cache["v"].at[blk, off].set(vq)
+        nks = cache["k_scale"].at[blk, off].set(ks)
+        nvs = cache["v_scale"].at[blk, off].set(vs)
+        o = ops.paged_verify_attention(q, nk, nv, tbl, kv_start=kv_start,
+                                       kv_len=kv_len, k_scale=nks,
+                                       v_scale=nvs)
+        out = mm(o.reshape(b, T, -1), p["wo"])
+        return out, {"k": nk, "v": nv, "k_scale": nks, "v_scale": nvs}
+    nk = cache["k"].at[blk, off].set(k.astype(cache["k"].dtype))
+    nv = cache["v"].at[blk, off].set(v.astype(cache["v"].dtype))
     o = ops.paged_verify_attention(q, nk, nv, tbl, kv_start=kv_start,
                                    kv_len=kv_len)
     out = mm(o.reshape(b, T, -1), p["wo"])

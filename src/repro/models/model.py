@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ATTN, MAMBA, MLSTM, SLSTM, ModelConfig
-from repro.models import layers, mamba, moe, xlstm
+from repro.models import layers, mamba, moe, quant, xlstm
 from repro.models.quant import mm
 
 
@@ -261,7 +261,7 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
 
 
 def init_paged_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
-                     n_slots: int, dtype=None):
+                     n_slots: int, dtype=None, kv_dtype=None):
     """Stacked (n_periods, ...) PAGED cache pytree.
 
     Attention sublayers get page pools ``(P, n_blocks, block_size, hkv, hd)``
@@ -271,6 +271,14 @@ def init_paged_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
     contiguous layout — there is nothing to page. Block 0 of each pool is
     the reserved null/trash page.
 
+    kv_dtype (models/quant.KV_DTYPES) selects the pool precision: None
+    keeps the legacy behavior (``dtype`` or the model dtype), "fp32"/"bf16"
+    force an unquantized pool at that width, and "int8"/"fp8" store scaled
+    payloads with float32 per-token-per-head scale pools ``k_scale`` /
+    ``v_scale`` of shape (P, n_blocks, block_size, hkv) alongside the
+    payload — addressed by the same block ids, so COW / truncate /
+    migration treat them as just another pool leaf.
+
     SWA ring caches and encoder-decoder cross-KV stay on the contiguous
     path (slot mode already excludes them — serving.pipeline.
     slot_mode_supported).
@@ -278,7 +286,11 @@ def init_paged_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
     assert not (cfg.swa_window or cfg.is_encoder_decoder), \
         "paged layout covers full-KV text decoders"
     P = n_periods(cfg)
-    dt = dtype or _pdt(cfg)
+    quantized = kv_dtype is not None and quant.kv_is_quantized(kv_dtype)
+    if kv_dtype is None:
+        dt = dtype or _pdt(cfg)
+    else:
+        dt = quant.kv_storage_dtype(kv_dtype)
     hd = cfg.head_dim_
     kinds = sub_kinds(cfg)
     slot_states = None
@@ -291,6 +303,10 @@ def init_paged_cache(cfg: ModelConfig, n_blocks: int, block_size: int,
                                  hd), dt),
                  "v": jnp.zeros((P, n_blocks, block_size, cfg.num_kv_heads,
                                  hd), dt)}
+            if quantized:
+                shape = (P, n_blocks, block_size, cfg.num_kv_heads)
+                c["k_scale"] = jnp.zeros(shape, jnp.float32)
+                c["v_scale"] = jnp.zeros(shape, jnp.float32)
         else:
             c = slot_states[f"sub{j}"]
         cache[f"sub{j}"] = c
@@ -385,6 +401,12 @@ def apply_sublayer_decode(cfg, kind, sp, x, sc, *, pos, kv_start):
     return x, nc
 
 
+def _paged_attn_cache(sc):
+    """The attention leaves of one sublayer's paged cache — payload pools
+    plus, for quantized pools, their scale companions."""
+    return {n: sc[n] for n in ("k", "v", "k_scale", "v_scale") if n in sc}
+
+
 def apply_sublayer_decode_paged(cfg, kind, sp, x, sc, *, pos,
                                 block_tables):
     """One block for a single decode token against a PAGED cache.
@@ -395,7 +417,7 @@ def apply_sublayer_decode_paged(cfg, kind, sp, x, sc, *, pos,
     if kind == ATTN:
         o, nc = layers.attn_decode_paged(sp["mixer"], h, cfg, pos=pos,
                                          block_tables=block_tables,
-                                         cache={"k": sc["k"], "v": sc["v"]})
+                                         cache=_paged_attn_cache(sc))
     elif kind == MAMBA:
         o, nc = mamba.mamba_decode(sp["mixer"], h, cfg, cache=sc)
     elif kind == MLSTM:
@@ -427,7 +449,7 @@ def apply_sublayer_context_paged(cfg, kind, sp, x, sc, *, positions, q_len,
     o, nc = layers.attn_context_paged(sp["mixer"], h, cfg,
                                       positions=positions, q_len=q_len,
                                       block_tables=block_tables,
-                                      cache={"k": sc["k"], "v": sc["v"]})
+                                      cache=_paged_attn_cache(sc))
     x = x + o
     if "mlp" in sp:
         x = x + layers.mlp(sp["mlp"], _norm(cfg, sp["ln2"], x), cfg)
@@ -454,7 +476,7 @@ def apply_sublayer_verify_paged(cfg, kind, sp, x, sc, *, positions, q_len,
     o, nc = layers.attn_verify_paged(sp["mixer"], h, cfg,
                                      positions=positions, q_len=q_len,
                                      block_tables=block_tables,
-                                     cache={"k": sc["k"], "v": sc["v"]})
+                                     cache=_paged_attn_cache(sc))
     x = x + o
     if "mlp" in sp:
         x = x + layers.mlp(sp["mlp"], _norm(cfg, sp["ln2"], x), cfg)
@@ -573,11 +595,20 @@ def init_layer_cache(cfg: ModelConfig, i: int, batch: int, max_len: int,
 
 
 def init_layer_paged_cache(cfg: ModelConfig, i: int, n_blocks: int,
-                           block_size: int, n_slots: int, dtype=None):
+                           block_size: int, n_slots: int, dtype=None,
+                           kv_dtype=None, kv_guard_layers=()):
     """Single-layer PAGED cache (no period axis): attention layers get a
-    page pool, recurrent layers their per-slot states."""
+    page pool, recurrent layers their per-slot states.
+
+    kv_guard_layers is the quality guard: global layer indices in it keep
+    the model-default (unquantized) pool precision whatever ``kv_dtype``
+    says — attention sinks concentrate in the first/last layers, so
+    pinning those limits the quantization error where it compounds."""
+    if i in kv_guard_layers:
+        kv_dtype = None
     p, j = layer_sub_index(cfg, i)
-    full = init_paged_cache(cfg, n_blocks, block_size, n_slots, dtype)
+    full = init_paged_cache(cfg, n_blocks, block_size, n_slots, dtype,
+                            kv_dtype=kv_dtype)
     return jax.tree.map(lambda l: l[0], full[f"sub{j}"])
 
 
@@ -612,6 +643,11 @@ def scatter_rows_to_pages(pages, rows, dest_blocks, *, batch_axis=0):
     dest_blocks: (m * S // bs,) int32 physical page of each (row, logical
         block) pair, row-major; unallocated tail entries point at the null
         page and their (garbage, past-lens) contents are never unmasked.
+
+    A QUANTIZED pool (``"k_scale"`` present) quantizes on write: each K/V
+    row is split into an int8/fp8 payload plus per-token-per-head scales
+    (models/quant.quantize_kv_rows, scheme inferred from the payload
+    dtype), and both scatter through the same dest_blocks.
     """
     dest = jnp.asarray(dest_blocks, jnp.int32)
 
@@ -626,6 +662,25 @@ def scatter_rows_to_pages(pages, rows, dest_blocks, *, batch_axis=0):
         blocks = row.reshape(P, m * (S // bs), bs, h, d)
         return pool.at[:, dest].set(blocks.astype(pool.dtype))
 
+    def put_scale(pool, row):
+        if batch_axis == 0:
+            m, S, h = row.shape
+            bs = pool.shape[1]
+            blocks = row.reshape(m * (S // bs), bs, h)
+            return pool.at[dest].set(blocks)
+        P, m, S, h = row.shape
+        bs = pool.shape[2]
+        blocks = row.reshape(P, m * (S // bs), bs, h)
+        return pool.at[:, dest].set(blocks)
+
+    if isinstance(pages, dict) and "k_scale" in pages:
+        kvd = quant.kv_dtype_name(pages["k"].dtype)
+        out = {}
+        for n in ("k", "v"):
+            payload, sc = quant.quantize_kv_rows(rows[n], kvd)
+            out[n] = put(pages[n], payload)
+            out[n + "_scale"] = put_scale(pages[n + "_scale"], sc)
+        return out
     return jax.tree.map(put, pages, rows)
 
 
@@ -641,7 +696,9 @@ def copy_cache_pages(cache, src_blocks, dst_blocks, *, stacked=True):
         if not (isinstance(c, dict) and "k" in c and "v" in c):
             return c
         out = dict(c)
-        for n in ("k", "v"):
+        for n in ("k", "v", "k_scale", "v_scale"):
+            if n not in c:
+                continue
             if stacked:
                 out[n] = c[n].at[:, dst].set(c[n][:, src])
             else:
@@ -660,12 +717,13 @@ def scatter_cache_rows_paged(pool, rows, slot_ids, dest_blocks, *,
     leaf (recurrent states) scatters by slot id exactly as the contiguous
     path does."""
     if "k" in pool and "v" in pool:
+        kv_names = ("k", "v", "k_scale", "v_scale")
         paged_part = scatter_rows_to_pages(
-            {"k": pool["k"], "v": pool["v"]},
+            {n: pool[n] for n in kv_names if n in pool},
             {"k": rows["k"], "v": rows["v"]},
             dest_blocks, batch_axis=batch_axis)
-        rest_pool = {n: l for n, l in pool.items() if n not in ("k", "v")}
-        rest_rows = {n: l for n, l in rows.items() if n not in ("k", "v")}
+        rest_pool = {n: l for n, l in pool.items() if n not in kv_names}
+        rest_rows = {n: l for n, l in rows.items() if n not in kv_names}
         out = dict(paged_part)
         if rest_pool:
             out.update(scatter_cache_rows(rest_pool, rest_rows, slot_ids,

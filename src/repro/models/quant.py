@@ -72,3 +72,77 @@ def quant_bytes(params) -> int:
     for leaf in jax.tree.leaves(params):
         total += leaf.size * leaf.dtype.itemsize
     return total
+
+
+# ---------------------------------------------------------------------------
+# KV-cache quantization (paged page pools; docs/memory.md)
+#
+# Page pools may store K/V at reduced width with PER-TOKEN-PER-HEAD scales:
+# a pool (n_blocks, block_size, h_kv, head_dim) grows a float32 companion
+# (n_blocks, block_size, h_kv) and every row dequantizes as
+# q.astype(f32) * scale[..., None]. Token granularity keeps the single-token
+# decode append exact (one .at[blk, off].set per step, no read-modify-write
+# of a block statistic) and makes COW / truncate / migration scale handling
+# identical to the payload: scales are just another pool leaf addressed by
+# the same block ids.
+# ---------------------------------------------------------------------------
+
+# kv_dtype name -> (storage dtype, qmax, needs integer rounding).
+# fp32/bf16 are the UNQUANTIZED layouts (no scale leaves, pre-PR layout);
+# int8/fp8 store scaled payloads. fp8 uses e4m3 (max finite 448): decode
+# reads want mantissa, not range — range lives in the scale.
+KV_DTYPES = {
+    "fp32": (jnp.float32, None, False),
+    "bf16": (jnp.bfloat16, None, False),
+    "int8": (jnp.int8, 127.0, True),
+    "fp8": (jnp.float8_e4m3fn, 448.0, False),
+}
+
+KV_SCALE_LEAVES = ("k_scale", "v_scale")
+
+
+def kv_storage_dtype(kv_dtype: str):
+    assert kv_dtype in KV_DTYPES, kv_dtype
+    return KV_DTYPES[kv_dtype][0]
+
+
+def kv_dtype_name(storage_dtype) -> str:
+    """Quantized kv_dtype name from a pool payload dtype (int8 -> "int8",
+    float8_e4m3fn -> "fp8"); lets write paths infer the scheme from the
+    pool itself instead of threading a string everywhere."""
+    for name, (dt, qmax, _) in KV_DTYPES.items():
+        if qmax is not None and jnp.dtype(storage_dtype) == jnp.dtype(dt):
+            return name
+    raise ValueError(f"not a quantized KV storage dtype: {storage_dtype}")
+
+
+def kv_is_quantized(kv_dtype: str) -> bool:
+    assert kv_dtype in KV_DTYPES, kv_dtype
+    return KV_DTYPES[kv_dtype][1] is not None
+
+
+def kv_itemsize(kv_dtype: str) -> float:
+    """Effective bytes per cache element INCLUDING the per-token-per-head
+    scale overhead (4 bytes amortized over head_dim elements is charged by
+    callers that know head_dim; this returns the payload width)."""
+    return jnp.dtype(kv_storage_dtype(kv_dtype)).itemsize
+
+
+def quantize_kv_rows(rows, kv_dtype: str):
+    """Quantize K or V rows (..., h, d) -> (payload (..., h, d) in the
+    storage dtype, scale (..., h) float32). Symmetric per-token-per-head:
+    scale = amax over head_dim / qmax."""
+    dt, qmax, rnd = KV_DTYPES[kv_dtype]
+    assert qmax is not None, kv_dtype
+    rf = jnp.asarray(rows, jnp.float32)
+    amax = jnp.max(jnp.abs(rf), axis=-1)
+    scale = jnp.maximum(amax / qmax, 1e-12)
+    q = rf / scale[..., None]
+    if rnd:
+        q = jnp.clip(jnp.round(q), -qmax, qmax)
+    return q.astype(dt), scale.astype(jnp.float32)
+
+
+def dequantize_kv(payload, scale):
+    """Inverse of quantize_kv_rows: payload (..., h, d), scale (..., h)."""
+    return payload.astype(jnp.float32) * scale[..., None].astype(jnp.float32)

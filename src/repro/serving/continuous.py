@@ -406,7 +406,9 @@ class PagedPipelineBatcher(SlotEngine):
                  prefix_caching: bool = False, prefill_chunk: int = 0,
                  prefill_token_cost: float = 0.0,
                  role: str = "both", replica_id: int = 0,
-                 spec: Optional[SpecConfig] = None):
+                 spec: Optional[SpecConfig] = None,
+                 kv_dtype: Optional[str] = None,
+                 kv_guard_layers: Sequence[int] = ()):
         from repro.serving.pipeline import (context_mode_supported,
                                             slot_mode_supported)
         assert slot_mode_supported(pipeline.cfg), \
@@ -430,6 +432,20 @@ class PagedPipelineBatcher(SlotEngine):
         self.pipeline = pipeline
         self.block_size = block_size
         self.max_blocks = max_len // block_size
+        # paged-pool storage precision ("fp32"/"bf16"/"int8"/"fp8"; None =
+        # model default). Quantized pools need the paged CONTEXT/VERIFY
+        # write paths, which exist for attention-only stacks only.
+        from repro.models import quant as Q
+        if kv_dtype is not None and Q.kv_is_quantized(kv_dtype) \
+                and not context_mode_supported(pipeline.cfg):
+            warnings.warn(
+                f"{pipeline.cfg.name}: quantized KV pages need an "
+                "attention-only stack (recurrent slot state has no paged "
+                "rows to quantize); serving at model precision",
+                stacklevel=2)
+            kv_dtype = None
+        self.kv_dtype = kv_dtype
+        self.kv_guard_layers = tuple(kv_guard_layers)
         # tokens of decode headroom a request must find free at admission
         self.admit_headroom = (block_size if admit_headroom is None
                                else admit_headroom)
@@ -502,6 +518,8 @@ class PagedPipelineBatcher(SlotEngine):
         self.spec_proposed = 0         # draft tokens proposed
         self.spec_accepted = 0         # draft tokens the target agreed with
         self.spec_tokens = 0           # tokens committed via verify steps
+        self.kv_bytes_resident = 0     # allocated page-pool bytes (+scales)
+        self.kv_bytes_saved = 0        # vs the model-default-dtype layout
         self._iter_prefill_tokens = 0
         self._iter_spec_proposed = 0
 
@@ -678,10 +696,33 @@ class PagedPipelineBatcher(SlotEngine):
                 or self.pipeline.n_slots != self.n_slots
                 or self.pipeline.slot_len != self.max_len
                 or self.pipeline.block_size != self.block_size
-                or self.pipeline.stage_blocks != self.stage_blocks):
+                or self.pipeline.stage_blocks != self.stage_blocks
+                or self.pipeline.kv_dtype != self.kv_dtype
+                or self.pipeline.kv_guard_layers != self.kv_guard_layers):
             self.pipeline.init_paged_caches(
                 self.n_slots, self.max_len, block_size=self.block_size,
-                stage_blocks=self.stage_blocks)
+                stage_blocks=self.stage_blocks, kv_dtype=self.kv_dtype,
+                kv_guard_layers=self.kv_guard_layers)
+            self._account_kv_bytes()
+
+    def _account_kv_bytes(self) -> None:
+        """ServeStats counters: bytes the page pools actually occupy
+        (payload + scale leaves) and bytes saved vs the model-default
+        cache dtype (what kv_dtype=None would have allocated)."""
+        base_itemsize = jnp.dtype(M._pdt(self.pipeline.cfg)).itemsize
+        resident, baseline = 0, 0
+        for caches in self.pipeline.paged_caches:
+            for c in caches:
+                if "k" not in c or "v" not in c:
+                    continue       # recurrent slot state: not paged KV
+                for n in ("k", "v"):
+                    resident += c[n].size * c[n].dtype.itemsize
+                    baseline += c[n].size * base_itemsize
+                for n in ("k_scale", "v_scale"):
+                    if n in c:
+                        resident += c[n].size * c[n].dtype.itemsize
+        self.kv_bytes_resident += int(resident)
+        self.kv_bytes_saved += int(max(baseline - resident, 0))
 
     def _stage_alloc(self, si: int, table: BlockTable,
                      n_tokens: int) -> bool:

@@ -43,7 +43,15 @@ class InferenceEngine:
     directly); without it the weight-free n-gram/prompt-lookup proposer
     runs. ``spec_ks`` overrides the depth PER REPLICA (the scheduler's
     acceptance-aware ``SearchResult.spec_ks``; 0 disables speculation on
-    that replica). Needs the paged layout and an attention-only stack."""
+    that replica). Needs the paged layout and an attention-only stack.
+
+    ``kv_dtype`` stores the paged KV pools at reduced precision
+    ("fp32"/"bf16"/"int8"/"fp8"; int8/fp8 pages carry per-token-per-head
+    scales and dequantize inside the paged kernels). ``kv_dtypes``
+    overrides PER REPLICA (the scheduler's ``SearchResult.kv_dtypes``;
+    None entry = model default); ``kv_guard_layers`` pins those global
+    layer indices at model precision (quality guard, typically the
+    first/last layers). Needs the paged layout."""
 
     def __init__(self, cfg: ModelConfig, assignment: Assignment, *,
                  params=None, key=None, devices: Optional[Sequence] = None,
@@ -60,7 +68,10 @@ class InferenceEngine:
                  spec_decode: bool = False, spec_k: int = 4,
                  draft_model=None,
                  spec_ks: Optional[Sequence[int]] = None,
-                 spec_draft_token_cost: float = 0.0):
+                 spec_draft_token_cost: float = 0.0,
+                 kv_dtype: Optional[str] = None,
+                 kv_dtypes: Optional[Sequence[Optional[str]]] = None,
+                 kv_guard_layers: Sequence[int] = ()):
         self.cfg = cfg
         devices = list(devices if devices is not None else jax.devices())
         if params is None:
@@ -176,7 +187,11 @@ class InferenceEngine:
                              prefill_token_cost=prefill_token_cost,
                              spec=spec,
                              spec_ks=(list(spec_ks)
-                                      if spec_ks is not None else None))
+                                      if spec_ks is not None else None),
+                             kv_dtype=kv_dtype,
+                             kv_dtypes=(list(kv_dtypes)
+                                        if kv_dtypes is not None else None),
+                             kv_guard_layers=kv_guard_layers)
         self.roles = self.router.roles
 
     def generate(self, prompts: Sequence[np.ndarray], *, max_new: int = 16

@@ -113,6 +113,9 @@ class ServeStats:
     spec_proposed: int = 0         # draft tokens proposed
     spec_accepted: int = 0         # draft tokens the target agreed with
     spec_tokens: int = 0           # tokens committed via verification steps
+    # quantized KV pages (PagedPipelineBatcher with kv_dtype="int8"/"fp8")
+    kv_bytes_resident: int = 0     # allocated page-pool bytes (+ scales)
+    kv_bytes_saved: int = 0        # bytes saved vs model-default pools
 
     def summary(self) -> str:
         lat = np.asarray(self.latencies)
@@ -136,6 +139,9 @@ class ServeStats:
             extra += (f" spec={self.spec_tokens}tok"
                       f"/{self.spec_steps}step "
                       f"acc={acc * 100:.0f}%")
+        if self.kv_bytes_saved:
+            extra += (f" kv={self.kv_bytes_resident / 1e6:.2f}MB "
+                      f"(-{self.kv_bytes_saved / 1e6:.2f}MB)")
         return (f"n={len(lat)} {pct}"
                 f"slo={self.attainment * 100:.1f}% thpt={self.throughput:.2f} req/s "
                 f"rej={self.rejected} drop={self.dropped} "
@@ -188,7 +194,8 @@ def run_serve_loop(workers: Sequence, requests: Sequence, *, deadline: float,
     counters = ("rejected", "preemptions", "prefix_lookups", "prefix_hits",
                 "prefix_hit_tokens", "prefill_tokens", "cow_copies",
                 "migrations", "migrated_kv_bytes", "spec_steps",
-                "spec_proposed", "spec_accepted", "spec_tokens")
+                "spec_proposed", "spec_accepted", "spec_tokens",
+                "kv_bytes_resident", "kv_bytes_saved")
     base = {c: sum(getattr(w, c, 0) for w in workers) for c in counters}
     while idx < len(pending) or any(w.inflight() for w in workers):
         now = clock.now()

@@ -145,13 +145,15 @@ class StageExecutor:
                 for c in caches]
 
     def _stage_scatter_pages(self, caches, dst, payload):
-        """Write migrated-in page payloads (one {"k","v"} pytree per layer
-        of this stage, leading axis = len(dst) blocks) into the pools at
-        block ids `dst` (KV migration landing)."""
+        """Write migrated-in page payloads (one {"k","v"[,"k_scale",
+        "v_scale"]} pytree per layer of this stage, leading axis = len(dst)
+        blocks) into the pools at block ids `dst` (KV migration landing).
+        Quantized pools ship the payload at wire width plus the float32
+        scale leaves — no requantization on landing."""
         out = []
         for c, p in zip(caches, payload):
             c = dict(c)
-            for n in ("k", "v"):
+            for n in p:
                 c[n] = c[n].at[dst].set(p[n].astype(c[n].dtype))
             out.append(c)
         return out
@@ -165,14 +167,19 @@ class StageExecutor:
         return out
 
     def make_paged_caches(self, n_blocks: int, block_size: int,
-                          n_slots: int):
+                          n_slots: int, *, kv_dtype=None,
+                          kv_guard_layers=()):
         """Per-layer paged caches; this stage's attention layers all share
         ONE physical pool id-space of `n_blocks` blocks (each layer holds
-        its own page arrays, addressed by the same block table)."""
+        its own page arrays, addressed by the same block table).
+        `kv_dtype` selects the pool storage precision (None = model
+        default); layers in `kv_guard_layers` (GLOBAL indices) stay at
+        model precision regardless (quality guard)."""
         out = []
         for i in range(self.lo, self.hi):
             c = M.init_layer_paged_cache(self.cfg, i, n_blocks, block_size,
-                                         n_slots)
+                                         n_slots, kv_dtype=kv_dtype,
+                                         kv_guard_layers=kv_guard_layers)
             out.append(jax.device_put(c, _rep(self.mesh)))
         return out
 
@@ -220,6 +227,8 @@ class AsymmetricPipeline:
         self.paged_caches = None
         self.block_size = 0
         self.stage_blocks: List[int] = []
+        self.kv_dtype: Optional[str] = None
+        self.kv_guard_layers: tuple = ()
 
     # ---- embedding / head on first / last stage ---------------------------
     def _embed(self, tokens, batch_extras):
@@ -391,12 +400,18 @@ class AsymmetricPipeline:
 
     def init_paged_caches(self, n_slots: int, max_len: int, *,
                           block_size: int = 16,
-                          stage_blocks: Optional[Sequence[int]] = None
+                          stage_blocks: Optional[Sequence[int]] = None,
+                          kv_dtype: Optional[str] = None,
+                          kv_guard_layers: Sequence[int] = ()
                           ) -> None:
         """Per-stage page pools. `stage_blocks[si]` is stage si's pool size
         in blocks (including the reserved null block); None sizes every
         stage for full occupancy (n_slots * max_len tokens), which makes
-        paged serving a drop-in replacement with zero preemptions."""
+        paged serving a drop-in replacement with zero preemptions.
+        `kv_dtype` in {"fp32","bf16","int8","fp8"} selects pool precision
+        (None = model default dtype, pre-quantization layout);
+        `kv_guard_layers` pins those GLOBAL layer indices at model
+        precision even under a quantized kv_dtype."""
         assert slot_mode_supported(self.cfg), \
             "paged slot mode needs uniform text decode (SWA ring cache / " \
             "encoder-decoder / VLM); use static batching"
@@ -404,13 +419,17 @@ class AsymmetricPipeline:
         self.n_slots = n_slots
         self.slot_len = max_len
         self.block_size = block_size
+        self.kv_dtype = kv_dtype
+        self.kv_guard_layers = tuple(kv_guard_layers)
         full = n_slots * (max_len // block_size) + 1
         if stage_blocks is None:
             stage_blocks = [full] * len(self.stages)
         self.stage_blocks = list(stage_blocks)
         assert len(self.stage_blocks) == len(self.stages)
         self.paged_caches = [
-            st.make_paged_caches(nb, block_size, n_slots)
+            st.make_paged_caches(nb, block_size, n_slots,
+                                 kv_dtype=kv_dtype,
+                                 kv_guard_layers=self.kv_guard_layers)
             for st, nb in zip(self.stages, self.stage_blocks)]
 
     def insert_slots_paged(self, tokens: np.ndarray, lens: np.ndarray,
@@ -534,8 +553,15 @@ class AsymmetricPipeline:
             for c in self.paged_caches[si]:
                 assert "k" in c and "v" in c, \
                     "KV migration covers attention-only stacks"
-                layer_kv.append({"k": np.asarray(c["k"][blocks]),
-                                 "v": np.asarray(c["v"][blocks])})
+                lkv = {"k": np.asarray(c["k"][blocks]),
+                       "v": np.asarray(c["v"][blocks])}
+                # quantized pools ship at wire width + their scale leaves:
+                # the int8/fp8 payload is what crosses the link, so the
+                # modeled transfer bytes drop with the pool dtype
+                for n in ("k_scale", "v_scale"):
+                    if n in c:
+                        lkv[n] = np.asarray(c[n][blocks])
+                layer_kv.append(lkv)
         return layer_kv
 
     def scatter_kv_pages(self, stage_blocks: Sequence[Optional[Sequence[int]]],
@@ -550,8 +576,7 @@ class AsymmetricPipeline:
         for si, st in enumerate(self.stages):
             n_layers = st.hi - st.lo
             payload = [
-                {"k": jnp.asarray(layer_kv[li + k]["k"]),
-                 "v": jnp.asarray(layer_kv[li + k]["v"])}
+                {n: jnp.asarray(a) for n, a in layer_kv[li + k].items()}
                 for k in range(n_layers)]
             li += n_layers
             with st.mesh:

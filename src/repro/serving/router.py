@@ -131,7 +131,10 @@ class Router:
                  prefill_token_cost: float = 0.0,
                  step_costs: Optional[Sequence[float]] = None,
                  spec: Optional[SpecConfig] = None,
-                 spec_ks: Optional[Sequence[int]] = None):
+                 spec_ks: Optional[Sequence[int]] = None,
+                 kv_dtype: Optional[str] = None,
+                 kv_dtypes: Optional[Sequence[Optional[str]]] = None,
+                 kv_guard_layers: Sequence[int] = ()):
         assert policy in ("continuous", "static"), policy
         assert cache_layout in ("contiguous", "paged"), cache_layout
         self.replicas = list(replicas)
@@ -165,6 +168,23 @@ class Router:
                 "with cache_layout='paged' (block-granular aliasing); "
                 "serving without them", stacklevel=2)
             prefix_caching, prefill_chunk = False, 0
+        # quantized KV pages: ONE pool precision (`kv_dtype`) or the
+        # scheduler's PER-REPLICA choices (`kv_dtypes`, None entry = model
+        # default). Only the paged continuous engine has page pools.
+        if (kv_dtype is not None or kv_dtypes is not None) and (
+                cache_layout != "paged" or policy == "static"):
+            warnings.warn(
+                "kv_dtype needs policy='continuous' with "
+                "cache_layout='paged' (precision is a page-pool layout); "
+                "serving at model precision", stacklevel=2)
+            kv_dtype, kv_dtypes = None, None
+        if kv_dtypes is not None:
+            assert len(kv_dtypes) == len(self.replicas), (kv_dtypes,)
+
+        def replica_kv_dtype(i: int) -> Optional[str]:
+            if kv_dtypes is not None and kv_dtypes[i] is not None:
+                return kv_dtypes[i]
+            return kv_dtype
         # disaggregated prefill/decode: role-tagged paged replicas + a KV
         # dispatcher wiring prefill workers to decode workers
         if roles is not None and any(r != "both" for r in roles):
@@ -187,6 +207,21 @@ class Router:
         self.roles = list(roles) if roles is not None \
             else ["both"] * len(self.replicas)
         assert len(self.roles) == len(self.replicas), (roles,)
+        # a migrated page payload lands VERBATIM in the destination pool,
+        # so a disaggregated group needs one uniform pool precision: the
+        # narrowest chosen one wins (the capacity-constrained replica is
+        # why precision dropped in the first place)
+        if any(r != "both" for r in self.roles):
+            chosen = {replica_kv_dtype(i) for i in range(len(self.replicas))}
+            if len(chosen) > 1:
+                uniform = next((d for d in ("int8", "fp8") if d in chosen),
+                               None)
+                warnings.warn(
+                    "disaggregated replicas must share one KV pool "
+                    f"precision (the page payload ships verbatim); using "
+                    f"{uniform or 'model default'} everywhere",
+                    stacklevel=2)
+                kv_dtype, kv_dtypes = uniform, None
         if step_costs is None:
             step_costs = [1.0] * len(self.replicas)
         assert len(step_costs) == len(self.replicas)
@@ -197,7 +232,8 @@ class Router:
                 prefix_caching=prefix_caching, prefill_chunk=prefill_chunk,
                 prefill_token_cost=prefill_token_cost,
                 virtual_step_cost=sc, role=role, replica_id=i,
-                spec=replica_spec(i))
+                spec=replica_spec(i), kv_dtype=replica_kv_dtype(i),
+                kv_guard_layers=kv_guard_layers)
                 for i, (r, role, sc) in enumerate(
                     zip(self.replicas, self.roles, step_costs))]
             self.dispatcher = wire_disaggregation(self.workers, self.roles,

@@ -363,3 +363,299 @@ def test_slo_sim_reflects_paged_capacity():
     roomy = simulate([ReplicaModel(1.0, 0.2, max_concurrent=8)], **kw)
     free = simulate([ReplicaModel(1.0, 0.2)], **kw)
     assert tight < roomy <= free
+
+
+# ---------------------------------------------------------------------------
+# Quantized KV pages (int8/fp8 payload pools + per-token-per-head scales)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+def test_quant_kernels_bit_identical_to_materialized_dequant(kv_dtype):
+    """The exactness gate for fused dequant: each quantized Pallas kernel
+    (interpret mode) must be BITWISE identical to its unquantized twin run
+    on pre-dequantized pages. In-register dequant performs the exact same
+    float32 multiply the oracle materializes, so fusing it may never
+    change a single output bit."""
+    from repro.kernels.paged_attention import (
+        paged_context_attention_pallas, paged_context_attention_quant_pallas,
+        paged_decode_attention_quant_pallas, paged_verify_attention_pallas,
+        paged_verify_attention_quant_pallas)
+    from repro.models import quant as Q
+
+    b, hq, hkv, d = 2, 4, 2, 32
+    bs, n_blocks = 16, 16
+    k = rn(2, n_blocks, bs, hkv, d)
+    v = rn(3, n_blocks, bs, hkv, d)
+    kq, ks = Q.quantize_kv_rows(k, kv_dtype)
+    vq, vs = Q.quantize_kv_rows(v, kv_dtype)
+    kd, vd = Q.dequantize_kv(kq, ks), Q.dequantize_kv(vq, vs)
+
+    bt = jnp.asarray(np.array([[3, 1, 4, 0, 0], [5, 9, 2, 6, 8]], np.int32))
+    q = rn(1, b, 1, hq, d)
+    kv_len = jnp.array([41, 80])             # ragged + full tables
+    o_fused = paged_decode_attention_quant_pallas(
+        q, kq, vq, ks, vs, bt, kv_len=kv_len, interpret=True)
+    o_mat = paged_decode_attention_pallas(q, kd, vd, bt, kv_len=kv_len,
+                                          interpret=True)
+    assert np.array_equal(np.asarray(o_fused), np.asarray(o_mat))
+
+    qc = rn(4, b, 8, hq, d)
+    q_start = jnp.array([5, 0])
+    c_len = jnp.array([13, 8])
+    o_fused = paged_context_attention_quant_pallas(
+        qc, kq, vq, ks, vs, bt, q_start=q_start, kv_len=c_len,
+        interpret=True)
+    o_mat = paged_context_attention_pallas(
+        qc, kd, vd, bt, q_start=q_start, kv_len=c_len, interpret=True)
+    assert np.array_equal(np.asarray(o_fused), np.asarray(o_mat))
+
+    qv = rn(5, b, 4, hq, d)
+    kv_start = jnp.array([41, 76])
+    v_len = jnp.array([45, 78])              # ragged candidate counts
+    o_fused = paged_verify_attention_quant_pallas(
+        qv, kq, vq, ks, vs, bt, kv_start=kv_start, kv_len=v_len,
+        interpret=True)
+    o_mat = paged_verify_attention_pallas(
+        qv, kd, vd, bt, kv_start=kv_start, kv_len=v_len, interpret=True)
+    assert np.array_equal(np.asarray(o_fused), np.asarray(o_mat))
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+def test_quant_kernels_vs_oracle_and_xla_dispatch(kv_dtype):
+    """Quantized Pallas kernels against the pure-JAX dequant-whole-pool
+    oracles at the repo's established kernel tolerance, and the ops XLA
+    dispatch BITWISE against contiguous decode on dequantized gathered
+    pages (mirroring test_paged_ops_xla_bit_identical_to_contiguous)."""
+    from repro.kernels.paged_attention import (
+        paged_decode_attention_quant_pallas)
+    from repro.models import quant as Q
+
+    b, hq, hkv, d = 2, 4, 2, 32
+    bs, n_blocks = 16, 12
+    k = rn(2, n_blocks, bs, hkv, d)
+    v = rn(3, n_blocks, bs, hkv, d)
+    kq, ks = Q.quantize_kv_rows(k, kv_dtype)
+    vq, vs = Q.quantize_kv_rows(v, kv_dtype)
+    bt = jnp.asarray(np.array([[3, 1, 4, 0], [5, 9, 2, 6]], np.int32))
+    q = rn(1, b, 1, hq, d)
+    kv_len = jnp.array([19, 64])
+
+    o_pal = paged_decode_attention_quant_pallas(
+        q, kq, vq, ks, vs, bt, kv_len=kv_len, interpret=True)
+    o_ref = ref.paged_decode_attention_quant_ref(
+        q, kq, vq, ks, vs, bt, kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref),
+                               atol=2e-5)
+
+    o_ops = ops.paged_decode_attention(q, kq, vq, bt, kv_len=kv_len,
+                                       k_scale=ks, v_scale=vs)
+    o_contig = ops.decode_attention(
+        q, ref.gather_pages(ref.dequant_pages(kq, ks), bt),
+        ref.gather_pages(ref.dequant_pages(vq, vs), bt), kv_len=kv_len)
+    assert np.array_equal(np.asarray(o_ops), np.asarray(o_contig))
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+def test_quant_scatter_gather_roundtrip_error_bound(kv_dtype):
+    """quantize -> scatter_rows_to_pages -> gather -> dequant round-trip:
+    the landed pages must equal direct quantization of the rows (scatter
+    adds no error), and the dequantized values must sit within the
+    scheme's per-element bound of the originals."""
+    from repro.models import quant as Q
+
+    m, S, h, d, bs = 2, 16, 2, 32, 8
+    n_blocks = 1 + m * (S // bs)
+    rows = {"k": rn(11, m, S, h, d), "v": rn(12, m, S, h, d)}
+    pool = {
+        "k": jnp.zeros((n_blocks, bs, h, d), Q.kv_storage_dtype(kv_dtype)),
+        "v": jnp.zeros((n_blocks, bs, h, d), Q.kv_storage_dtype(kv_dtype)),
+        "k_scale": jnp.zeros((n_blocks, bs, h), jnp.float32),
+        "v_scale": jnp.zeros((n_blocks, bs, h), jnp.float32),
+    }
+    dest = jnp.arange(1, n_blocks, dtype=jnp.int32)
+    out = M.scatter_rows_to_pages(pool, rows, dest)
+    for n in ("k", "v"):
+        direct_q, direct_s = Q.quantize_kv_rows(rows[n], kv_dtype)
+        landed_q = np.asarray(out[n][dest]).reshape(m, S, h, d)
+        landed_s = np.asarray(out[n + "_scale"][dest]).reshape(m, S, h)
+        np.testing.assert_array_equal(
+            landed_q, np.asarray(direct_q, landed_q.dtype))
+        np.testing.assert_array_equal(landed_s, np.asarray(direct_s))
+        back = np.asarray(Q.dequantize_kv(out[n][dest], out[n + "_scale"][dest])
+                          ).reshape(m, S, h, d)
+        want = np.asarray(rows[n])
+        if kv_dtype == "int8":
+            # symmetric rounding: at most half a quantization step per
+            # element, with the step set by each token-head's scale
+            step = np.asarray(direct_s)[..., None]
+            assert (np.abs(back - want) <= step * 0.51).all()
+        else:
+            # fp8 e4m3: half-ulp relative error (2^-4) in the normal
+            # range plus the fixed subnormal step (2^-9 of the scale)
+            # for elements that quantize below the min normal exponent
+            step = np.asarray(direct_s)[..., None]
+            assert (np.abs(back - want)
+                    <= np.abs(want) * 0.0625 + step * 0.0021).all()
+
+
+def test_quant_pool_init_guard_layers_and_legacy_width():
+    """init_layer_paged_cache: kv_dtype=None keeps the legacy pool (no
+    scale leaves, model dtype); "bf16" forces the storage width without
+    scales; "int8" adds f32 scale pools; guard layers ignore kv_dtype."""
+    cfg = get_config("granite-8b").reduced()
+    legacy = M.init_layer_paged_cache(cfg, 1, 6, 8, 2)
+    assert "k_scale" not in legacy
+    assert legacy["k"].dtype == jnp.dtype(cfg.dtype)
+    wide = M.init_layer_paged_cache(cfg, 1, 6, 8, 2, kv_dtype="bf16")
+    assert "k_scale" not in wide and wide["k"].dtype == jnp.bfloat16
+    quant = M.init_layer_paged_cache(cfg, 1, 6, 8, 2, kv_dtype="int8")
+    assert quant["k"].dtype == jnp.int8
+    assert quant["k_scale"].dtype == jnp.float32
+    assert quant["k_scale"].shape == quant["k"].shape[:3]
+    guarded = M.init_layer_paged_cache(cfg, 1, 6, 8, 2, kv_dtype="int8",
+                                       kv_guard_layers=(1,))
+    assert "k_scale" not in guarded
+    assert guarded["k"].dtype == jnp.dtype(cfg.dtype)
+
+
+def test_cow_after_quantize_copies_scales_with_payload():
+    """COW safety on quantized pools: copy_cache_pages must duplicate the
+    scale leaves alongside the payload — a payload copied without its
+    scales dequantizes to garbage — and writing to the copy must leave
+    the source page untouched (the refcount contract)."""
+    cfg = get_config("granite-8b").reduced()
+    cache = M.init_paged_cache(cfg, 6, 4, 2, kv_dtype="int8")
+    poked = {}
+    for lk, sub in cache.items():
+        if "k_scale" not in sub:
+            poked[lk] = sub
+            continue
+        poked[lk] = {
+            "k": sub["k"].at[:, 2].set(7),
+            "v": sub["v"].at[:, 2].set(-7),
+            "k_scale": sub["k_scale"].at[:, 2].set(0.25),
+            "v_scale": sub["v_scale"].at[:, 2].set(0.5),
+        }
+    out = M.copy_cache_pages(poked, [2], [4])
+    checked = 0
+    for lk, sub in out.items():
+        if "k_scale" not in sub:
+            continue
+        checked += 1
+        for n in ("k", "v", "k_scale", "v_scale"):
+            np.testing.assert_array_equal(np.asarray(sub[n][:, 4]),
+                                          np.asarray(poked[lk][n][:, 2]))
+        # divergence after the copy: the source page keeps its contents
+        div = sub["k_scale"].at[:, 4].set(9.0)
+        assert (np.asarray(div[:, 2]) == 0.25).all()
+    assert checked > 0
+
+
+@pytest.mark.parametrize("kv_dtype", ["int8", "bf16"])
+def test_paged_serving_int8_pool_matches_fp32_tokens(kv_dtype):
+    """End-to-end: serving with a quantized (or narrowed) page pool must
+    produce the same greedy tokens as the model-precision pool on a short
+    workload — KV quantization error at these scales stays under the
+    argmax margin on all but a near-tie logit pair, so at most one
+    request may diverge (the statistical match RATE is measured by
+    benchmarks/bench_quant_kv.py, not asserted here) — and report the
+    byte savings in ServeStats."""
+    cfg = get_config("granite-8b").reduced()
+    params = M.init_params(cfg, KEY)
+    reqs_f = _mk_reqs(cfg)
+    PagedPipelineBatcher(_pipe(cfg, params), n_slots=3, max_len=48,
+                         block_size=8).serve(reqs_f, deadline=1e9)
+    reqs_q = _mk_reqs(cfg)
+    eng = PagedPipelineBatcher(_pipe(cfg, params), n_slots=3, max_len=48,
+                               block_size=8, kv_dtype=kv_dtype)
+    stats = eng.serve(reqs_q, deadline=1e9)
+    assert stats.kv_bytes_resident > 0
+    assert stats.kv_bytes_saved > 0
+    assert f"kv=" in stats.summary()
+    matched = sum(list(rf.output) == list(rq.output)
+                  for rf, rq in zip(reqs_f, reqs_q))
+    assert matched >= len(reqs_f) - 1, (matched, len(reqs_f))
+
+
+def test_quant_serving_guard_layers_stay_model_precision():
+    cfg = get_config("granite-8b").reduced()
+    params = M.init_params(cfg, KEY)
+    # the reduced config has 2 layers; guard the first only so the test
+    # still sees one quantized pool alongside the pinned one
+    eng = PagedPipelineBatcher(_pipe(cfg, params), n_slots=2, max_len=48,
+                               block_size=8, kv_dtype="int8",
+                               kv_guard_layers=(0,))
+    reqs = _mk_reqs(cfg, n=2)
+    eng.serve(reqs, deadline=1e9)
+    dts = set()
+    for st_caches in eng.pipeline.paged_caches:
+        for c in st_caches:
+            if isinstance(c, dict) and "k" in c:
+                dts.add(np.asarray(c["k"]).dtype.name)
+    # both the guarded (model-precision) and the quantized pools exist
+    assert "int8" in dts and len(dts) == 2, dts
+
+
+# ---------------------------------------------------------------------------
+# Scheduler-side precision pricing
+# ---------------------------------------------------------------------------
+
+def test_cost_model_kv_dtype_pricing():
+    from repro.core import cluster as cl
+    from repro.core import cost_model as cm
+    task = cm.Task(batch=1, s_in=128, s_out=64)
+    prof = cm.ModelProfile.from_config(get_config("llama2-70b"),
+                                       paper_exact=True)
+    c = cl.case_study_cluster()
+    devs = [0, 1, 2, 3]
+    base = cm.concurrent_capacity(c, devs, 48, prof, task, block_size=16)
+    for name, payload in (("int8", 1.0), ("fp8", 1.0), ("bf16", 2.0)):
+        capped = cm.concurrent_capacity(c, devs, 48, prof, task,
+                                        block_size=16, kv_dtype=name)
+        eff = cm.kv_dtype_bytes_per_el(name)
+        want = task.bytes_per_el / eff
+        assert capped >= base, (name, capped, base)
+        # capacity scales (within rounding) by the width ratio
+        assert abs(capped / base - want) / want < 0.1, (name, capped, base)
+        mig0 = cm.kv_migration_bytes(prof, task, block_size=16)
+        mig1 = cm.kv_migration_bytes(prof, task, block_size=16,
+                                     kv_dtype=name)
+        assert mig1 == pytest.approx(mig0 * eff / task.bytes_per_el)
+    # int8 at a bf16 task: ~1.94x capacity, ~1.94x fewer migration bytes
+    int8 = cm.concurrent_capacity(c, devs, 48, prof, task, block_size=16,
+                                  kv_dtype="int8")
+    assert int8 >= 1.8 * base
+
+
+def test_choose_kv_dtypes_quantizes_only_memory_bound_replicas():
+    from repro.core.genetic import choose_kv_dtypes
+    from repro.core.plan import PipelinePlan, StagePlan
+
+    plans = [PipelinePlan([StagePlan([0], 48)], cost=1.0, bottleneck=0.5),
+             PipelinePlan([StagePlan([1], 48)], cost=1.0, bottleneck=0.5)]
+    # replica 0 roomy, replica 1 memory-bound at default precision
+    caps = {0: 100, 1: 1}
+
+    def capacity_at(p, kvd):
+        return caps[p.stages[0].device_ids[0]]
+    out = choose_kv_dtypes(plans, capacity_at, rate=4.0)
+    assert out == [None, "int8"]
+
+
+def test_search_kv_dtype_lands_in_result():
+    """kv_dtype_search=True: the genetic search reports a per-replica
+    precision vector aligned with the winning assignment, quantizing the
+    capacity-constrained replicas."""
+    from repro.core import cluster as cl
+    from repro.core import cost_model as cm
+    from repro.core.scheduler import schedule
+    task = cm.Task(batch=1, s_in=512, s_out=256)
+    res = schedule(cl.case_study_cluster(), "llama2-70b", task,
+                   deadline=10.0, rate=40.0, iters=6, seed=0,
+                   paper_exact=True, kv_block_size=16,
+                   kv_dtype_search=True)
+    assert res.kv_dtypes is not None
+    assert len(res.kv_dtypes) == len(res.assignment.pipelines)
+    assert all(d in (None, "int8", "fp8") for d in res.kv_dtypes)
+    # the demanding workload must push at least one replica to quantize
+    assert any(d is not None for d in res.kv_dtypes), res.kv_dtypes

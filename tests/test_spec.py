@@ -559,3 +559,62 @@ def test_spec_virtual_clock_charges_draft_cost(setup):
         > max(r.finish_time for r in free)
     for a, b in zip(free, costly):
         assert list(a.output) == list(b.output)      # cost, not content
+
+
+# ---------------------------------------------------------------------------
+# Quantized pages under verification (int8 pools + spec rollback)
+# ---------------------------------------------------------------------------
+
+def test_verify_kernel_dead_row_exact_zero_under_int8_pages():
+    """The verify kernel's dead-row contract (kv_len == kv_start == 0 ->
+    exact zeros) must survive quantized pools: a free slot riding the
+    joint dispatch scatters into the null page and its masked row may
+    never leak dequantized garbage."""
+    from repro.kernels.paged_attention import (
+        paged_verify_attention_quant_pallas)
+    from repro.models import quant as Q
+
+    b, T, hq, hkv, d, bs, nblk = 3, 4, 4, 2, 32, 16, 12
+    q = rn(31, b, T, hq, d)
+    kp = rn(32, nblk, bs, hkv, d)
+    vp = rn(33, nblk, bs, hkv, d)
+    kq, ks = Q.quantize_kv_rows(kp, "int8")
+    vq, vs = Q.quantize_kv_rows(vp, "int8")
+    bt = jnp.asarray(np.array([[3, 1, 4, 0], [5, 9, 2, 6], [0, 0, 0, 0]],
+                              np.int32))
+    kv_start = jnp.array([17, 40, 0])
+    kv_len = jnp.array([17 + 4, 40 + 2, 0])      # row 2: dead (free slot)
+    got = paged_verify_attention_quant_pallas(
+        q, kq, vq, ks, vs, bt, kv_start=kv_start, kv_len=kv_len,
+        interpret=True)
+    want = ref.paged_verify_attention_quant_ref(
+        q, kq, vq, ks, vs, bt, kv_start=kv_start, kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+    assert np.all(np.asarray(got)[2] == 0.0)     # dead row exact
+    assert np.all(np.asarray(want)[2] == 0.0)
+    # the XLA dispatch honors the same contract with scale operands
+    got_x = ops.paged_verify_attention(q, kq, vq, bt, kv_start=kv_start,
+                                       kv_len=kv_len, k_scale=ks, v_scale=vs)
+    assert np.all(np.asarray(got_x)[2] == 0.0)
+
+
+def test_spec_serving_int8_pool_token_identical(setup):
+    """Speculation over int8 pages: rejected candidates' quantized page
+    writes (payload AND scales) sit past the committed length after
+    BlockTable.truncate, masked by kv_len and overwritten by the next
+    chunk — so spec+int8 must reproduce plain int8 greedy decode token
+    for token. (int8 vs fp32 is a STATISTICAL match — quantization may
+    legitimately flip a near-tie argmax — and is measured by
+    benchmarks/bench_quant_kv.py, not asserted here.)"""
+    cfg, params, pipe = setup
+    reqs_q = _mk_reqs(cfg)
+    PagedPipelineBatcher(pipe(), n_slots=3, max_len=48, block_size=8,
+                         kv_dtype="int8").serve(reqs_q, deadline=1e9)
+    reqs_s = _mk_reqs(cfg)
+    stats = PagedPipelineBatcher(
+        pipe(), n_slots=3, max_len=48, block_size=8, kv_dtype="int8",
+        spec=SpecConfig(k=3, proposer="ngram")).serve(reqs_s, deadline=1e9)
+    assert stats.spec_steps > 0
+    assert stats.kv_bytes_saved > 0
+    for rq, rs in zip(reqs_q, reqs_s):
+        assert list(rq.output) == list(rs.output), rq.rid
