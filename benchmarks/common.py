@@ -89,6 +89,89 @@ def validate_results(results_dir: str = RESULTS_DIR) -> List[str]:
     return errors
 
 
+# headline-metric selection for write_trajectory: first substring (in
+# order) found among a row's numeric keys wins — ratios and reductions
+# are the metrics worth tracking release-over-release, raw timings last
+_HEADLINE_HINTS = ("speedup", "_x", "reduction", "p50", "attainment",
+                   "hit_rate", "us_per_call")
+
+
+def _headline_metric(row: dict):
+    numeric = {k: v for k, v in row.items()
+               if isinstance(v, (int, float)) and not isinstance(v, bool)}
+    for hint in _HEADLINE_HINTS:
+        for k in sorted(numeric):
+            if hint in k:
+                return k, numeric[k]
+    for k in sorted(numeric):
+        return k, numeric[k]
+    return None
+
+
+def _metric_units(key: str) -> str:
+    if key.endswith("_x") or "speedup" in key:
+        return "x"
+    if "us" in key.split("_"):
+        return "us"
+    if "bytes" in key:
+        return "bytes"
+    if "ttft" in key or "latency" in key:
+        return "virtual iters"
+    if "tokens" in key or key.endswith("_tok"):
+        return "tokens"
+    if ("rate" in key or "attainment" in key or "frac" in key
+            or "reduction" in key):
+        return "fraction"
+    return ""
+
+
+def write_trajectory(results_dir: str = RESULTS_DIR,
+                     out_path: str = None) -> str:
+    """Consolidate the NEWEST row of every bench across results/*.jsonl
+    into one trajectory file: [{bench, metric, value, units, date,
+    source}]. One glanceable row per benchmark — the release-over-
+    release perf record ``run.py --check`` refreshes after validation."""
+    if out_path is None:
+        out_path = os.path.join(os.path.dirname(__file__), os.pardir,
+                                "BENCH_trajectory.json")
+    latest = {}   # bench name -> (mtime, source file, row)
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.jsonl"))):
+        mtime = os.path.getmtime(path)
+        with open(path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    row = json.loads(line)
+                except ValueError:
+                    continue
+                name = row.get("bench")
+                if not name:
+                    continue
+                prev = latest.get(name)
+                # later rows in the same file are newer re-runs
+                if prev is None or mtime >= prev[0]:
+                    latest[name] = (mtime, os.path.basename(path), row)
+    out = []
+    for name in sorted(latest):
+        mtime, source, row = latest[name]
+        head = _headline_metric(row)
+        if head is None:
+            continue
+        key, value = head
+        out.append({
+            "bench": name, "metric": key, "value": value,
+            "units": _metric_units(key),
+            "date": time.strftime("%Y-%m-%d", time.localtime(mtime)),
+            "source": source,
+        })
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return os.path.abspath(out_path)
+
+
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)

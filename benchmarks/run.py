@@ -13,10 +13,11 @@ from benchmarks import (bench_case_study, bench_continuous,
                         bench_convergence, bench_cost_model,
                         bench_disagg, bench_dryrun_table, bench_kernels,
                         bench_layout_breakdown, bench_offline_resilience,
-                        bench_paged, bench_quant_economics,
-                        bench_quant_kv, bench_slo_attainment,
-                        bench_spec, bench_swarm_compare)
-from benchmarks.common import validate_results
+                        bench_paged, bench_prefix, bench_prefix_cluster,
+                        bench_quant_economics, bench_quant_kv,
+                        bench_slo_attainment, bench_spec,
+                        bench_swarm_compare)
+from benchmarks.common import validate_results, write_trajectory
 
 SUITES = {
     "case_study": bench_case_study.run,             # Fig. 1
@@ -30,6 +31,8 @@ SUITES = {
     "continuous": bench_continuous.run,             # beyond-paper (Appx D)
     "paged": bench_paged.run,                       # beyond-paper (paged KV)
     "disagg": bench_disagg.run,                     # beyond-paper (HexGen-2)
+    "prefix": bench_prefix.run,                     # beyond-paper (prefix KV)
+    "prefix_cluster": bench_prefix_cluster.run,     # beyond-paper (tiered KV)
     "spec": bench_spec.run,                         # beyond-paper (spec decode)
     "quant_economics": bench_quant_economics.run,   # beyond-paper (int8)
     "quant_kv": bench_quant_kv.run,                 # beyond-paper (int8 KV)
@@ -55,6 +58,7 @@ def main() -> None:
         if errors:
             sys.exit(1)
         print("results check: all rows conform")
+        print(f"trajectory: {write_trajectory()}")
         return
     names = args.only.split(",") if args.only else list(SUITES)
     print("name,us_per_call,derived")

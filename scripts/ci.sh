@@ -4,7 +4,8 @@
 #   scripts/ci.sh --fast   fast gate: pytest -m "not slow" + interpret-mode
 #                          kernel smoke (decode/context/verify) + the
 #                          spec==greedy smoke + the quantized-KV smoke
-#                          (fused-dequant kernels + int8-pool serving)
+#                          (fused-dequant kernels + int8-pool serving) +
+#                          the tiered cluster-prefix smoke
 #                          (~5 min on a laptop CPU)
 #   scripts/ci.sh --full   everything: full pytest (incl. @slow multi-device
 #                          subprocess sweeps), every serving smoke on 4
@@ -49,6 +50,11 @@ echo "=== quantized-KV smoke (interpret kernels + int8-pool serving) ==="
 # the exactness gate for fused dequant (bitwise vs the unquantized
 # kernels on materialized-dequant pages) plus int8 page pools end to end
 python scripts/smoke_serving.py quant
+
+echo "=== tiered cluster-prefix smoke (2 replicas, 4 virtual devices) ==="
+# host-tier spill + shared-directory fetch + prefix-aware routing must
+# stay token-identical to cold paged serving in every tier
+python scripts/smoke_serving.py cluster
 
 if [[ "$TIER" == "--full" ]]; then
   echo "=== serving smokes (4 virtual devices) ==="

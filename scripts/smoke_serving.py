@@ -14,6 +14,9 @@ Suites:
   prefix   copy-on-write prefix caching + chunked prefill, warm == cold
   disagg   disaggregated prefill/decode with KV-page handoff, token-
            identical to colocated serving on the same 4-device pipeline
+  cluster  host-tier page spill + shared prefix directory across two
+           replicas: demotions/promotions/peer fetches on the virtual
+           clock, token-identical to cold paged serving
   spec     speculative decoding (n-gram + self-draft proposers), token-
            identical to plain greedy decode on the same 4-device pipeline
            with strictly fewer target decode steps
@@ -207,6 +210,50 @@ def suite_disagg() -> None:
     _ok(f"disaggregated == colocated: {stats_d.summary()}")
 
 
+def suite_cluster() -> None:
+    from repro.configs import get_config
+    from repro.core.plan import Assignment, PipelinePlan, StagePlan
+    from repro.serving.loop import VirtualClock
+    from repro.serving.request import shared_prefix_workload
+
+    cfg = get_config("granite-8b").reduced()
+    L = cfg.num_layers
+    # two replicas over the 4 devices: the shared prefix directory must
+    # route revisits across them and fetch peer-resident pages
+    asg = Assignment([
+        PipelinePlan([StagePlan([0], 1), StagePlan([1], L - 1)],
+                     cost=0.1, bottleneck=0.1),
+        PipelinePlan([StagePlan([2], 1), StagePlan([3], L - 1)],
+                     cost=0.1, bottleneck=0.1),
+    ])
+
+    def wl():
+        return shared_prefix_workload(rate=6.0, duration=2.0,
+                                      vocab=cfg.vocab_size, shared_len=24,
+                                      unique_len=6, out_len=4, seed=7)
+
+    reqs_c = wl()
+    _engine(cfg, asg, cache_layout="paged",
+            block_size=8).serve(reqs_c, deadline=1e9, clock=VirtualClock())
+    # tiered + clustered: pools too small for the shared set, so hot
+    # heads demote to the host tier and come back via promotion or a
+    # peer fetch instead of a re-prefill
+    reqs_t = wl()
+    stats_t = _engine(cfg, asg, cache_layout="paged", block_size=8,
+                      stage_blocks=[8, 8], prefix_caching=True,
+                      host_blocks=32, host_swap_cost=0.01,
+                      cluster_prefix=True, prefix_route_weight=0.5,
+                      prefill_token_cost=0.125).serve(
+                          reqs_t, deadline=1e9, clock=VirtualClock())
+    assert stats_t.host_demotions > 0, stats_t.summary()
+    assert stats_t.host_promotions + stats_t.prefix_fetches > 0, \
+        stats_t.summary()
+    assert stats_t.prefill_tokens < sum(len(r.prompt) for r in reqs_t)
+    for rc, rt in zip(reqs_c, reqs_t):
+        assert list(rc.output) == list(rt.output), (rc.rid,)
+    _ok(f"tiered cluster prefix == cold: {stats_t.summary()}")
+
+
 def suite_spec() -> None:
     from repro.serving.loop import VirtualClock
     from repro.serving.request import synth_workload
@@ -338,6 +385,7 @@ SUITES = {
     "serving": suite_serving,
     "prefix": suite_prefix,
     "disagg": suite_disagg,
+    "cluster": suite_cluster,
     "spec": suite_spec,
     "quant": suite_quant,
 }

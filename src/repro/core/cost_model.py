@@ -369,6 +369,97 @@ def kv_migration_bytes(model: ModelProfile, task: Task,
 
 
 # ---------------------------------------------------------------------------
+# Host page tier + cluster prefix directory (serving.block_manager.
+# HostPagePool / serving.cluster_kv): planner counterparts of tiered
+# residency. The serving layer demotes evicted prefix blocks to host memory
+# and fetches peer-resident prefixes over the KV link; the planner's job is
+# to size those tiers and to turn residency into an ACHIEVABLE prefix hit
+# rate instead of trusting a static scalar.
+# ---------------------------------------------------------------------------
+
+def kv_block_bytes(model: ModelProfile, task: Task, block_size: int,
+                   kv_dtype: Optional[str] = None,
+                   layers: Optional[int] = None) -> float:
+    """Bytes one paged KV block occupies across ``layers`` (default: the
+    whole stack) at the pool's storage precision — the granule every tier
+    (device pool, host tier, cluster fetch) allocates and ships in."""
+    L = model.num_layers if layers is None else layers
+    return model.kv_bytes_per_token_per_layer \
+        * _kv_width_factor(task, kv_dtype) * block_size * L
+
+
+def host_tier_blocks(host_bytes: float, model: ModelProfile, task: Task,
+                     block_size: int,
+                     kv_dtype: Optional[str] = None) -> int:
+    """How many paged KV blocks a host-memory budget holds (whole stack
+    per block, at the pool's storage precision — quantized pools spill at
+    their narrow width, so the same budget holds ~2-4x the int8 blocks)."""
+    if host_bytes <= 0 or block_size <= 0:
+        return 0
+    return int(host_bytes // kv_block_bytes(model, task, block_size,
+                                            kv_dtype))
+
+
+def host_swap_seconds_per_block(model: ModelProfile, task: Task,
+                                block_size: int, swap_gbps: float,
+                                kv_dtype: Optional[str] = None) -> float:
+    """Time to move one block over the host<->device (or peer-fetch) link
+    at ``swap_gbps`` Gbit/s. <= 0 models an ideal (free) swap."""
+    if swap_gbps <= 0:
+        return 0.0
+    return kv_block_bytes(model, task, block_size, kv_dtype) \
+        / (swap_gbps * 1e9 / 8)
+
+
+def device_pool_blocks(cluster: Cluster, devices: Sequence[int], layers: int,
+                       model: ModelProfile, task: Task, block_size: int,
+                       kv_dtype: Optional[str] = None) -> int:
+    """Paged KV blocks one stage's TP group can pool after parameters and
+    activation buffers: the device-tier residency bound feeding
+    effective_prefix_hit_rate. concurrent_capacity divides the same free
+    memory by SEQUENCES; this divides it by BLOCKS."""
+    if block_size <= 0:
+        return 0
+    n = len(devices)
+    B = task.bytes_per_el
+    free = min(MEM_UTIL * cluster.devices[d].spec.mem_bytes
+               for d in devices)
+    free -= model.params_per_layer * B / n * layers
+    free -= 4 * task.batch * (task.s_in + task.s_out) * model.d_model * B
+    if free <= 0:
+        return 0
+    per_block = kv_block_bytes(model, task, block_size, kv_dtype,
+                               layers=layers) / n
+    if per_block <= 0:
+        return 1 << 30              # recurrent-only stacks: O(1) state
+    return int(free // per_block)
+
+
+def effective_prefix_hit_rate(shareable: float, *, working_set_blocks: int,
+                              device_blocks: int, host_blocks: int = 0,
+                              peer_blocks: int = 0,
+                              tier_discount: float = 0.0) -> float:
+    """The cluster hit rate that replaces the static --prefix-hit-rate
+    scalar: a prefix hit needs its blocks RESIDENT somewhere reachable, so
+    the workload's shareable fraction (``shareable`` — the old static
+    scalar, now an upper bound) is scaled by the fraction of the hot
+    working set the replica can actually reach.
+
+    Reach = its device pool + its host tier + peer-resident blocks behind
+    the cluster directory. Tiered blocks (host + peer) are discounted by
+    ``tier_discount`` in [0, 1]: the share of a tiered hit's saving eaten
+    by swap/fetch time (1 = moving the block costs as much as recomputing
+    it, so the tier is worthless for latency; 0 = free swap)."""
+    if shareable <= 0.0:
+        return 0.0
+    if working_set_blocks <= 0:
+        return min(shareable, 1.0)
+    d = min(max(1.0 - tier_discount, 0.0), 1.0)
+    reach = device_blocks + d * (host_blocks + peer_blocks)
+    return min(shareable, 1.0) * min(1.0, reach / working_set_blocks)
+
+
+# ---------------------------------------------------------------------------
 # Speculative decoding (serving.spec): decode cost per COMMITTED token.
 # Plain decode commits exactly one token per weight scan; a draft-then-
 # verify step spends one target step plus k draft steps and commits the

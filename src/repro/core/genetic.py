@@ -160,6 +160,12 @@ class SearchResult:
     # Memory-constrained replicas quantize — pass to
     # InferenceEngine(kv_dtypes=...).
     kv_dtypes: Optional[List[Optional[str]]] = None
+    # host page tier: per-pipeline host-tier capacity in BLOCKS, aligned
+    # with assignment.pipelines; None = search ran without
+    # host_tier_bytes. The pool-wide host budget lands on the replicas
+    # with the largest device KV-capacity deficit, so small-HBM GPUs get
+    # the big host pools — pass to InferenceEngine(host_blocks=...).
+    host_blocks: Optional[List[int]] = None
 
 
 def choose_kv_dtypes(plans: Sequence[PipelinePlan],
@@ -183,6 +189,36 @@ def choose_kv_dtypes(plans: Sequence[PipelinePlan],
         cap = capacity_at(p, None)
         out.append(None if cap >= need else "int8")
     return out
+
+
+def choose_host_tiers(plans: Sequence[PipelinePlan], capacity_at, *,
+                      rate: float, blocks_per_seq: int,
+                      budget_blocks: int) -> List[int]:
+    """The host-tier dimension of the search: split a pool-wide host-page
+    budget across replicas proportionally to their device KV-capacity
+    DEFICIT, so the small-HBM replicas — the ones whose device pools run
+    dry and demote hardest — get the large host pools.
+
+    ``capacity_at(plan)`` is the replica's device-tier concurrent-sequence
+    bound; its Little's-law demand is rate/N arrivals/s held for the
+    replica's end-to-end latency each. The shortfall, times
+    ``blocks_per_seq``, is the replica's host demand in blocks. A pool
+    with no deficit anywhere still churns prefixes under eviction, so an
+    all-feasible replica set splits the budget evenly instead of
+    discarding it."""
+    n = len(plans)
+    if n == 0 or budget_blocks <= 0:
+        return [0] * n
+    deficits = []
+    for p in plans:
+        need = rate / n * p.cost
+        cap = capacity_at(p)
+        deficits.append(max(0.0, need - cap) * max(blocks_per_seq, 1))
+    total = sum(deficits)
+    if total <= 0:
+        base, extra = divmod(budget_blocks, n)
+        return [base + (1 if i < extra else 0) for i in range(n)]
+    return [int(budget_blocks * d / total) for d in deficits]
 
 
 def choose_spec_ks(models: Sequence[slo_sim.PhasedReplicaModel], *,
@@ -259,7 +295,11 @@ class Evaluator:
                  spec_decode: bool = False, spec_alpha: float = 0.7,
                  spec_draft_cost: float = 0.0, max_spec_k: int = 8,
                  kv_dtype: Optional[str] = None,
-                 kv_dtype_search: bool = False):
+                 kv_dtype_search: bool = False,
+                 host_tier_bytes: float = 0.0,
+                 host_swap_gbps: float = 0.0,
+                 prefix_working_set: int = 0,
+                 cluster_prefix: bool = False):
         self.cluster = cluster
         self.model = model
         self.task = task
@@ -296,12 +336,26 @@ class Evaluator:
         # quantize, the rest stay at model precision
         self.kv_dtype = kv_dtype
         self.kv_dtype_search = kv_dtype_search
+        # host page tier + cluster prefix directory: host_tier_bytes is a
+        # POOL-WIDE host-memory budget split across replicas by KV-capacity
+        # deficit (choose_host_tiers -> SearchResult.host_blocks);
+        # host_swap_gbps prices the swap/fetch link (<= 0 = free), and
+        # prefix_working_set (tokens of hot shared prefixes) turns the
+        # static prefix_hit_rate scalar into a residency-derived
+        # ACHIEVABLE rate (cost_model.effective_prefix_hit_rate).
+        # cluster_prefix lets every replica reach the others' resident
+        # blocks through the shared directory (serving.cluster_kv).
+        self.host_tier_bytes = host_tier_bytes
+        self.host_swap_gbps = host_swap_gbps
+        self.prefix_working_set = prefix_working_set
+        self.cluster_prefix = cluster_prefix
         self._plan_cache: Dict[FrozenSet[int], Optional[PipelinePlan]] = {}
         self._fit_cache: Dict[Individual, Tuple[float, float]] = {}
         self._roles_cache: Dict[Individual, Optional[List[str]]] = {}
         self._spec_cache: Dict[Individual, Optional[List[int]]] = {}
         self._kvd_cache: Dict[Individual,
                               Optional[List[Optional[str]]]] = {}
+        self._host_cache: Dict[Individual, Optional[List[int]]] = {}
         self.evaluations = 0
 
     def _feasible(self, group: FrozenSet[int]) -> bool:
@@ -326,23 +380,29 @@ class Evaluator:
         return Assignment([p for p in plans if p is not None])
 
     def _max_concurrent(self, plan: PipelinePlan,
-                        kv_dtype: Optional[str] = "__default__") -> int:
+                        kv_dtype: Optional[str] = "__default__",
+                        hit_rate: Optional[float] = None) -> int:
         """KV-capacity bound of one replica: the tightest stage's
         concurrent-sequence count at the configured block granularity
         (0 when capacity is idealized as unbounded) and pool precision
-        (the evaluator-wide kv_dtype unless overridden per replica)."""
+        (the evaluator-wide kv_dtype unless overridden per replica).
+        ``hit_rate`` overrides the static prefix_hit_rate scalar with the
+        residency-derived per-replica rate."""
         if self.kv_block_size is None:
             return 0
         if kv_dtype == "__default__":
             kv_dtype = self.kv_dtype
+        if hit_rate is None:
+            hit_rate = self.prefix_hit_rate
         return min(cm.concurrent_capacity(
             self.cluster, st.device_ids, st.num_layers, self.model,
             self.task, block_size=self.kv_block_size,
-            prefix_hit_rate=self.prefix_hit_rate, kv_dtype=kv_dtype)
+            prefix_hit_rate=hit_rate, kv_dtype=kv_dtype)
             for st in plan.stages)
 
     def _phase_model(self, plan: PipelinePlan,
-                     kv_dtype: Optional[str] = "__default__"
+                     kv_dtype: Optional[str] = "__default__",
+                     hit_rate: Optional[float] = None
                      ) -> slo_sim.PhasedReplicaModel:
         stages = [st.device_ids for st in plan.stages]
         pc = cm.pipeline_phase_costs(self.cluster, stages, plan.layer_split,
@@ -352,7 +412,53 @@ class Evaluator:
             prefill_bottleneck=pc.prefill_bottleneck,
             decode_latency=pc.decode_latency,
             decode_bottleneck=pc.decode_bottleneck,
-            max_concurrent=self._max_concurrent(plan, kv_dtype))
+            max_concurrent=self._max_concurrent(plan, kv_dtype, hit_rate))
+
+    def _replica_hit_rates(self, plans: Sequence[PipelinePlan],
+                           host_blocks: Optional[List[int]],
+                           kv_dtypes: Optional[List[Optional[str]]]
+                           ) -> Optional[List[float]]:
+        """Residency-derived per-replica prefix hit rates replacing the
+        static scalar: each replica's reach is its device pool blocks +
+        its host tier + (cluster_prefix) every peer's resident blocks,
+        tier blocks discounted by swap-vs-recompute time. None when no
+        working set was given (the static scalar stands)."""
+        bs = self.kv_block_size
+        if self.prefix_working_set <= 0 or not bs or not plans:
+            return None
+        ws = -(-self.prefix_working_set // bs)
+
+        def kvd(i):
+            return kv_dtypes[i] if kv_dtypes is not None else self.kv_dtype
+
+        hb = host_blocks if host_blocks is not None else [0] * len(plans)
+        dev, disc = [], []
+        for i, p in enumerate(plans):
+            dev.append(min(cm.device_pool_blocks(
+                self.cluster, st.device_ids, st.num_layers, self.model,
+                self.task, bs, kv_dtype=kvd(i)) for st in p.stages))
+            if self.host_swap_gbps > 0:
+                swap = cm.host_swap_seconds_per_block(
+                    self.model, self.task, bs, self.host_swap_gbps,
+                    kv_dtype=kvd(i))
+                pc = cm.pipeline_phase_costs(
+                    self.cluster, [st.device_ids for st in p.stages],
+                    [st.num_layers for st in p.stages], self.model,
+                    self.task)
+                recompute = pc.prefill_latency / max(self.task.s_in, 1) * bs
+                disc.append(min(1.0, swap / recompute)
+                            if recompute > 0 else 1.0)
+            else:
+                disc.append(0.0)
+        reach = [dev[i] + hb[i] for i in range(len(plans))]
+        out = []
+        for i in range(len(plans)):
+            peers = sum(reach) - reach[i] if self.cluster_prefix else 0
+            out.append(cm.effective_prefix_hit_rate(
+                self.prefix_hit_rate, working_set_blocks=ws,
+                device_blocks=dev[i], host_blocks=hb[i],
+                peer_blocks=peers, tier_discount=disc[i]))
+        return out
 
     def _pair_delay_fn(self, plans: List[PipelinePlan], kv_bytes: float):
         """Per-pair transfer delay over the cluster's best link from the
@@ -383,6 +489,12 @@ class Evaluator:
         self.fitness(ind)
         return self._kvd_cache[ind]
 
+    def host_blocks_for(self, ind: Individual) -> Optional[List[int]]:
+        """The per-replica host-tier capacities (blocks) fitness() chose
+        for `ind` (None = search ran without host_tier_bytes)."""
+        self.fitness(ind)
+        return self._host_cache[ind]
+
     def fitness(self, ind: Individual) -> Tuple[float, float]:
         """(SLO attainment, -mean latency) to maximize lexicographically.
         With disaggregate=True the attainment is the better of colocated
@@ -406,10 +518,31 @@ class Evaluator:
         def kvd(i: int) -> Optional[str]:
             return kv_dtypes[i] if kv_dtypes is not None else self.kv_dtype
 
+        # host tier: split the pool-wide host budget by device-capacity
+        # deficit (small-HBM replicas get the big pools), then derive the
+        # per-replica ACHIEVABLE prefix hit rate from total residency
+        host_blocks = None
+        if self.host_tier_bytes > 0 and self.kv_block_size \
+                and asg.pipelines:
+            budget = cm.host_tier_blocks(
+                self.host_tier_bytes, self.model, self.task,
+                self.kv_block_size, kv_dtype=self.kv_dtype)
+            bps = -(-(self.task.s_in + self.task.s_out)
+                    // self.kv_block_size)
+            host_blocks = choose_host_tiers(
+                asg.pipelines,
+                lambda p: self._max_concurrent(p),
+                rate=self.rate, blocks_per_seq=bps, budget_blocks=budget)
+        hit_rates = self._replica_hit_rates(asg.pipelines, host_blocks,
+                                            kv_dtypes)
+
+        def hr(i: int) -> Optional[float]:
+            return hit_rates[i] if hit_rates is not None else None
+
         models = None
         spec_ks = None
         if (self.spec_decode or self.disaggregate) and asg.pipelines:
-            models = [self._phase_model(p, kvd(i))
+            models = [self._phase_model(p, kvd(i), hr(i))
                       for i, p in enumerate(asg.pipelines)]
         if self.spec_decode and models:
             spec_ks, mults = choose_spec_ks(
@@ -423,7 +556,7 @@ class Evaluator:
         else:
             reps = [slo_sim.ReplicaModel(
                 p.cost, p.bottleneck,
-                max_concurrent=self._max_concurrent(p, kvd(i)))
+                max_concurrent=self._max_concurrent(p, kvd(i), hr(i)))
                 for i, p in enumerate(asg.pipelines)]
         att = slo_sim.simulate(reps, self.rate, self.deadline,
                                duration=self.sim_duration, seed=self.seed)
@@ -453,6 +586,7 @@ class Evaluator:
         self._roles_cache[ind] = roles
         self._spec_cache[ind] = spec_ks
         self._kvd_cache[ind] = kv_dtypes
+        self._host_cache[ind] = host_blocks
         mean_lat = np.mean([p.cost for p in asg.pipelines]) if asg.pipelines \
             else float("inf")
         out = (att, -mean_lat)
@@ -470,6 +604,8 @@ def search(cluster: Cluster, model: cm.ModelProfile, task: cm.Task, *,
            spec_decode: bool = False, spec_alpha: float = 0.7,
            spec_draft_cost: float = 0.0, max_spec_k: int = 8,
            kv_dtype: Optional[str] = None, kv_dtype_search: bool = False,
+           host_tier_bytes: float = 0.0, host_swap_gbps: float = 0.0,
+           prefix_working_set: int = 0, cluster_prefix: bool = False,
            init: Optional[List[Individual]] = None) -> SearchResult:
     """The full two-phase search: genetic over partitions, DP inside.
     disaggregate=True adds the prefill/decode role split as a scored
@@ -478,7 +614,16 @@ def search(cluster: Cluster, model: cm.ModelProfile, task: cm.Task, *,
     (SearchResult.spec_ks — slow replicas speculate deeper);
     kv_dtype fixes one pool precision for every replica, while
     kv_dtype_search=True picks precision PER REPLICA instead
-    (SearchResult.kv_dtypes — memory-bound replicas quantize)."""
+    (SearchResult.kv_dtypes — memory-bound replicas quantize).
+
+    host_tier_bytes > 0 adds the HOST PAGE TIER dimension: the pool-wide
+    host budget is split across replicas by device KV-capacity deficit
+    (SearchResult.host_blocks — small-HBM replicas get the big pools),
+    with swaps priced at host_swap_gbps. prefix_working_set (tokens of
+    hot shared prefixes) replaces the static prefix_hit_rate scalar with
+    a residency-derived achievable rate per replica; cluster_prefix=True
+    counts peer-resident blocks behind the shared directory toward each
+    replica's reach (serving.cluster_kv)."""
     rng = np.random.default_rng(seed)
     ev = Evaluator(cluster, model, task, deadline=deadline, rate=rate,
                    sim_duration=sim_duration, seed=seed,
@@ -487,7 +632,11 @@ def search(cluster: Cluster, model: cm.ModelProfile, task: cm.Task, *,
                    disaggregate=disaggregate, kv_link_gbps=kv_link_gbps,
                    spec_decode=spec_decode, spec_alpha=spec_alpha,
                    spec_draft_cost=spec_draft_cost, max_spec_k=max_spec_k,
-                   kv_dtype=kv_dtype, kv_dtype_search=kv_dtype_search)
+                   kv_dtype=kv_dtype, kv_dtype_search=kv_dtype_search,
+                   host_tier_bytes=host_tier_bytes,
+                   host_swap_gbps=host_swap_gbps,
+                   prefix_working_set=prefix_working_set,
+                   cluster_prefix=cluster_prefix)
     if init is None:
         if mutation == "hexgen":
             pop = kmeans_init(cluster, rng)
@@ -527,4 +676,5 @@ def search(cluster: Cluster, model: cm.ModelProfile, task: cm.Task, *,
                         history=history, evaluations=ev.evaluations,
                         roles=ev.roles_for(best),
                         spec_ks=ev.spec_ks_for(best),
-                        kv_dtypes=ev.kv_dtypes_for(best))
+                        kv_dtypes=ev.kv_dtypes_for(best),
+                        host_blocks=ev.host_blocks_for(best))

@@ -23,7 +23,11 @@ def schedule(cluster: Cluster, arch: str, task: cm.Task, *,
              spec_draft_cost: float = 0.0,
              max_spec_k: int = 8,
              kv_dtype: Optional[str] = None,
-             kv_dtype_search: bool = False) -> SearchResult:
+             kv_dtype_search: bool = False,
+             host_tier_bytes: float = 0.0,
+             host_swap_gbps: float = 0.0,
+             prefix_working_set: int = 0,
+             cluster_prefix: bool = False) -> SearchResult:
     """Find an assignment of `cluster` serving `arch` replicas.
 
     deadline: SLO latency bound (s); rate: request rate (req/s).
@@ -58,6 +62,18 @@ def schedule(cluster: Cluster, arch: str, task: cm.Task, *,
     memory-bound replicas quantize. The choices land in
     SearchResult.kv_dtypes, aligned with assignment.pipelines — pass
     them to InferenceEngine(kv_dtypes=...).
+
+    host_tier_bytes > 0 sizes a HOST PAGE TIER under the device pools:
+    the pool-wide host budget lands on the replicas with the largest
+    device KV-capacity deficit (small-HBM GPUs get the big host pools),
+    with swap-in/swap-out priced at host_swap_gbps Gbit/s. The per-
+    replica capacities land in SearchResult.host_blocks — pass them to
+    InferenceEngine(host_blocks=...). prefix_working_set (tokens of hot
+    shared prefixes) replaces the static prefix_hit_rate scalar with the
+    ACHIEVABLE per-replica rate derived from tiered residency
+    (cost_model.effective_prefix_hit_rate); cluster_prefix=True counts
+    peer-resident blocks behind the shared directory toward each
+    replica's reach, matching serving cluster_prefix=True.
     """
     cfg = get_config(arch)
     profile = cm.ModelProfile.from_config(cfg, paper_exact=paper_exact,
@@ -72,6 +88,10 @@ def schedule(cluster: Cluster, arch: str, task: cm.Task, *,
                          spec_decode=spec_decode, spec_alpha=spec_alpha,
                          spec_draft_cost=spec_draft_cost,
                          max_spec_k=max_spec_k, kv_dtype=kv_dtype,
-                         kv_dtype_search=kv_dtype_search)
+                         kv_dtype_search=kv_dtype_search,
+                         host_tier_bytes=host_tier_bytes,
+                         host_swap_gbps=host_swap_gbps,
+                         prefix_working_set=prefix_working_set,
+                         cluster_prefix=cluster_prefix)
     res.assignment.validate(cfg.num_layers)
     return res

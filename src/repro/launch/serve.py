@@ -96,6 +96,37 @@ def main() -> None:
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="generate prompts with this many shared system-"
                          "prompt tokens (exercises the prefix cache)")
+    ap.add_argument("--host-mem-gb", type=float, default=0.0,
+                    help="pool-wide host-memory budget for the page tier "
+                         "(GB): the scheduler splits it across replicas "
+                         "by device KV-capacity deficit and prefix "
+                         "eviction demotes pages there instead of "
+                         "deleting them (paged + --prefix-caching)")
+    ap.add_argument("--host-swap-gbps", type=float, default=0.0,
+                    help="host<->device swap (and peer-fetch) bandwidth "
+                         "in Gbit/s the scheduler prices tiered hits at "
+                         "(0 = ideal free swap)")
+    ap.add_argument("--host-swap-cost", type=float, default=0.0,
+                    help="serving-clock cost of swapping one block "
+                         "between tiers, as a fraction of one iteration "
+                         "(virtual-clock replays only)")
+    ap.add_argument("--cluster-prefix", action="store_true",
+                    help="join every replica into a shared prefix "
+                         "directory: prompts whose prefix lives only on "
+                         "a peer fetch the pages over the KV link, and "
+                         "the router scores admission by resident prefix "
+                         "instead of pure least-loaded")
+    ap.add_argument("--prefix-route-weight", type=float, default=0.25,
+                    help="router weight of one resident prefix block "
+                         "against queue depth (0 = pure least-loaded)")
+    ap.add_argument("--route-seed", type=int, default=None,
+                    help="seed the router's dispatch tiebreaks instead "
+                         "of the deterministic lowest-replica-id order")
+    ap.add_argument("--prefix-working-set", type=int, default=0,
+                    help="hot shared-prefix working set in TOKENS: the "
+                         "scheduler derives the ACHIEVABLE per-replica "
+                         "hit rate from tiered residency instead of "
+                         "trusting --prefix-hit-rate verbatim")
     ap.add_argument("--disaggregate", action="store_true",
                     help="split prefill and decode across replicas: the "
                          "scheduler also searches the role split, prefill "
@@ -181,6 +212,15 @@ def main() -> None:
             "--kv-dtype needs --cache-layout paged (precision is a "
             "page-pool layout); serving at model precision", stacklevel=1)
         args.kv_dtype = "auto"
+    if (args.host_mem_gb > 0 or args.cluster_prefix) \
+            and not (args.cache_layout == "paged" and args.prefix_caching):
+        import warnings
+        warnings.warn(
+            "--host-mem-gb/--cluster-prefix need --cache-layout paged "
+            "with --prefix-caching (tiers and the directory hold prefix "
+            "blocks); serving without them", stacklevel=1)
+        args.host_mem_gb = 0.0
+        args.cluster_prefix = False
     # "auto" = model default everywhere; "search" = per-replica scheduler
     # choice; anything else fixes one pool precision for planning + serving
     kv_dtype = None if args.kv_dtype in ("auto", "search") else args.kv_dtype
@@ -196,7 +236,11 @@ def main() -> None:
                    spec_draft_cost=args.spec_draft_cost,
                    max_spec_k=max(args.spec_k, 1),
                    kv_dtype=kv_dtype,
-                   kv_dtype_search=(args.kv_dtype == "search"))
+                   kv_dtype_search=(args.kv_dtype == "search"),
+                   host_tier_bytes=args.host_mem_gb * 1e9,
+                   host_swap_gbps=args.host_swap_gbps,
+                   prefix_working_set=args.prefix_working_set,
+                   cluster_prefix=args.cluster_prefix)
     print(f"  assignment: {res.assignment.describe()}")
     print(f"  estimated SLO attainment: {res.attainment*100:.1f}%")
     if args.disaggregate:
@@ -206,6 +250,8 @@ def main() -> None:
     if args.kv_dtype == "search":
         shown = [d or "auto" for d in (res.kv_dtypes or [])]
         print(f"  kv-dtype per replica: {shown}")
+    if args.host_mem_gb > 0:
+        print(f"  host-tier blocks per replica: {res.host_blocks}")
 
     cfg = cfg_full.reduced() if args.reduced else cfg_full
     asg = scale_assignment(res.assignment, cfg_full.num_layers,
@@ -225,6 +271,15 @@ def main() -> None:
                              block_size=args.block_size,
                              prefix_caching=args.prefix_caching,
                              prefill_chunk=args.prefill_chunk,
+                             # the scheduler's deficit-weighted host-tier
+                             # split (None = no host tier)
+                             host_blocks=(res.host_blocks
+                                          if res.host_blocks is not None
+                                          else 0),
+                             host_swap_cost=args.host_swap_cost,
+                             cluster_prefix=args.cluster_prefix,
+                             prefix_route_weight=args.prefix_route_weight,
+                             route_seed=args.route_seed,
                              # the role split is the SCHEDULER's verdict:
                              # roles=None means colocated serving won the
                              # search, so don't force a default split

@@ -257,6 +257,11 @@ class PrefixIndex:
         # reads this every loop iteration (capacity counts evictable
         # blocks as free), so a per-call scan would be O(pool) steady work
         self._evictable = 0
+        # optional demotion hook: ``spill(chain_hash, block_id)`` runs for
+        # every evicted block BEFORE its pool slot is freed (page contents
+        # still valid on device), turning eviction into device -> host
+        # demotion when a HostPagePool is wired (serving.continuous)
+        self.spill = None
 
     # ---- BlockPool observer hooks (1 <-> 2 ref transitions) -------------
     def _ref_fell_to_one(self, bid: int) -> None:
@@ -279,6 +284,12 @@ class PrefixIndex:
             n += 1
         return n
 
+    def lookup(self, h: int) -> Optional[int]:
+        """Resident block id for chain hash `h` (None = not indexed); no
+        refcount or LRU side effects — tier planning and cluster export
+        peek without claiming."""
+        return self._block_of.get(h)
+
     def acquire(self, hashes: Sequence[int]) -> List[int]:
         """Alias the indexed prefix `hashes` (all must be resident):
         increfs every block on the caller's behalf and marks it
@@ -288,8 +299,16 @@ class PrefixIndex:
         for h in hashes:
             bid = self._block_of[h]
             self.pool.incref(bid)
-            self._lru.move_to_end(bid)
             blocks.append(bid)
+        # LRU-touch in REVERSE chain order so the chain's HEAD ends up the
+        # most recently used. Chained hashes only ever match head-first, so
+        # eviction must trim a chain TAIL-first: freeing the head would
+        # orphan every deeper block (unmatched forever yet still resident).
+        # In particular a partial re-hit — a short head that keeps hitting
+        # under a long cold tail — refreshes exactly the matched head,
+        # leaving the stale tail as the eviction victim.
+        for bid in reversed(blocks):
+            self._lru.move_to_end(bid)
         return blocks
 
     def register(self, hashes: Sequence[int], blocks: Sequence[int]) -> int:
@@ -298,6 +317,7 @@ class PrefixIndex:
         the first writer stays canonical, a duplicate block is simply not
         indexed. Returns the number of new entries."""
         added = 0
+        new: List[int] = []
         for h, bid in zip(hashes, blocks):
             if h in self._block_of:
                 continue
@@ -306,8 +326,12 @@ class PrefixIndex:
             self._block_of[h] = bid
             self._hash_of[bid] = h
             self._lru[bid] = None
-            self._lru.move_to_end(bid)
+            new.append(bid)
             added += 1
+        # same reverse-order touch as acquire: heads newer than tails, so
+        # pressure trims chains from the deep end
+        for bid in reversed(new):
+            self._lru.move_to_end(bid)
         return added
 
     def n_evictable(self) -> int:
@@ -327,15 +351,113 @@ class PrefixIndex:
             del self._block_of[h]
             del self._lru[bid]
             self._evictable -= 1
+            if self.spill is not None:
+                self.spill(h, bid)            # demote before the slot frees
             self.pool.free(bid)               # 1 -> 0: back to the free list
             freed += 1
         return freed
 
     def clear(self) -> None:
-        """Drop every cached prefix (frees the index's references)."""
+        """Drop every cached prefix (frees the index's references). A reset,
+        not pressure: nothing spills to the host tier."""
         for bid in list(self._lru):
             h = self._hash_of.pop(bid)
             del self._block_of[h]
             del self._lru[bid]
             self.pool.free(bid)
         self._evictable = 0
+
+
+# ---------------------------------------------------------------------------
+# Host-memory page tier (device -> host demotion)
+# ---------------------------------------------------------------------------
+
+class HostPagePool:
+    """Host-memory (CPU DRAM) tier for demoted prefix pages.
+
+    Device eviction under pool pressure DEMOTES a prefix block's page
+    payload here instead of deleting it, keyed by the same chained chunk
+    hash the ``PrefixIndex`` uses; a later prompt that matches the hash
+    PROMOTES the payload back into a fresh device block (``get`` pops —
+    every page lives in exactly one tier). Capacity is counted in blocks
+    and enforced LRU, like the device index but with true deletion at the
+    bottom of the hierarchy (``on_evict`` lets the cluster directory track
+    the final drop).
+
+    The payload is opaque to the pool: the engine stores one numpy pytree
+    per stage layer (``{"k","v"[,"k_scale","v_scale"]}``, leading axis =
+    one block) captured at POOL precision, so quantized pages (PR 6) spill
+    at their narrow width and re-land verbatim.
+    """
+
+    def __init__(self, capacity: int, block_size: int):
+        assert capacity >= 1, "host tier needs at least one block"
+        self.capacity = capacity
+        self.block_size = block_size
+        self._pages: OrderedDict = OrderedDict()   # chain hash -> payload
+        # callback(chain_hash) when the LRU bound drops an entry — the page
+        # has now left the replica entirely (directory unpublish)
+        self.on_evict = None
+        self.demotions = 0         # payloads accepted (device -> host)
+        self.promotions = 0        # payloads popped back out (host -> device)
+        self.evictions = 0         # payloads dropped at the LRU bound
+
+    def __len__(self) -> int:
+        return len(self._pages)
+
+    def __contains__(self, h) -> bool:
+        return h in self._pages
+
+    def match_len(self, hashes: Sequence[int]) -> int:
+        """Length (in blocks) of the longest resident prefix of `hashes`."""
+        n = 0
+        for h in hashes:
+            if h not in self._pages:
+                break
+            n += 1
+        return n
+
+    def put(self, h: int, payload) -> None:
+        """Demote a page payload under its chain hash; over capacity the
+        least-recently-touched payload is dropped (true eviction)."""
+        if h in self._pages:
+            self._pages.move_to_end(h)     # refresh, keep first demotion
+            return
+        self._pages[h] = payload
+        self.demotions += 1
+        while len(self._pages) > self.capacity:
+            old, _ = self._pages.popitem(last=False)
+            self.evictions += 1
+            if self.on_evict is not None:
+                self.on_evict(old)
+
+    def get(self, h: int):
+        """Promote: POP the payload for `h` (None on miss). Popping keeps
+        the one-tier invariant — the caller re-registers the page on
+        device, so a host copy left behind would alias it."""
+        payload = self._pages.pop(h, None)
+        if payload is not None:
+            self.promotions += 1
+        return payload
+
+    def peek(self, h: int):
+        """Read without promoting (cluster export: the payload stays
+        host-resident on this replica while a COPY migrates to a peer)."""
+        return self._pages.get(h)
+
+    def restore(self, h: int, payload) -> None:
+        """Undo a ``get`` whose promotion could not allocate a device
+        block: the payload returns to the host tier, counter-neutral."""
+        self.promotions -= 1
+        self.demotions -= 1
+        self.put(h, payload)
+
+    def discard(self, h: int) -> None:
+        """Drop a stale host copy without eviction accounting — the page
+        was re-registered on device (one-tier invariant), the host copy
+        no longer exists anywhere."""
+        self._pages.pop(h, None)
+
+    def nbytes(self) -> int:
+        return int(sum(a.nbytes for payload in self._pages.values()
+                       for lkv in payload for a in lkv.values()))

@@ -38,9 +38,10 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
-from repro.serving.block_manager import (BlockPool, BlockTable, PrefixIndex,
-                                         blocks_for_tokens, chunk_hashes)
-from repro.serving.disagg import KVMigration
+from repro.serving.block_manager import (BlockPool, BlockTable, HostPagePool,
+                                         PrefixIndex, blocks_for_tokens,
+                                         chunk_hashes)
+from repro.serving.disagg import KVLink, KVMigration
 from repro.serving.loop import (ServeStats, VirtualClock, WallClock,
                                 run_serve_loop)
 from repro.serving.request import Request
@@ -360,6 +361,27 @@ class PagedPipelineBatcher(SlotEngine):
     up in simulated TTFT/latency instead of hiding behind a flat
     per-iteration cost; 0.0 keeps the PR-2 flat-cost accounting.
 
+    ``host_blocks > 0`` adds a HOST-MEMORY PAGE TIER (needs prefix
+    caching): ``PrefixIndex`` eviction under pool pressure DEMOTES a
+    prefix block's page payload into a per-stage ``HostPagePool`` (at
+    pool precision — quantized pages spill narrow) instead of deleting
+    it, and a later prompt that matches past the device-resident prefix
+    PROMOTES pages back into fresh device blocks, block by block, so the
+    shared-prefix working set survives a device pool too small to hold
+    it. Preempt-by-recompute recovers through the same path: the victim's
+    registered prefix demotes under the very pressure that evicted it and
+    swaps back in at re-admission instead of re-prefilling.
+    ``host_swap_cost`` (virtual clock) charges each block moved across
+    the device<->host boundary that fraction of an iteration.
+
+    ``attach_cluster`` (serving.cluster_kv.wire_cluster_prefix) joins a
+    CLUSTER PREFIX DIRECTORY: the replica publishes its (hash -> tier)
+    residency, and a prompt whose prefix lives only on a PEER replica
+    fetches those pages over the KV link — the PR-4 ``KVMigration`` wire
+    format (per-global-layer payloads) charged at ``KVLink.delay`` on the
+    serving clock — before falling back to cold prefill. Token streams
+    never depend on the directory: a stale entry just costs recompute.
+
     ``role`` splits the two inference phases across replicas (disaggregated
     serving, serving.disagg):
 
@@ -405,6 +427,7 @@ class PagedPipelineBatcher(SlotEngine):
                  virtual_step_cost: float = 1.0,
                  prefix_caching: bool = False, prefill_chunk: int = 0,
                  prefill_token_cost: float = 0.0,
+                 host_blocks: int = 0, host_swap_cost: float = 0.0,
                  role: str = "both", replica_id: int = 0,
                  spec: Optional[SpecConfig] = None,
                  kv_dtype: Optional[str] = None,
@@ -484,6 +507,33 @@ class PagedPipelineBatcher(SlotEngine):
         self._prefix: List[Optional[PrefixIndex]] = [
             PrefixIndex(p) if (prefix_caching and p is not None) else None
             for p in self._pools]
+        # ---- host page tier (device -> host demotion) ------------------
+        if host_blocks and not self.prefix_caching:
+            warnings.warn(
+                "host_blocks needs prefix_caching=True (the host tier is "
+                "keyed by prefix chunk hashes); serving without a host "
+                "tier", stacklevel=2)
+            host_blocks = 0
+        self.host_blocks = int(host_blocks)
+        self.host_swap_cost = host_swap_cost
+        self._host: List[Optional[HostPagePool]] = [
+            HostPagePool(self.host_blocks, block_size)
+            if (self.host_blocks > 0 and p is not None) else None
+            for p in self._pools]
+        # the first attention stage is the cluster directory's
+        # REPRESENTATIVE: tier transitions publish once per hash, not once
+        # per stage (stages register/evict near-symmetrically; the
+        # directory is a hint and export verifies every stage anyway)
+        self._rep_stage = next(
+            (si for si, p in enumerate(self._pools) if p is not None), None)
+        for si, (ix, host) in enumerate(zip(self._prefix, self._host)):
+            if ix is not None and host is not None:
+                ix.spill = self._make_spill(si)
+                host.on_evict = self._make_host_drop(si)
+        # ---- cluster prefix directory (attach_cluster wires these) -----
+        self.cluster_dir = None
+        self.cluster_link: Optional[KVLink] = None
+        self._cluster_peers: Dict[int, "PagedPipelineBatcher"] = {}
         # ---- disaggregated prefill/decode ------------------------------
         self.role = role
         self.replica_id = replica_id
@@ -520,8 +570,16 @@ class PagedPipelineBatcher(SlotEngine):
         self.spec_tokens = 0           # tokens committed via verify steps
         self.kv_bytes_resident = 0     # allocated page-pool bytes (+scales)
         self.kv_bytes_saved = 0        # vs the model-default-dtype layout
+        self.host_demotions = 0        # blocks spilled device -> host
+        self.host_promotions = 0       # blocks swapped back host -> device
+        self.host_evictions = 0        # host-tier LRU drops (pages lost)
+        self.host_hit_tokens = 0       # prompt tokens served from host tier
+        self.prefix_fetches = 0        # prefix blocks fetched from peers
+        self.prefix_fetched_bytes = 0  # payload bytes shipped for fetches
         self._iter_prefill_tokens = 0
         self._iter_spec_proposed = 0
+        self._iter_swap_blocks = 0
+        self._iter_fetch_cost = 0.0
 
     # ---- block accounting -------------------------------------------------
     def _min_pool_free(self) -> int:
@@ -790,8 +848,12 @@ class PagedPipelineBatcher(SlotEngine):
         self._admit_seq += 1
 
     def _match_slot(self, i: int) -> None:
-        """First-touch prefix lookup for slot i: alias the longest indexed
-        prefix (incref per stage) and drop it from the pending prefill."""
+        """First-touch prefix lookup for slot i: alias the longest
+        device-indexed prefix (incref per stage), then EXTEND the match
+        down the memory hierarchy — host-tier pages swap back into fresh
+        device blocks, pages resident only on peer replicas migrate over
+        the KV link — and drop the whole matched prefix from the pending
+        prefill."""
         s = self.slots[i]
         s.matched = True
         if not s.hashes:
@@ -799,21 +861,29 @@ class PagedPipelineBatcher(SlotEngine):
         self.prefix_lookups += 1
         L = min(ix.match_len(s.hashes)
                 for ix in self._prefix if ix is not None)
-        if not L:
+        if L:
+            # alias the hit prefix in EVERY stage (symmetric indexes:
+            # registered/evicted together, so L agrees up to eviction
+            # races — min() above settles those), incref-ing BEFORE any
+            # tier promotion so a promotion's eviction can never take
+            # what this very match already claimed
+            for tabs, ix in zip(self._tables, self._prefix):
+                if tabs is None:
+                    continue
+                t = tabs[i]
+                assert not t.blocks, "slot freed without releasing"
+                t.adopt(ix.acquire(s.hashes[:L]))
+        Lx = L
+        if self._tiered:
+            while Lx < len(s.hashes) \
+                    and self._materialize_hash(i, s.hashes[Lx]):
+                Lx += 1
+        if not Lx:
             return
-        # alias the hit prefix in EVERY stage (symmetric indexes:
-        # registered/evicted together, so L agrees up to eviction races —
-        # min() above settles those)
-        for tabs, ix in zip(self._tables, self._prefix):
-            if tabs is None:
-                continue
-            t = tabs[i]
-            assert not t.blocks, "slot freed without releasing"
-            t.adopt(ix.acquire(s.hashes[:L]))
         # always leave >= 1 cold token: the final logits must come from a
         # real forward pass (a fully cached prompt re-runs its last token,
         # copy-on-write duplicating the shared tail block)
-        cold = min(L * self.block_size, len(s.req.prompt) - 1)
+        cold = min(Lx * self.block_size, len(s.req.prompt) - 1)
         s.pos = cold
         s.pending = s.pending[cold:]
         self.prefix_hits += 1
@@ -924,13 +994,194 @@ class PagedPipelineBatcher(SlotEngine):
     def _register_prefix(self, i: int, s: _Slot) -> None:
         """Index the prompt's full blocks so later prompts can alias them
         (the index takes its own reference; entries already present keep
-        their canonical block)."""
+        their canonical block). Registration supersedes any host-tier copy
+        (one-tier invariant) and publishes device residency to the cluster
+        directory."""
         if not self.prefix_caching or not s.hashes:
             return
-        for tabs, ix in zip(self._tables, self._prefix):
+        for tabs, ix, host in zip(self._tables, self._prefix, self._host):
             if tabs is None or ix is None:
                 continue
             ix.register(s.hashes, tabs[i].blocks[:len(s.hashes)])
+            if host is not None:
+                for h in s.hashes:
+                    host.discard(h)
+        if self.cluster_dir is not None:
+            for h in s.hashes:
+                self.cluster_dir.publish(h, self.replica_id, "device")
+
+    # ---- tiered pages: host spill pool + cluster prefix directory ---------
+    @property
+    def _tiered(self) -> bool:
+        return (any(hp is not None for hp in self._host)
+                or self.cluster_dir is not None)
+
+    def _make_spill(self, si: int):
+        """Demotion closure for stage si's PrefixIndex: an evicted prefix
+        block's page payload moves device -> host instead of vanishing."""
+        host = self._host[si]
+
+        def spill(h: int, bid: int) -> None:
+            if self.pipeline.paged_caches is None:
+                return             # nothing ever materialized on device
+            host.put(h, self.pipeline.extract_stage_pages(si, [bid]))
+            self.host_demotions += 1
+            self._iter_swap_blocks += 1
+            if si == self._rep_stage and self.cluster_dir is not None:
+                self.cluster_dir.publish(h, self.replica_id, "host")
+        return spill
+
+    def _make_host_drop(self, si: int):
+        """LRU-bound closure for stage si's HostPagePool: the page has now
+        left this replica entirely (bottom of the hierarchy)."""
+        def dropped(h: int) -> None:
+            self.host_evictions += 1
+            if si == self._rep_stage and self.cluster_dir is not None:
+                self.cluster_dir.unpublish(h, self.replica_id)
+        return dropped
+
+    def attach_cluster(self, directory, peers: Dict[int, object],
+                       link: Optional[KVLink]) -> None:
+        """Join a cluster prefix directory (cluster_kv.wire_cluster_prefix):
+        publish this replica's residency and fetch hot prefixes from
+        `peers` (replica_id -> engine) over `link`."""
+        assert self.prefix_caching, \
+            "cluster prefix sharing needs prefix_caching=True"
+        self.cluster_dir = directory
+        self.cluster_link = link if link is not None else KVLink()
+        self._cluster_peers = {rid: w for rid, w in peers.items()
+                               if rid != self.replica_id}
+
+    def export_prefix_block(self, h: int):
+        """Package chain hash `h`'s page payload for a peer replica —
+        global layer order, the ``KVMigration`` wire format — sourcing
+        each stage from its device index or host tier (a COPY ships;
+        local residency is untouched). None when some stage no longer
+        holds the page (the caller unpublishes the stale directory
+        entry and prefills cold)."""
+        if self.pipeline.paged_caches is None:
+            return None
+        layer_kv: List[dict] = []
+        for si, (pool, ix, host) in enumerate(
+                zip(self._pools, self._prefix, self._host)):
+            if pool is None or ix is None:
+                return None        # non-attention stage: nothing to export
+            bid = ix.lookup(h)
+            if bid is not None:
+                layer_kv.extend(self.pipeline.extract_stage_pages(si, [bid]))
+                continue
+            payload = host.peek(h) if host is not None else None
+            if payload is None:
+                return None
+            layer_kv.extend(payload)
+        return layer_kv
+
+    def _materialize_hash(self, i: int, h: int) -> bool:
+        """Make chain hash `h` device-resident, registered, and aliased
+        into slot i's tables in EVERY attention stage. Per stage the
+        source is the device index (plain alias), this replica's host
+        tier (swap-in: the payload scatters into a fresh block), or a
+        peer replica named by the cluster directory (hot-prefix migration
+        in the KVMigration wire format, charged at KVLink delay on the
+        serving clock). False when some stage holds the page nowhere
+        reachable or a pool stays dry even after eviction — the caller
+        stops extending and prefills the remainder cold."""
+        plan: List = []            # (si, "device" | "host" | "fetch")
+        need_fetch = False
+        for si, (pool, ix, host) in enumerate(
+                zip(self._pools, self._prefix, self._host)):
+            if pool is None or ix is None:
+                continue
+            if ix.lookup(h) is not None:
+                plan.append((si, "device"))
+            elif host is not None and h in host:
+                plan.append((si, "host"))
+            else:
+                plan.append((si, "fetch"))
+                need_fetch = True
+        if not plan:
+            return False
+        layer_kv, src_rid = None, None
+        if need_fetch:
+            if self.cluster_dir is None:
+                return False
+            for rid, _tier in self.cluster_dir.holders(
+                    h, exclude=self.replica_id):
+                peer = self._cluster_peers.get(rid)
+                if peer is None:
+                    continue
+                layer_kv = peer.export_prefix_block(h)
+                if layer_kv is not None:
+                    src_rid = rid
+                    break
+                self.cluster_dir.unpublish(h, rid)   # stale entry
+            if layer_kv is None:
+                return False
+        # pop host payloads BEFORE allocating: allocation may evict-demote
+        # other blocks into the host pool, and the LRU drop absorbing them
+        # must never take the very payload being promoted
+        payloads = {}
+        for si, kind in plan:
+            if kind == "host":
+                payloads[si] = self._host[si].get(h)
+                assert payloads[si] is not None, "planned host page vanished"
+        alloc: Dict[int, int] = {}
+        for si, kind in plan:
+            if kind == "device":
+                continue
+            pool, ix = self._pools[si], self._prefix[si]
+            if pool.n_free < 1:
+                ix.evict(1)
+            got = pool.alloc(1)
+            if got is None:        # dry even after eviction: roll back
+                for sj, bid in alloc.items():
+                    self._pools[sj].free(bid)
+                for sj, payload in payloads.items():
+                    self._host[sj].restore(h, payload)
+                return False
+            alloc[si] = got[0]
+        # land the payloads
+        promoted = False
+        dest: List = [None] * len(self._tables)
+        for si, kind in plan:
+            if kind == "host":
+                self.pipeline.scatter_stage_pages(si, [alloc[si]],
+                                                  payloads[si])
+                promoted = True
+                self.host_promotions += 1
+                self._iter_swap_blocks += 1
+            elif kind == "fetch":
+                dest[si] = [alloc[si]]
+        if need_fetch:
+            # only the locally-missing stages' layer slices cross the link
+            self.pipeline.scatter_kv_pages(dest, layer_kv)
+            fetch_bytes, li = 0, 0
+            for si, st in enumerate(self.pipeline.stages):
+                n_layers = st.hi - st.lo
+                if dest[si] is not None:
+                    fetch_bytes += KVMigration.payload_bytes(
+                        layer_kv[li:li + n_layers])
+                li += n_layers
+            self.prefix_fetches += 1
+            self.prefix_fetched_bytes += fetch_bytes
+            self._iter_fetch_cost += self.cluster_link.delay(
+                fetch_bytes, src_rid, self.replica_id)
+        if promoted:
+            self.host_hit_tokens += self.block_size
+        # register + alias: the index takes its own reference, the table
+        # takes over the allocation's — refcount 2, exactly the prefill
+        # registration shape, so the new block is immune to eviction while
+        # deeper hashes of this very chain materialize
+        for si, kind in plan:
+            ix, t = self._prefix[si], self._tables[si][i]
+            if kind == "device":
+                t.adopt(ix.acquire([h]))
+            else:
+                ix.register([h], [alloc[si]])
+                t.adopt([alloc[si]])
+        if self.cluster_dir is not None:
+            self.cluster_dir.publish(h, self.replica_id, "device")
+        return True
 
     def _ensure_blocks(self, i: int) -> bool:
         # decode writes at pos: grow to hold it AND copy-on-write if the
@@ -1089,6 +1340,8 @@ class PagedPipelineBatcher(SlotEngine):
     def run_iteration(self, now: float):
         self._iter_prefill_tokens = 0
         self._iter_spec_proposed = 0
+        self._iter_swap_blocks = 0
+        self._iter_fetch_cost = 0.0
         # land arrived migrations BEFORE the base iteration so their slots
         # join this very decode step (mirrors colocated serving, where a
         # prefill finishing in iteration i decodes its first token in i)
@@ -1105,6 +1358,15 @@ class PagedPipelineBatcher(SlotEngine):
                 and self.spec.draft_token_cost:
             cost += (self.virtual_step_cost * self.spec.draft_token_cost
                      * self._iter_spec_proposed)
+        # ... and every block crossing the device<->host boundary its swap
+        # cost, plus cluster prefix fetches their modeled link delay — the
+        # tiers are only a win when the swap is cheaper than the recompute
+        # it replaces, and the clock must be able to say so
+        if self._iter_swap_blocks and self.host_swap_cost:
+            cost += (self.virtual_step_cost * self.host_swap_cost
+                     * self._iter_swap_blocks)
+        if self._iter_fetch_cost:
+            cost += self._iter_fetch_cost
         return mig_comps + comps, cost
 
     def _decode_all(self, toks, pos):

@@ -51,7 +51,19 @@ class InferenceEngine:
     overrides PER REPLICA (the scheduler's ``SearchResult.kv_dtypes``;
     None entry = model default); ``kv_guard_layers`` pins those global
     layer indices at model precision (quality guard, typically the
-    first/last layers). Needs the paged layout."""
+    first/last layers). Needs the paged layout.
+
+    ``host_blocks`` (one int, or per replica — the scheduler's
+    ``SearchResult.host_blocks``) adds a host-memory page tier under each
+    replica's device pools: prefix eviction demotes pages there instead
+    of deleting them, and matches swap them back in at ``host_swap_cost``
+    per block on the serving clock. ``cluster_prefix=True`` joins every
+    replica into a shared prefix directory (serving.cluster_kv): prompts
+    whose prefix lives only on a peer fetch the pages over the KV link,
+    and the Router scores admission by resident prefix
+    (``prefix_route_weight`` / ``host_route_weight``) against queue
+    depth instead of pure least-loaded; ``route_seed`` makes tiebreaks
+    seeded-random for routing benchmarks. Both need prefix_caching."""
 
     def __init__(self, cfg: ModelConfig, assignment: Assignment, *,
                  params=None, key=None, devices: Optional[Sequence] = None,
@@ -60,6 +72,11 @@ class InferenceEngine:
                  max_len: int = 256, cache_layout: str = "contiguous",
                  block_size: int = 16, stage_blocks=None,
                  prefix_caching: bool = False, prefill_chunk: int = 0,
+                 host_blocks=0, host_swap_cost: float = 0.0,
+                 cluster_prefix: bool = False,
+                 prefix_route_weight: float = 0.25,
+                 host_route_weight: float = 0.5,
+                 route_seed: Optional[int] = None,
                  disaggregate: bool = False,
                  roles: Optional[Sequence[str]] = None,
                  kv_link_gbps: float = 0.0, cluster=None,
@@ -161,7 +178,8 @@ class InferenceEngine:
                 spec = SpecConfig(k=spec_k,
                                   draft_token_cost=spec_draft_token_cost)
         kv_link = None
-        if roles is not None and any(r != "both" for r in roles):
+        if (roles is not None and any(r != "both" for r in roles)) \
+                or cluster_prefix:
             if cluster is not None:
                 # per-pair alpha-beta costs: source replica's LAST stage to
                 # destination replica's FIRST stage, like the cost model's
@@ -182,6 +200,12 @@ class InferenceEngine:
                              stage_blocks=stage_blocks,
                              prefix_caching=prefix_caching,
                              prefill_chunk=prefill_chunk,
+                             host_blocks=host_blocks,
+                             host_swap_cost=host_swap_cost,
+                             cluster_prefix=cluster_prefix,
+                             prefix_route_weight=prefix_route_weight,
+                             host_route_weight=host_route_weight,
+                             route_seed=route_seed,
                              roles=roles, kv_link=kv_link,
                              step_costs=step_costs,
                              prefill_token_cost=prefill_token_cost,

@@ -116,6 +116,14 @@ class ServeStats:
     # quantized KV pages (PagedPipelineBatcher with kv_dtype="int8"/"fp8")
     kv_bytes_resident: int = 0     # allocated page-pool bytes (+ scales)
     kv_bytes_saved: int = 0        # bytes saved vs model-default pools
+    # host page tier (PagedPipelineBatcher with host_blocks > 0)
+    host_demotions: int = 0        # blocks spilled device -> host on evict
+    host_promotions: int = 0       # blocks swapped back host -> device
+    host_evictions: int = 0        # host-tier LRU drops (pages truly lost)
+    host_hit_tokens: int = 0       # prompt tokens served from the host tier
+    # cluster prefix directory (serving.cluster_kv)
+    prefix_fetches: int = 0        # prefix blocks migrated from peer replicas
+    prefix_fetched_bytes: int = 0  # payload bytes shipped for those fetches
 
     def summary(self) -> str:
         lat = np.asarray(self.latencies)
@@ -142,6 +150,13 @@ class ServeStats:
         if self.kv_bytes_saved:
             extra += (f" kv={self.kv_bytes_resident / 1e6:.2f}MB "
                       f"(-{self.kv_bytes_saved / 1e6:.2f}MB)")
+        if self.host_demotions or self.host_promotions:
+            extra += (f" host={self.host_promotions}in/"
+                      f"{self.host_demotions}out "
+                      f"({self.host_hit_tokens}tok)")
+        if self.prefix_fetches:
+            extra += (f" fetch={self.prefix_fetches} "
+                      f"({self.prefix_fetched_bytes / 1e6:.2f}MB)")
         return (f"n={len(lat)} {pct}"
                 f"slo={self.attainment * 100:.1f}% thpt={self.throughput:.2f} req/s "
                 f"rej={self.rejected} drop={self.dropped} "
@@ -178,24 +193,30 @@ class ServeStats:
 # ---------------------------------------------------------------------------
 
 def run_serve_loop(workers: Sequence, requests: Sequence, *, deadline: float,
-                   clock=None) -> ServeStats:
+                   clock=None, dispatch=None) -> ServeStats:
     """Replay a timed workload over `workers` and account the outcome.
 
     Mutates each request in place (`start_time`, `finish_time`, `output`)
-    and returns the ServeStats. Dispatch is iteration-level least-loaded:
-    every request is routed individually when it becomes due, not glued to
-    whatever batch happened to be forming.
+    and returns the ServeStats. Dispatch is iteration-level least-loaded
+    with a DETERMINISTIC tiebreak (lowest replica id, falling back to
+    worker order) so identical workloads route identically run-to-run;
+    ``dispatch(cands, req, now) -> worker`` overrides the choice entirely
+    (the Router's prefix-aware scoring, seeded tiebreaks).
     """
     clock = clock if clock is not None else WallClock()
     pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
     idx = 0
     iterations = 0
+    wid = {id(w): getattr(w, "replica_id", i)
+           for i, w in enumerate(workers)}
     # workers persist across serve() calls: report this replay's deltas
     counters = ("rejected", "preemptions", "prefix_lookups", "prefix_hits",
                 "prefix_hit_tokens", "prefill_tokens", "cow_copies",
                 "migrations", "migrated_kv_bytes", "spec_steps",
                 "spec_proposed", "spec_accepted", "spec_tokens",
-                "kv_bytes_resident", "kv_bytes_saved")
+                "kv_bytes_resident", "kv_bytes_saved",
+                "host_demotions", "host_promotions", "host_evictions",
+                "host_hit_tokens", "prefix_fetches", "prefix_fetched_bytes")
     base = {c: sum(getattr(w, c, 0) for w in workers) for c in counters}
     while idx < len(pending) or any(w.inflight() for w in workers):
         now = clock.now()
@@ -206,8 +227,11 @@ def run_serve_loop(workers: Sequence, requests: Sequence, *, deadline: float,
             cands = [w for w in workers if w.capacity(now) > 0]
             if not cands:
                 break
-            w = min(cands, key=lambda c: c.load(now))
             req = pending[idx]
+            if dispatch is not None:
+                w = dispatch(cands, req, now)
+            else:
+                w = min(cands, key=lambda c: (c.load(now), wid[id(c)]))
             req.start_time = now
             w.admit([req], now)
             idx += 1

@@ -569,12 +569,18 @@ class AsymmetricPipeline:
         """Migrate-in: write per-layer page payloads (extract_kv_pages wire
         format, possibly from a pipeline with a DIFFERENT stage split) into
         this pipeline's pools at each stage's freshly allocated block list.
-        Jitted with donation per stage so the pools update in place; one
-        compile per distinct payload block count."""
+        A ``None`` entry in ``stage_blocks`` SKIPS that stage (its layers'
+        payload slices are discarded) — a cluster prefix fetch lands only
+        in the stages that miss locally. Jitted with donation per stage so
+        the pools update in place; one compile per distinct payload block
+        count."""
         assert self.paged_caches is not None, "call init_paged_caches first"
         li = 0
         for si, st in enumerate(self.stages):
             n_layers = st.hi - st.lo
+            if stage_blocks[si] is None:
+                li += n_layers
+                continue
             payload = [
                 {n: jnp.asarray(a) for n, a in layer_kv[li + k].items()}
                 for k in range(n_layers)]
@@ -584,6 +590,41 @@ class AsymmetricPipeline:
                     self.paged_caches[si],
                     jnp.asarray(stage_blocks[si], jnp.int32), payload)
         assert li == len(layer_kv), (li, len(layer_kv))
+
+    # ---- host page tier (device <-> host demotion/promotion) ---------------
+    def extract_stage_pages(self, stage_idx: int, blocks: Sequence[int]
+                            ) -> List[dict]:
+        """Gather stage `stage_idx`'s page contents for `blocks` into host
+        arrays — one ``{"k","v"[,"k_scale","v_scale"]}`` pytree per layer
+        OF THIS STAGE, at pool precision (quantized pages spill narrow).
+        The single-stage slice of ``extract_kv_pages``: host-tier demotion
+        is per stage because each stage's pool fills and evicts on its own
+        clock."""
+        assert self.paged_caches is not None, "no paged caches to extract"
+        bl = np.asarray(blocks, np.int32)
+        payload: List[dict] = []
+        for c in self.paged_caches[stage_idx]:
+            assert "k" in c and "v" in c, \
+                "host page tier covers attention-only stacks"
+            lkv = {"k": np.asarray(c["k"][bl]), "v": np.asarray(c["v"][bl])}
+            for n in ("k_scale", "v_scale"):
+                if n in c:
+                    lkv[n] = np.asarray(c[n][bl])
+            payload.append(lkv)
+        return payload
+
+    def scatter_stage_pages(self, stage_idx: int, blocks: Sequence[int],
+                            payload: Sequence[dict]) -> None:
+        """Write ``extract_stage_pages`` payloads back into stage
+        `stage_idx`'s pools at `blocks` — host -> device promotion. The
+        payload re-lands verbatim (same pool precision it spilled at)."""
+        assert self.paged_caches is not None, "call init_paged_caches first"
+        st = self.stages[stage_idx]
+        jp = [{n: jnp.asarray(a) for n, a in lkv.items()} for lkv in payload]
+        with st.mesh:
+            self.paged_caches[stage_idx] = st._scatter_pages_jit(
+                self.paged_caches[stage_idx],
+                jnp.asarray(blocks, jnp.int32), jp)
 
     def copy_pages(self, stage_idx: int, src_blocks: Sequence[int],
                    dst_blocks: Sequence[int]) -> None:

@@ -16,6 +16,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.serving.block_manager import chunk_hashes
 from repro.serving.continuous import PagedPipelineBatcher, PipelineBatcher
 from repro.serving.disagg import KVLink, wire_disaggregation
 from repro.serving.loop import ServeStats, WallClock, run_serve_loop
@@ -126,6 +127,11 @@ class Router:
                  max_len: int = 256, cache_layout: str = "contiguous",
                  block_size: int = 16, stage_blocks=None,
                  prefix_caching: bool = False, prefill_chunk: int = 0,
+                 host_blocks=0, host_swap_cost: float = 0.0,
+                 cluster_prefix: bool = False,
+                 prefix_route_weight: float = 0.25,
+                 host_route_weight: float = 0.5,
+                 route_seed: Optional[int] = None,
                  roles: Optional[Sequence[str]] = None,
                  kv_link: Optional[KVLink] = None,
                  prefill_token_cost: float = 0.0,
@@ -140,6 +146,7 @@ class Router:
         self.replicas = list(replicas)
         self.policy = policy
         self.cache_layout = cache_layout
+        self.block_size = block_size
         # speculative decoding: a SpecConfig shared by every replica, with
         # optional PER-REPLICA depths (the scheduler's acceptance-aware
         # spec_ks — 0 disables speculation on that replica)
@@ -168,6 +175,26 @@ class Router:
                 "with cache_layout='paged' (block-granular aliasing); "
                 "serving without them", stacklevel=2)
             prefix_caching, prefill_chunk = False, 0
+        # host page tier + cluster prefix directory: both are keyed by
+        # prefix chunk hashes, so both need the prefix index. host_blocks
+        # is one capacity for every replica or a per-replica sequence (the
+        # scheduler's SearchResult.host_blocks — big host pools belong
+        # next to small device pools).
+        if host_blocks is None:
+            host_blocks = 0
+        if np.ndim(host_blocks) == 0:
+            host_blocks = [int(host_blocks)] * len(self.replicas)
+        else:
+            host_blocks = [int(b) for b in host_blocks]
+            assert len(host_blocks) == len(self.replicas), (host_blocks,)
+        if (any(host_blocks) or cluster_prefix) and not prefix_caching:
+            warnings.warn(
+                "host_blocks / cluster_prefix need prefix_caching=True "
+                "(the page tiers and the directory are keyed by prefix "
+                "chunk hashes); serving without them", stacklevel=2)
+            host_blocks = [0] * len(self.replicas)
+            cluster_prefix = False
+        self.host_blocks = host_blocks
         # quantized KV pages: ONE pool precision (`kv_dtype`) or the
         # scheduler's PER-REPLICA choices (`kv_dtypes`, None entry = model
         # default). Only the paged continuous engine has page pools.
@@ -231,6 +258,7 @@ class Router:
                 block_size=block_size, stage_blocks=stage_blocks,
                 prefix_caching=prefix_caching, prefill_chunk=prefill_chunk,
                 prefill_token_cost=prefill_token_cost,
+                host_blocks=host_blocks[i], host_swap_cost=host_swap_cost,
                 virtual_step_cost=sc, role=role, replica_id=i,
                 spec=replica_spec(i), kv_dtype=replica_kv_dtype(i),
                 kv_guard_layers=kv_guard_layers)
@@ -256,10 +284,53 @@ class Router:
                                           virtual_step_cost=sc)
                             for r, sc in zip(self.replicas, step_costs)]
             self.dispatcher = None
+        # every worker carries its replica id (deterministic least-loaded
+        # tiebreaks, dispatcher targeting, directory residency keys)
+        for i, w in enumerate(self.workers):
+            w.replica_id = i
+        # ---- cluster prefix directory + prefix-aware routing ------------
+        self.cluster_dir = None
+        if cluster_prefix:
+            from repro.serving.cluster_kv import wire_cluster_prefix
+            self.cluster_dir = wire_cluster_prefix(self.workers,
+                                                   link=kv_link)
+        self.prefix_route_weight = prefix_route_weight
+        self.host_route_weight = host_route_weight
+        self._route_rng = (np.random.RandomState(route_seed)
+                           if route_seed is not None else None)
+
+    # ---- admission dispatch (serving.loop hook) --------------------------
+    def _route_key(self, w, now: float):
+        # deterministic tiebreak by replica id, or a seeded draw when the
+        # caller wants reproducible-but-shuffled routing benchmarks
+        tie = (self._route_rng.random() if self._route_rng is not None
+               else getattr(w, "replica_id", 0))
+        return w.load(now), tie
+
+    def _dispatch(self, cands, req: Request, now: float):
+        """Admission choice: least-loaded, minus a prefix-affinity bonus
+        when the cluster directory knows a candidate already holds the
+        prompt's head. Device-resident blocks count full (an alias costs
+        nothing), host-resident ones at ``host_route_weight`` (a swap-in
+        is cheaper than recompute but dearer than an alias), and the
+        bonus is scaled by ``prefix_route_weight`` into queue-depth
+        units — so a deep queue still beats a marginal prefix hit."""
+        if self.cluster_dir is None or self.prefix_route_weight <= 0:
+            return min(cands, key=lambda w: self._route_key(w, now))
+        hashes = chunk_hashes(req.prompt, self.block_size)
+
+        def key(w):
+            load, tie = self._route_key(w, now)
+            ndev, nhost = self.cluster_dir.resident_blocks(
+                hashes, getattr(w, "replica_id", -1))
+            bonus = ndev + self.host_route_weight * nhost
+            return (load - self.prefix_route_weight * bonus, tie)
+        return min(cands, key=key)
 
     def serve(self, requests: Sequence[Request], deadline: float, *,
               clock=None) -> ServeStats:
         """Replays a timed workload; wall-clock by default, or any Clock
         (e.g. VirtualClock for deterministic replay)."""
         return run_serve_loop(self.workers, requests, deadline=deadline,
-                              clock=clock if clock is not None else WallClock())
+                              clock=clock if clock is not None else WallClock(),
+                              dispatch=self._dispatch)

@@ -71,10 +71,12 @@ def test_prefix_index_match_acquire_register_evict():
     t2.release()
     assert pool.n_free == 4 and ix.n_evictable() == 3
     assert ix.match_len(hs) == 3                        # cache survived
-    # pool pressure evicts LRU-first and unmaps
+    # pool pressure evicts LRU-first and unmaps — a registered chain is
+    # touched head-most-recent, so eviction peels it from the TAIL and
+    # the head stays matchable (chained-hash matches are head-first)
     assert ix.evict(2) == 2
     assert pool.n_free == 6
-    assert ix.match_len(hs) == 0                        # head chunk evicted
+    assert ix.match_len(hs) == 1                        # head chunk survives
     ix.clear()
     assert pool.n_free == 7 and len(ix) == 0
 
