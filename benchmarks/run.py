@@ -55,9 +55,18 @@ def main() -> None:
         errors = validate_results()
         for e in errors:
             print(f"results check: {e}", file=sys.stderr)
-        if errors:
+        # the kernel/oracle registry is part of the results contract: a
+        # benchmark row for an unregistered (hence unverified) kernel is
+        # as untrustworthy as a malformed one
+        from repro.analysis.registry import KERNEL_ORACLES, check_registry
+        problems = check_registry()
+        for p in problems:
+            print(f"oracle registry: {p}", file=sys.stderr)
+        if errors or problems:
             sys.exit(1)
         print("results check: all rows conform")
+        print(f"oracle registry: {len(KERNEL_ORACLES)} kernels all have "
+              "oracles + interpret-mode CI checks")
         print(f"trajectory: {write_trajectory()}")
         return
     names = args.only.split(",") if args.only else list(SUITES)

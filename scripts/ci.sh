@@ -1,16 +1,19 @@
 #!/usr/bin/env bash
 # Tiered CI entry point (run by .github/workflows/ci.yml, and locally):
 #
-#   scripts/ci.sh --fast   fast gate: pytest -m "not slow" + interpret-mode
-#                          kernel smoke (decode/context/verify) + the
-#                          spec==greedy smoke + the quantized-KV smoke
-#                          (fused-dequant kernels + int8-pool serving) +
-#                          the tiered cluster-prefix smoke
+#   scripts/ci.sh --fast   fast gate: repro-lint + pytest -m "not slow" +
+#                          interpret-mode kernel smoke (decode/context/
+#                          verify) + the spec==greedy smoke + the
+#                          quantized-KV smoke (fused-dequant kernels +
+#                          int8-pool serving) + the tiered cluster-prefix
+#                          smoke + the KVSAN serving smoke
 #                          (~5 min on a laptop CPU)
 #   scripts/ci.sh --full   everything: full pytest (incl. @slow multi-device
 #                          subprocess sweeps), every serving smoke on 4
 #                          virtual devices (continuous/paged/prefix/disagg/
-#                          spec), and the benchmark-results schema guard
+#                          spec) plus the whole set again under the KVSAN
+#                          lifecycle sanitizer, and the benchmark-results +
+#                          oracle-registry schema guard
 #
 # No flag defaults to --full (the historical behavior). The smokes
 # themselves live in scripts/smoke_serving.py so humans can run or debug
@@ -24,6 +27,11 @@ case "$TIER" in
   --fast|--full) ;;
   *) echo "usage: $0 [--fast|--full]" >&2; exit 2 ;;
 esac
+
+echo "=== repro-lint (repo-specific static analysis) ==="
+# pure-AST pass: clock discipline, jit-retrace hazards, kernel/oracle
+# registry coverage, refcount pairing, hygiene — seconds, so every tier
+python -m repro.analysis.lint src
 
 if [[ "$TIER" == "--fast" ]]; then
   echo "=== tier-1 pytest (fast: -m 'not slow') ==="
@@ -56,11 +64,24 @@ echo "=== tiered cluster-prefix smoke (2 replicas, 4 virtual devices) ==="
 # stay token-identical to cold paged serving in every tier
 python scripts/smoke_serving.py cluster
 
+if [[ "$TIER" == "--fast" ]]; then
+  echo "=== KVSAN serving smoke (page-lifecycle sanitizer) ==="
+  # the paged + prefix suites again under KVSAN: every alloc/write/COW/
+  # spill/free shadowed, zero leaks, tokens identical to the baselines
+  # the suites already compare against
+  python scripts/smoke_serving.py serving prefix --kvsan
+fi
+
 if [[ "$TIER" == "--full" ]]; then
   echo "=== serving smokes (4 virtual devices) ==="
   python scripts/smoke_serving.py serving prefix disagg
 
-  echo "=== benchmark results schema guard ==="
+  echo "=== KVSAN serving smokes (page-lifecycle sanitizer) ==="
+  # every serving suite again with the sanitizer shadowing the pools
+  python scripts/smoke_serving.py serving prefix disagg cluster spec quant \
+    --kvsan
+
+  echo "=== benchmark results + oracle registry schema guard ==="
   python -m benchmarks.run --check
 fi
 

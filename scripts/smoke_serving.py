@@ -51,6 +51,7 @@ import jax                                              # noqa: E402
 import numpy as np                                      # noqa: E402
 
 T0 = time.monotonic()
+KVSAN = False     # --kvsan: serve every suite under the lifecycle sanitizer
 
 
 def _ok(msg: str) -> None:
@@ -121,8 +122,20 @@ def _setup():
 
 def _engine(cfg, asg, **kw):
     from repro.serving.engine import InferenceEngine
-    return InferenceEngine(cfg, asg, key=jax.random.PRNGKey(0),
-                           policy="continuous", n_slots=4, max_len=48, **kw)
+    kw.setdefault("kvsan", KVSAN)
+    eng = InferenceEngine(cfg, asg, key=jax.random.PRNGKey(0),
+                          policy="continuous", n_slots=4, max_len=48, **kw)
+    if kw["kvsan"]:
+        # under --kvsan every serve must come back leak-free; violations
+        # raise KVSanViolation mid-serve on their own
+        inner = eng.serve
+
+        def serve(reqs, **skw):
+            stats = inner(reqs, **skw)
+            assert stats.kvsan_leaks == 0, stats.summary()
+            return stats
+        eng.serve = serve
+    return eng
 
 
 def suite_serving() -> None:
@@ -396,11 +409,20 @@ def main() -> None:
     ap.add_argument("suites", nargs="*", default=[],
                     choices=[*SUITES, []],
                     help="suites to run (default: all)")
+    ap.add_argument("--kvsan", action="store_true",
+                    help="serve every suite under the KVSAN page-lifecycle "
+                         "sanitizer (repro.analysis.kvsan): violations "
+                         "raise, leaks fail the suite, tokens must be "
+                         "identical to the sanitizer-off baselines the "
+                         "suites already compare against")
     args = ap.parse_args()
+    global KVSAN
+    KVSAN = args.kvsan
     names = args.suites or list(SUITES)
     for name in names:
         SUITES[name]()
-    print(f"smoke_serving: {', '.join(names)} all OK "
+    tag = " [kvsan]" if KVSAN else ""
+    print(f"smoke_serving: {', '.join(names)} all OK{tag} "
           f"({time.monotonic() - T0:.1f}s)")
 
 

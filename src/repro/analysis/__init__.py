@@ -1,0 +1,24 @@
+"""Repo-specific static analysis + runtime sanitizers.
+
+Seven PRs of serving features (paged KV, COW prefix caching, speculative
+rollback, quantized pages, host-tier spill, cluster prefix fetch) all rest
+on hand-maintained invariants: refcount conservation, one-tier-at-a-time
+residency, virtual-clock determinism, kernel/oracle bitwise parity. This
+package machine-checks them on every commit instead of rediscovering them
+per PR:
+
+  * ``repro.analysis.lint``     — AST-based static pass with repo-specific
+    rules (``python -m repro.analysis.lint src/``); findings print as
+    ``file:line rule-id message`` and ``# repro: noqa[rule-id]``
+    suppresses a line. Rule catalog: docs/analysis.md.
+  * ``repro.analysis.registry`` — the machine-readable kernel/oracle
+    registry the ``kernel-oracle`` rule and ``benchmarks/run.py --check``
+    both enforce: every ``*_pallas`` kernel must name its pure-JAX oracle
+    and an interpret-mode CI check.
+  * ``repro.analysis.kvsan``    — KVSAN, an opt-in runtime sanitizer
+    (``PagedPipelineBatcher(kvsan=True)`` / ``launch.serve --kvsan``)
+    shadowing every KV page's lifecycle (alloc -> write -> COW-alias ->
+    spill -> promote -> migrate -> free) in a pure-Python model; serving
+    under KVSAN is token-identical, leaks surface as
+    ``ServeStats.kvsan_leaks``.
+"""

@@ -1,0 +1,163 @@
+"""Machine-readable kernel/oracle registry.
+
+Every Pallas kernel in the repo (a top-level ``*_pallas`` function in one
+of ``KERNEL_MODULES``) must be registered here with:
+
+  * ``oracle``          — the pure-JAX reference implementation in
+    ``kernels/ref.py`` the kernel is validated against (the repo's
+    correctness bar is bitwise/tolerance parity with these oracles);
+  * ``interpret_check`` — where CI runs the kernel in Pallas interpret
+    mode against that oracle: ``"smoke:<suite>"`` (a suite of
+    ``scripts/smoke_serving.py``) or ``"pytest:<path>"`` (a test file
+    that calls the kernel with ``interpret=True``).
+
+Two enforcement points read this table, so an unregistered or unchecked
+kernel cannot ship:
+
+  * the ``kernel-oracle`` lint rule (``repro.analysis.lint``) flags any
+    ``*_pallas`` definition missing from the registry, and
+    ``check_registry`` findings when the registry itself is stale;
+  * ``benchmarks/run.py --check`` runs ``check_registry`` alongside the
+    results-schema guard.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Dict, List, Optional, Tuple
+
+# repo-relative module paths the kernel scan covers
+KERNEL_MODULES = (
+    "src/repro/kernels/paged_attention.py",
+    "src/repro/kernels/flash_attention.py",
+    "src/repro/kernels/ssm_scan.py",
+    "src/repro/kernels/decode_attention.py",
+)
+ORACLE_MODULE = "src/repro/kernels/ref.py"
+
+# kernel name -> (oracle in ref.py, interpret-mode CI check)
+KERNEL_ORACLES: Dict[str, Dict[str, str]] = {
+    "paged_decode_attention_pallas": {
+        "oracle": "paged_decode_attention_ref",
+        "interpret_check": "smoke:kernels",
+    },
+    "paged_decode_attention_quant_pallas": {
+        "oracle": "paged_decode_attention_quant_ref",
+        "interpret_check": "smoke:quant",
+    },
+    "paged_context_attention_pallas": {
+        "oracle": "paged_context_attention_ref",
+        "interpret_check": "smoke:kernels",
+    },
+    "paged_context_attention_quant_pallas": {
+        "oracle": "paged_context_attention_quant_ref",
+        "interpret_check": "smoke:quant",
+    },
+    "paged_verify_attention_pallas": {
+        "oracle": "paged_verify_attention_ref",
+        "interpret_check": "smoke:kernels",
+    },
+    "paged_verify_attention_quant_pallas": {
+        "oracle": "paged_verify_attention_quant_ref",
+        "interpret_check": "smoke:quant",
+    },
+    "flash_attention_pallas": {
+        "oracle": "attention_ref",
+        "interpret_check": "pytest:tests/test_kernels.py",
+    },
+    "ssm_scan_pallas": {
+        "oracle": "ssm_scan_ref",
+        "interpret_check": "pytest:tests/test_kernels.py",
+    },
+    "decode_attention_pallas": {
+        "oracle": "decode_attention_ref",
+        "interpret_check": "pytest:tests/test_paged.py",
+    },
+}
+
+
+def repo_root() -> str:
+    """The checkout root (this file lives at src/repro/analysis/)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+def _top_level_defs(path: str) -> List[Tuple[str, int]]:
+    with open(path, encoding="utf-8") as f:
+        tree = ast.parse(f.read(), filename=path)
+    return [(n.name, n.lineno) for n in tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+
+
+def pallas_kernels(root: Optional[str] = None
+                   ) -> Dict[str, Tuple[str, int]]:
+    """Scan ``KERNEL_MODULES`` for top-level ``*_pallas`` definitions;
+    returns {kernel name: (repo-relative path, line)}."""
+    root = root if root is not None else repo_root()
+    found: Dict[str, Tuple[str, int]] = {}
+    for rel in KERNEL_MODULES:
+        path = os.path.join(root, rel)
+        if not os.path.exists(path):
+            continue
+        for name, line in _top_level_defs(path):
+            if name.endswith("_pallas"):
+                found[name] = (rel, line)
+    return found
+
+
+def check_registry(root: Optional[str] = None) -> List[str]:
+    """Validate the registry against the tree. Returns human-readable
+    problems (empty = sound): unregistered kernels, stale entries,
+    missing oracles, dangling interpret checks."""
+    root = root if root is not None else repo_root()
+    problems: List[str] = []
+    kernels = pallas_kernels(root)
+    for name, (rel, line) in sorted(kernels.items()):
+        if name not in KERNEL_ORACLES:
+            problems.append(
+                f"{rel}:{line} kernel '{name}' has no registered oracle "
+                "(add it to repro.analysis.registry.KERNEL_ORACLES)")
+    oracle_path = os.path.join(root, ORACLE_MODULE)
+    oracles = {n for n, _ in _top_level_defs(oracle_path)} \
+        if os.path.exists(oracle_path) else set()
+    for name, entry in sorted(KERNEL_ORACLES.items()):
+        if name not in kernels:
+            problems.append(
+                f"registry entry '{name}' matches no *_pallas definition "
+                f"in {', '.join(KERNEL_MODULES)} (stale registry?)")
+        if entry["oracle"] not in oracles:
+            problems.append(
+                f"registry entry '{name}': oracle '{entry['oracle']}' "
+                f"not found in {ORACLE_MODULE}")
+        kind, _, target = entry["interpret_check"].partition(":")
+        if kind == "smoke":
+            smoke = os.path.join(root, "scripts", "smoke_serving.py")
+            ok = os.path.exists(smoke)
+            if ok:
+                with open(smoke, encoding="utf-8") as f:
+                    ok = re.search(rf"def suite_{re.escape(target)}\b",
+                                   f.read()) is not None
+            if not ok:
+                problems.append(
+                    f"registry entry '{name}': interpret check smoke "
+                    f"suite '{target}' not defined in "
+                    "scripts/smoke_serving.py")
+        elif kind == "pytest":
+            path = os.path.join(root, target)
+            if not os.path.exists(path):
+                problems.append(
+                    f"registry entry '{name}': interpret check file "
+                    f"{target} missing")
+            else:
+                with open(path, encoding="utf-8") as f:
+                    src = f.read()
+                if name not in src or "interpret" not in src:
+                    problems.append(
+                        f"registry entry '{name}': {target} never runs "
+                        f"'{name}' in interpret mode")
+        else:
+            problems.append(
+                f"registry entry '{name}': unknown interpret_check "
+                f"kind '{kind}'")
+    return problems

@@ -652,9 +652,11 @@ def search(cluster: Cluster, model: cm.ModelProfile, task: cm.Task, *,
         pop = list(init)
     mut = mutate if mutation == "hexgen" else mutate_random
 
-    t0 = time.monotonic()
+    # offline scheduler-search profiling, not serving-path time: the
+    # anytime-curve `history` records real search wall time by design
+    t0 = time.monotonic()             # repro: noqa[clock-discipline]
     scored = sorted(((ev.fitness(i), i) for i in pop), reverse=True)
-    history = [(time.monotonic() - t0, scored[0][0][0])]
+    history = [(time.monotonic() - t0, scored[0][0][0])]  # repro: noqa[clock-discipline]
     for _ in range(iters):
         # sample parents biased to the best
         parents = [i for _, i in scored[:max(2, pop_size // 2)]]
@@ -669,7 +671,7 @@ def search(cluster: Cluster, model: cm.ModelProfile, task: cm.Task, *,
         allc = {i for _, i in scored} | set(children)
         scored = sorted(((ev.fitness(i), i) for i in allc), reverse=True)
         scored = scored[:pop_size]
-        history.append((time.monotonic() - t0, scored[0][0][0]))
+        history.append((time.monotonic() - t0, scored[0][0][0]))  # repro: noqa[clock-discipline]
     best = scored[0][1]
     asg = ev.assignment(best)
     return SearchResult(assignment=asg, attainment=scored[0][0][0],

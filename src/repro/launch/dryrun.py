@@ -24,16 +24,18 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     from repro.launch import mesh as mesh_lib
     from repro.launch import roofline, specs
 
-    t0 = time.monotonic()
+    # offline compile benchmarking: lower/compile times ARE the wall-clock
+    # measurement this tool reports, nothing here is on the serving clock
+    t0 = time.monotonic()             # repro: noqa[clock-discipline]
     mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
     chips = mesh.devices.size
     fn, structs, shs, jkw, cfg = specs.build_dryrun(arch, shape_name, mesh,
                                                     multi_pod)
     jitted = jax.jit(fn, in_shardings=shs, **jkw)
     lowered = jitted.lower(*structs)
-    t_lower = time.monotonic() - t0
+    t_lower = time.monotonic() - t0   # repro: noqa[clock-discipline]
     compiled = lowered.compile()
-    t_compile = time.monotonic() - t0 - t_lower
+    t_compile = time.monotonic() - t0 - t_lower  # repro: noqa[clock-discipline]
 
     mem = {}
     try:

@@ -169,6 +169,14 @@ def main() -> None:
                          "at model precision under a quantized --kv-dtype "
                          "(quality guard: first/last layers are the "
                          "usual outliers)")
+    ap.add_argument("--kvsan", action="store_true",
+                    help="serve under the KVSAN page-lifecycle sanitizer "
+                         "(repro.analysis.kvsan): every block's "
+                         "alloc/write/alias/spill/free is shadow-checked "
+                         "and refcount leaks surface as "
+                         "ServeStats.kvsan_leaks; token streams are "
+                         "identical, iterations cost more host time. "
+                         "Needs --cache-layout paged")
     ap.add_argument("--spec-draft-cost", type=float, default=0.0,
                     help="modeled cost of one draft step: the scheduler "
                          "treats it as absolute seconds (> 0 makes slow "
@@ -303,7 +311,8 @@ def main() -> None:
                              kv_dtypes=(res.kv_dtypes
                                         if args.kv_dtype == "search"
                                         else None),
-                             kv_guard_layers=guard)
+                             kv_guard_layers=guard,
+                             kvsan=args.kvsan)
     if args.shared_prefix:
         reqs = shared_prefix_workload(
             rate=args.rate, duration=args.duration, vocab=cfg.vocab_size,

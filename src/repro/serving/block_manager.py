@@ -338,6 +338,11 @@ class PrefixIndex:
         """Blocks reclaimable right now (referenced only by the index)."""
         return self._evictable
 
+    def indexed_blocks(self) -> List[int]:
+        """Every block id the index currently holds a reference on
+        (KVSAN's refcount-conservation audit enumerates these)."""
+        return list(self._hash_of)
+
     def evict(self, n: int) -> int:
         """Free up to `n` evictable blocks, least-recently-used first;
         returns how many were freed (their pool slots are reusable)."""
@@ -457,6 +462,10 @@ class HostPagePool:
         was re-registered on device (one-tier invariant), the host copy
         no longer exists anywhere."""
         self._pages.pop(h, None)
+
+    def hashes(self) -> List[int]:
+        """Resident chain hashes, LRU order (KVSAN's tier audit)."""
+        return list(self._pages)
 
     def nbytes(self) -> int:
         return int(sum(a.nbytes for payload in self._pages.values()

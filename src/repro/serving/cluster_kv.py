@@ -78,6 +78,12 @@ class ClusterPrefixDirectory:
         out.sort(key=lambda rt: (TIERS.index(rt[1]), rt[0]))
         return out
 
+    def entries_for(self, replica: int) -> List[Tuple[int, str]]:
+        """Every (hash, tier) this replica has published — KVSAN audits
+        these against the replica's actual index / host-tier residency."""
+        return [(h, m[replica]) for h, m in self._res.items()
+                if replica in m]
+
     def resident_blocks(self, hashes: Sequence[int], replica: int
                         ) -> Tuple[int, int]:
         """(device_blocks, host_blocks) of the longest prefix of `hashes`

@@ -431,7 +431,8 @@ class PagedPipelineBatcher(SlotEngine):
                  role: str = "both", replica_id: int = 0,
                  spec: Optional[SpecConfig] = None,
                  kv_dtype: Optional[str] = None,
-                 kv_guard_layers: Sequence[int] = ()):
+                 kv_guard_layers: Sequence[int] = (),
+                 kvsan: bool = False):
         from repro.serving.pipeline import (context_mode_supported,
                                             slot_mode_supported)
         assert slot_mode_supported(pipeline.cfg), \
@@ -490,6 +491,22 @@ class PagedPipelineBatcher(SlotEngine):
             else:
                 self._pools.append(None)
                 self._tables.append(None)
+        # ---- KVSAN: opt-in page-lifecycle sanitizer --------------------
+        # (repro.analysis.kvsan) shadows every pool's alloc/incref/free,
+        # tracks kernel write/read coverage per block, and audits refcount
+        # conservation each iteration. Pure observation: token streams
+        # are identical with it on or off.
+        self.kvsan = bool(kvsan)
+        self.kvsan_leaks = 0
+        self._san = None
+        if self.kvsan:
+            from repro.analysis.kvsan import KVSanitizer
+            self._san = KVSanitizer(
+                quant=(self.kv_dtype is not None
+                       and Q.kv_is_quantized(self.kv_dtype)))
+            for si, p in enumerate(self._pools):
+                if p is not None:
+                    self._san.attach_pool(si, p)
         # typical next-request footprint for the capacity() port, learned
         # from admitted traffic (start at one block)
         self._need_sum = 0
@@ -530,6 +547,12 @@ class PagedPipelineBatcher(SlotEngine):
             if ix is not None and host is not None:
                 ix.spill = self._make_spill(si)
                 host.on_evict = self._make_host_drop(si)
+        if self._san is not None:
+            # after the on_evict wiring so the sanitizer's LRU-drop
+            # shadowing chains onto (not replaces) the directory hook
+            for si, host in enumerate(self._host):
+                if host is not None:
+                    self._san.attach_host(si, host)
         # ---- cluster prefix directory (attach_cluster wires these) -----
         self.cluster_dir = None
         self.cluster_link: Optional[KVLink] = None
@@ -694,6 +717,11 @@ class PagedPipelineBatcher(SlotEngine):
                 assert ok, "placement checked free blocks yet ran dry"
                 dest.append(list(t.blocks))
             self.pipeline.scatter_kv_pages(dest, mig.layer_kv)
+            if self._san is not None:
+                for si, d in enumerate(dest):
+                    if d is not None:
+                        self._san.slot_access(si, d, mig.n_tokens, 0,
+                                              self.block_size)
             self.slots[slot] = _Slot(req=r, pos=mig.n_tokens,
                                      remaining=r.max_new_tokens, out=[],
                                      seq=self._admit_seq)
@@ -715,6 +743,11 @@ class PagedPipelineBatcher(SlotEngine):
             s = self.slots[i]
             blocks = [list(tabs[i].blocks) if tabs is not None else None
                       for tabs in self._tables]
+            if self._san is not None:
+                for si, b in enumerate(blocks):
+                    if b is not None:   # pure read: the handoff extraction
+                        self._san.slot_access(si, b, s.pos, s.pos,
+                                              self.block_size)
             layer_kv = self.pipeline.extract_kv_pages(blocks)
             mig = KVMigration(
                 req=s.req, n_tokens=s.pos, block_size=self.block_size,
@@ -816,6 +849,9 @@ class PagedPipelineBatcher(SlotEngine):
                 assert not t.blocks, "slot freed without releasing blocks"
                 ok = self._stage_alloc(si, t, int(lens[row]))
                 assert ok, "admission admitted more blocks than the pool has"
+                if self._san is not None:
+                    self._san.slot_access(si, t.blocks, int(lens[row]), 0,
+                                          self.block_size)
                 dest[row] = t.as_array(self.max_blocks)
             stage_dest.append(dest.reshape(-1))
         return self.pipeline.insert_slots_paged(toks, lens, slot_ids,
@@ -913,6 +949,8 @@ class PagedPipelineBatcher(SlotEngine):
                 if cow is not None:
                     src, dst = cow
                     self.pipeline.copy_pages(si, [src], [dst])
+                    if self._san is not None:
+                        self._san.on_copy(si, src, dst)
                     self.cow_copies += 1
                     self._bt_cache = None
         return True
@@ -973,6 +1011,14 @@ class PagedPipelineBatcher(SlotEngine):
             toks[row, :c] = s.pending[:c]
             lens[row] = c
             starts[row] = s.pos
+        if self._san is not None:
+            for si, tabs in enumerate(self._tables):
+                if tabs is None:
+                    continue
+                for row, (i, c) in enumerate(pairs):
+                    self._san.slot_access(
+                        si, tabs[i].blocks, int(starts[row]) + c,
+                        int(starts[row]), self.block_size)
         tables = [np.zeros((m, self.max_blocks), np.int32) if tabs is None
                   else np.stack([tabs[i].as_array(self.max_blocks)
                                  for i, _ in pairs])
@@ -1024,6 +1070,8 @@ class PagedPipelineBatcher(SlotEngine):
         def spill(h: int, bid: int) -> None:
             if self.pipeline.paged_caches is None:
                 return             # nothing ever materialized on device
+            if self._san is not None:
+                self._san.on_spill(si, bid)
             host.put(h, self.pipeline.extract_stage_pages(si, [bid]))
             self.host_demotions += 1
             self._iter_swap_blocks += 1
@@ -1051,6 +1099,17 @@ class PagedPipelineBatcher(SlotEngine):
         self.cluster_link = link if link is not None else KVLink()
         self._cluster_peers = {rid: w for rid, w in peers.items()
                                if rid != self.replica_id}
+        # without a host tier, an evicted prefix block leaves the replica
+        # entirely — retract the directory claim at eviction time so the
+        # published residency never outlives the page (peers would only
+        # have wasted a fetch attempt on the stale entry, but KVSAN's
+        # directory audit rightly calls the dangling claim a violation)
+        ix = (self._prefix[self._rep_stage]
+              if self._rep_stage is not None else None)
+        if ix is not None and ix.spill is None:
+            def _unpublish_on_evict(h: int, bid: int) -> None:
+                self.cluster_dir.unpublish(h, self.replica_id)
+            ix.spill = _unpublish_on_evict
 
     def export_prefix_block(self, h: int):
         """Package chain hash `h`'s page payload for a peer replica —
@@ -1068,6 +1127,8 @@ class PagedPipelineBatcher(SlotEngine):
                 return None        # non-attention stage: nothing to export
             bid = ix.lookup(h)
             if bid is not None:
+                if self._san is not None:   # peer export reads the page
+                    self._san.on_spill(si, bid)
                 layer_kv.extend(self.pipeline.extract_stage_pages(si, [bid]))
                 continue
             payload = host.peek(h) if host is not None else None
@@ -1147,6 +1208,8 @@ class PagedPipelineBatcher(SlotEngine):
             if kind == "host":
                 self.pipeline.scatter_stage_pages(si, [alloc[si]],
                                                   payloads[si])
+                if self._san is not None:
+                    self._san.note_write(si, [alloc[si]])
                 promoted = True
                 self.host_promotions += 1
                 self._iter_swap_blocks += 1
@@ -1155,6 +1218,10 @@ class PagedPipelineBatcher(SlotEngine):
         if need_fetch:
             # only the locally-missing stages' layer slices cross the link
             self.pipeline.scatter_kv_pages(dest, layer_kv)
+            if self._san is not None:
+                for sj, d in enumerate(dest):
+                    if d is not None:
+                        self._san.note_write(sj, d)
             fetch_bytes, li = 0, 0
             for si, st in enumerate(self.pipeline.stages):
                 n_layers = st.hi - st.lo
@@ -1290,6 +1357,14 @@ class PagedPipelineBatcher(SlotEngine):
                             else np.zeros(self.max_blocks, np.int32)
                             for j, t in enumerate(tabs)])
                   for tabs in self._tables]
+        if self._san is not None:
+            for si, tabs in enumerate(self._tables):
+                if tabs is None:
+                    continue
+                for i in plan:
+                    self._san.slot_access(
+                        si, tabs[i].blocks, int(starts[i]) + int(qlen[i]),
+                        int(starts[i]), self.block_size)
         logits = np.asarray(self.pipeline.verify_slots_paged(
             toks, qlen, starts, tables))
         done = []
@@ -1367,9 +1442,60 @@ class PagedPipelineBatcher(SlotEngine):
                      * self._iter_swap_blocks)
         if self._iter_fetch_cost:
             cost += self._iter_fetch_cost
+        if self._san is not None:
+            self._kvsan_audit()
         return mig_comps + comps, cost
 
+    def _kvsan_audit(self) -> None:
+        """Iteration-boundary KVSAN audit: every pool reference must be
+        explained by a slot's BlockTable or a PrefixIndex entry
+        (unexplained references count as leaks -> kvsan_leaks; a
+        reference a table expects but the pool lost raises), the host
+        shadow must match the actual host tier, and every directory
+        entry this replica published must point at a page it still
+        holds."""
+        san = self._san
+        for si, pool in enumerate(self._pools):
+            if pool is None:
+                continue
+            expected: Dict[int, int] = {}
+            for t in self._tables[si]:
+                for b in t.blocks:
+                    expected[b] = expected.get(b, 0) + 1
+            ix = self._prefix[si]
+            if ix is not None:
+                for bid in ix.indexed_blocks():
+                    expected[bid] = expected.get(bid, 0) + 1
+            self.kvsan_leaks += san.audit_pool(si, pool, expected)
+            host = self._host[si]
+            if host is not None:
+                san.audit_host(si, host)
+        if self.cluster_dir is not None and self._rep_stage is not None:
+            ix = self._prefix[self._rep_stage]
+            host = self._host[self._rep_stage]
+            for h, tier in self.cluster_dir.entries_for(self.replica_id):
+                if tier == "device" and (ix is None
+                                         or ix.lookup(h) is None):
+                    san.violate(
+                        f"kvsan replica {self.replica_id}: directory "
+                        f"says device for hash {h} but no block is "
+                        "resident")
+                elif tier == "host" and (host is None or h not in host):
+                    san.violate(
+                        f"kvsan replica {self.replica_id}: directory "
+                        f"says host for hash {h} but the host tier "
+                        "lacks it")
+
     def _decode_all(self, toks, pos):
+        if self._san is not None:
+            for si, tabs in enumerate(self._tables):
+                if tabs is None:
+                    continue
+                for j, s in enumerate(self.slots):
+                    if s.decoding:
+                        self._san.slot_access(
+                            si, tabs[j].blocks, int(pos[j]) + 1,
+                            int(pos[j]), self.block_size)
         if self._bt_cache is None:
             # rows of slots that are NOT decoding (free, or mid-prefill)
             # present an all-null table so their joint-iteration garbage

@@ -53,6 +53,10 @@ class InferenceEngine:
     layer indices at model precision (quality guard, typically the
     first/last layers). Needs the paged layout.
 
+    ``kvsan`` serves under the KVSAN page-lifecycle sanitizer
+    (repro.analysis.kvsan): pure observation, token-identical, leaks
+    surface as ``ServeStats.kvsan_leaks``. Needs the paged layout.
+
     ``host_blocks`` (one int, or per replica — the scheduler's
     ``SearchResult.host_blocks``) adds a host-memory page tier under each
     replica's device pools: prefix eviction demotes pages there instead
@@ -88,7 +92,8 @@ class InferenceEngine:
                  spec_draft_token_cost: float = 0.0,
                  kv_dtype: Optional[str] = None,
                  kv_dtypes: Optional[Sequence[Optional[str]]] = None,
-                 kv_guard_layers: Sequence[int] = ()):
+                 kv_guard_layers: Sequence[int] = (),
+                 kvsan: bool = False):
         self.cfg = cfg
         devices = list(devices if devices is not None else jax.devices())
         if params is None:
@@ -215,7 +220,8 @@ class InferenceEngine:
                              kv_dtype=kv_dtype,
                              kv_dtypes=(list(kv_dtypes)
                                         if kv_dtypes is not None else None),
-                             kv_guard_layers=kv_guard_layers)
+                             kv_guard_layers=kv_guard_layers,
+                             kvsan=kvsan)
         self.roles = self.router.roles
 
     def generate(self, prompts: Sequence[np.ndarray], *, max_new: int = 16

@@ -124,6 +124,8 @@ class ServeStats:
     # cluster prefix directory (serving.cluster_kv)
     prefix_fetches: int = 0        # prefix blocks migrated from peer replicas
     prefix_fetched_bytes: int = 0  # payload bytes shipped for those fetches
+    # KVSAN runtime sanitizer (PagedPipelineBatcher(kvsan=True))
+    kvsan_leaks: int = 0           # pool references no table/index explains
 
     def summary(self) -> str:
         lat = np.asarray(self.latencies)
@@ -157,6 +159,8 @@ class ServeStats:
         if self.prefix_fetches:
             extra += (f" fetch={self.prefix_fetches} "
                       f"({self.prefix_fetched_bytes / 1e6:.2f}MB)")
+        if self.kvsan_leaks:
+            extra += f" KVSAN-LEAKS={self.kvsan_leaks}"
         return (f"n={len(lat)} {pct}"
                 f"slo={self.attainment * 100:.1f}% thpt={self.throughput:.2f} req/s "
                 f"rej={self.rejected} drop={self.dropped} "
@@ -216,7 +220,8 @@ def run_serve_loop(workers: Sequence, requests: Sequence, *, deadline: float,
                 "spec_proposed", "spec_accepted", "spec_tokens",
                 "kv_bytes_resident", "kv_bytes_saved",
                 "host_demotions", "host_promotions", "host_evictions",
-                "host_hit_tokens", "prefix_fetches", "prefix_fetched_bytes")
+                "host_hit_tokens", "prefix_fetches", "prefix_fetched_bytes",
+                "kvsan_leaks")
     base = {c: sum(getattr(w, c, 0) for w in workers) for c in counters}
     while idx < len(pending) or any(w.inflight() for w in workers):
         now = clock.now()

@@ -140,7 +140,8 @@ class Router:
                  spec_ks: Optional[Sequence[int]] = None,
                  kv_dtype: Optional[str] = None,
                  kv_dtypes: Optional[Sequence[Optional[str]]] = None,
-                 kv_guard_layers: Sequence[int] = ()):
+                 kv_guard_layers: Sequence[int] = (),
+                 kvsan: bool = False):
         assert policy in ("continuous", "static"), policy
         assert cache_layout in ("contiguous", "paged"), cache_layout
         self.replicas = list(replicas)
@@ -252,6 +253,12 @@ class Router:
         if step_costs is None:
             step_costs = [1.0] * len(self.replicas)
         assert len(step_costs) == len(self.replicas)
+        if kvsan and (cache_layout != "paged" or policy != "continuous"):
+            warnings.warn(
+                "kvsan sanitizes the paged KV lifecycle; "
+                "policy='continuous' with cache_layout='paged' is "
+                "required — serving unsanitized", stacklevel=2)
+            kvsan = False
         if policy == "continuous" and cache_layout == "paged":
             self.workers = [PagedPipelineBatcher(
                 r, n_slots=n_slots, max_len=max_len, pad_id=pad_id,
@@ -261,7 +268,7 @@ class Router:
                 host_blocks=host_blocks[i], host_swap_cost=host_swap_cost,
                 virtual_step_cost=sc, role=role, replica_id=i,
                 spec=replica_spec(i), kv_dtype=replica_kv_dtype(i),
-                kv_guard_layers=kv_guard_layers)
+                kv_guard_layers=kv_guard_layers, kvsan=kvsan)
                 for i, (r, role, sc) in enumerate(
                     zip(self.replicas, self.roles, step_costs))]
             self.dispatcher = wire_disaggregation(self.workers, self.roles,

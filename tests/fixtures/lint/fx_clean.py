@@ -1,0 +1,29 @@
+"""Every sanctioned idiom together: must lint clean with zero findings."""
+from typing import List, Optional
+
+import numpy as np
+
+
+class Table:
+    def __init__(self, pool):
+        self.pool = pool
+        self.blocks: List[int] = []
+
+    def grow(self) -> int:
+        bid = self.pool.alloc()
+        self.blocks.append(bid)
+        return bid
+
+    def release(self) -> None:
+        for b in self.blocks:
+            self.pool.free(b)
+        self.blocks = []
+
+
+def pick(xs: Optional[List[int]] = None, *, seed: int = 0) -> int:
+    rng = np.random.default_rng(seed)
+    xs = xs if xs is not None else [0]
+    try:
+        return xs[int(rng.integers(0, len(xs)))]
+    except IndexError:
+        return 0

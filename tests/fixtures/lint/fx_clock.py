@@ -1,0 +1,14 @@
+"""Seeded violations: wall-clock reads outside serving/loop.py."""
+import datetime
+import time
+
+
+def stamp_iteration():
+    t0 = time.time()            # FIRES clock-discipline
+    time.sleep(0.01)            # FIRES clock-discipline
+    wall = datetime.datetime.now()   # FIRES clock-discipline
+    return t0, wall
+
+
+def profile():
+    return time.monotonic()     # FIRES clock-discipline

@@ -1,0 +1,23 @@
+"""Seeded violations: general hygiene rules."""
+import random
+
+import numpy as np
+
+
+def risky(xs=[], opts={}):                  # FIRES mutable-default (x2)
+    try:
+        return xs[0]
+    except:                                 # FIRES bare-except
+        return None
+
+
+def jitter():
+    a = random.random()                     # FIRES unseeded-rng
+    b = np.random.randint(0, 10)            # FIRES unseeded-rng
+    return a + b
+
+
+def seeded_ok(seed: int):
+    rng = np.random.default_rng(seed)       # clean: explicit seed
+    legacy = np.random.RandomState(seed)    # clean: explicit seed
+    return rng.integers(0, 10) + legacy.randint(0, 10)

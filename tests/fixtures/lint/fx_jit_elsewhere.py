@@ -1,0 +1,10 @@
+"""The same jit/shape patterns OUTSIDE a serving path: the jit-retrace
+rule is scoped to serving files, so this file is clean (an offline
+benchmark re-jitting per call is wasteful, not a correctness hazard)."""
+import jax
+import jax.numpy as jnp
+
+
+def bench_once(xs):
+    fn = jax.jit(lambda x: x + 1)       # clean: not a serving path
+    return fn(jnp.zeros(len(xs)))       # clean: not a serving path

@@ -1,0 +1,14 @@
+"""Seeded violation: a Pallas kernel with no registered oracle."""
+
+
+def mystery_attention_pallas(q, k, v):      # FIRES kernel-oracle
+    return q
+
+
+def _helper_pallas_launcher(q):             # clean: not *_pallas
+    return q
+
+
+class Wrapper:
+    def bound_pallas(self):                 # clean: method, not top-level
+        return None

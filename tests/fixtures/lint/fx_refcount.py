@@ -1,0 +1,28 @@
+"""Seeded violation: pool references acquired with no release path."""
+
+
+class LeakyTable:
+    def __init__(self, pool):
+        self.pool = pool
+        self.blocks = []
+
+    def grow(self):
+        self.blocks.append(self.pool.alloc())    # FIRES refcount-pairing
+
+    def adopt(self, bid):
+        self.pool.incref(bid)                    # FIRES refcount-pairing
+        self.blocks.append(bid)
+
+
+class PairedTable:
+    def __init__(self, pool):
+        self.pool = pool
+        self.blocks = []
+
+    def grow(self):
+        self.blocks.append(self.pool.alloc())    # clean: release below
+
+    def release(self):
+        for b in self.blocks:
+            self.pool.free(b)
+        self.blocks = []

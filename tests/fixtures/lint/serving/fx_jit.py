@@ -1,0 +1,13 @@
+"""Seeded violations: retrace hazards inside a serving-path file."""
+import jax
+import jax.numpy as jnp
+
+
+class Batcher:
+    def run_iteration(self, xs):
+        step = jax.jit(lambda x: x + 1)       # FIRES jit-retrace
+        pad = jnp.zeros(len(xs))              # FIRES jit-retrace
+        return step(pad)
+
+    def decode(self, xs):
+        return jnp.ones((4, len(xs)))         # FIRES jit-retrace

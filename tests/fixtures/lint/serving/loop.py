@@ -1,0 +1,11 @@
+"""A file AT serving/loop.py owns the Wall/Virtual clock seam: wall-clock
+reads here are the sanctioned implementation, not a violation."""
+import time
+
+
+class WallClockFixture:
+    def now(self) -> float:
+        return time.monotonic()     # exempt: this file IS the clock
+
+    def sleep_until(self, t: float) -> None:
+        time.sleep(t)               # exempt
