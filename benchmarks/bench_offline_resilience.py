@@ -5,23 +5,12 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from benchmarks.common import emit
 from repro.configs import get_config
 from repro.core import cluster as cl
 from repro.core import cost_model as cm
-from repro.core import genetic, slo_sim
-from repro.core.cluster import Cluster
-
-
-def drop_devices(cluster: Cluster, drop):
-    keep = [d for d in cluster.devices if d.id not in drop]
-    remap = {d.id: i for i, d in enumerate(keep)}
-    devs = [cl.Device(remap[d.id], d.type, d.machine, d.region) for d in keep]
-    idx = [d.id for d in keep]
-    return Cluster(devs, cluster.lat[np.ix_(idx, idx)],
-                   cluster.bw[np.ix_(idx, idx)])
+from repro.core import genetic
+from repro.core.resched import warm_resolve
 
 
 def run() -> None:
@@ -34,23 +23,13 @@ def run() -> None:
     emit("offline/before", 0.0,
          f"att={res.attainment:.2f} replicas={res.assignment.num_replicas}")
 
-    drop = set(list(range(4)))                # one half of an Iceland machine
-    pool2 = drop_devices(pool, drop)
-    # warm start: previous groups minus dropped devices
-    warm = []
-    remap = {d: i for i, d in enumerate(sorted(
-        x for x in range(len(pool)) if x not in drop))}
-    for p in res.assignment.pipelines:
-        g = frozenset(remap[d] for d in p.device_ids if d not in drop)
-        if g:
-            warm.append(g)
-    assigned = {d for g in warm for d in g}
-    rest = frozenset(set(range(len(pool2))) - assigned)
-    if rest:
-        warm.append(rest)
+    drop = list(range(4))                     # one half of an Iceland machine
+    # core.resched's incremental path: project the incumbent onto the
+    # surviving pool and run a short warm-started search from it
     t0 = time.monotonic()
-    res2 = genetic.search(pool2, prof, task, deadline=10.0, rate=3.0,
-                          iters=8, seed=1, init=[tuple(warm)])
+    res2, _ = warm_resolve(pool, prof, task, incumbent=res.plan,
+                           deadline=10.0, rate=3.0, dead_devices=drop,
+                           iters=8, seed=1)
     dt = time.monotonic() - t0
     emit("offline/after_4gone", dt * 1e6,
          f"att={res2.attainment:.2f} replicas="

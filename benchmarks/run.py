@@ -9,7 +9,7 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_case_study, bench_continuous,
+from benchmarks import (bench_case_study, bench_chaos, bench_continuous,
                         bench_convergence, bench_cost_model,
                         bench_disagg, bench_dryrun_table, bench_kernels,
                         bench_layout_breakdown, bench_offline_resilience,
@@ -25,6 +25,7 @@ SUITES = {
     "slo_attainment": bench_slo_attainment.run,     # Fig. 2
     "swarm_compare": bench_swarm_compare.run,       # Fig. 3
     "offline_resilience": bench_offline_resilience.run,   # Fig. 4
+    "chaos": bench_chaos.run,                       # beyond-paper (online)
     "convergence": bench_convergence.run,           # Fig. 6/7
     "layout_breakdown": bench_layout_breakdown.run,  # Table 4
     "kernels": bench_kernels.run,                   # substrate

@@ -65,21 +65,22 @@ echo "=== tiered cluster-prefix smoke (2 replicas, 4 virtual devices) ==="
 python scripts/smoke_serving.py cluster
 
 if [[ "$TIER" == "--fast" ]]; then
-  echo "=== KVSAN serving smoke (page-lifecycle sanitizer) ==="
-  # the paged + prefix suites again under KVSAN: every alloc/write/COW/
-  # spill/free shadowed, zero leaks, tokens identical to the baselines
-  # the suites already compare against
-  python scripts/smoke_serving.py serving prefix --kvsan
+  echo "=== KVSAN serving + chaos smoke (page-lifecycle sanitizer) ==="
+  # the paged + prefix suites again under KVSAN, plus the online-
+  # rescheduling chaos suite: a replica kill mid-request and a live role
+  # migration mid-decode must stay token-identical to the cold runs with
+  # zero page leaks through evacuation and migration
+  python scripts/smoke_serving.py serving prefix chaos --kvsan
 fi
 
 if [[ "$TIER" == "--full" ]]; then
   echo "=== serving smokes (4 virtual devices) ==="
-  python scripts/smoke_serving.py serving prefix disagg
+  python scripts/smoke_serving.py serving prefix disagg chaos
 
   echo "=== KVSAN serving smokes (page-lifecycle sanitizer) ==="
   # every serving suite again with the sanitizer shadowing the pools
   python scripts/smoke_serving.py serving prefix disagg cluster spec quant \
-    --kvsan
+    chaos --kvsan
 
   echo "=== benchmark results + oracle registry schema guard ==="
   python -m benchmarks.run --check

@@ -393,6 +393,81 @@ def suite_quant() -> None:
         f"{stats_q.summary()}")
 
 
+def suite_chaos() -> None:
+    from repro.configs import get_config
+    from repro.core.plan import Assignment, PipelinePlan, StagePlan
+    from repro.core.resched import DriftDetector
+    from repro.serving.loop import VirtualClock
+    from repro.serving.request import synth_workload
+    from repro.serving.resched import OnlineRescheduler
+
+    cfg = get_config("granite-8b").reduced()
+    L = cfg.num_layers
+    # two replicas with different stage splits (the disagg topology):
+    # chaos must survive layer regrouping between source and survivors
+    asg = Assignment([
+        PipelinePlan([StagePlan([0], 1), StagePlan([1], L - 1)],
+                     cost=0.1, bottleneck=0.1),
+        PipelinePlan([StagePlan([2], L - 1), StagePlan([3], 1)],
+                     cost=0.1, bottleneck=0.1),
+    ])
+
+    def wl(out_len=4):
+        return synth_workload(rate=10.0, duration=1.0, vocab=cfg.vocab_size,
+                              prompt_len=10, prompt_jitter=5,
+                              out_len=out_len, seed=2)
+
+    # replica kill mid-request: the controller evacuates the dead
+    # replica's in-flight work and re-dispatches it from the prompts —
+    # survivors regenerate the IDENTICAL token streams (greedy decode),
+    # and under --kvsan the kill must release every page (zero leaks)
+    reqs_c = wl()
+    _engine(cfg, asg, cache_layout="paged",
+            block_size=8).serve(reqs_c, deadline=1e9, clock=VirtualClock())
+    reqs_k = wl()
+    eng = _engine(cfg, asg, cache_layout="paged", block_size=8)
+    ctl = OnlineRescheduler(kills=[(2.0, 1)])
+    eng.router.attach_controller(ctl)
+    stats = eng.serve(reqs_k, deadline=1e9, clock=VirtualClock())
+    assert stats.dropped == 0, stats.summary()
+    kills = [e for e in ctl.events if e["kind"] == "kill"]
+    assert kills and kills[0]["orphans"] > 0, ctl.events
+    assert ctl.redispatches > 0
+    for rc, rk in zip(reqs_c, reqs_k):
+        assert list(rc.output) == list(rk.output), (rc.rid,)
+    _ok(f"replica kill: {kills[0]['orphans']} orphans re-dispatched, "
+        f"tokens == cold ({stats.summary()})")
+
+    # live role re-split mid-decode: decoding slots migrate WITH their
+    # emitted tokens (pages + sampling state) and the streams continue
+    # exactly where they stopped
+    reqs_c2 = wl(out_len=6)
+    _engine(cfg, asg, cache_layout="paged",
+            block_size=8).serve(reqs_c2, deadline=1e9, clock=VirtualClock())
+    reqs_m = wl(out_len=6)
+    eng2 = _engine(cfg, asg, cache_layout="paged", block_size=8)
+    fired = []
+
+    def resolver(sig, c, now):
+        if fired:
+            return None
+        fired.append(sig.kind)
+        return {"roles": ["prefill", "decode"]}
+
+    ctl2 = OnlineRescheduler(
+        detector=DriftDetector(rate=1.0, min_events=4, window=5.0),
+        resolver=resolver)
+    eng2.router.attach_controller(ctl2)
+    stats2 = eng2.serve(reqs_m, deadline=1e9, clock=VirtualClock())
+    assert stats2.dropped == 0, stats2.summary()
+    roles_ev = [e for e in ctl2.events if e["kind"] == "roles"]
+    assert roles_ev and roles_ev[0]["moved"] > 0, ctl2.events
+    for rc, rm in zip(reqs_c2, reqs_m):
+        assert list(rc.output) == list(rm.output), (rc.rid,)
+    _ok(f"live role migration: {roles_ev[0]['moved']} slots moved "
+        f"mid-decode on {fired[0]}, tokens == cold ({stats2.summary()})")
+
+
 SUITES = {
     "kernels": suite_kernels,
     "serving": suite_serving,
@@ -401,6 +476,7 @@ SUITES = {
     "cluster": suite_cluster,
     "spec": suite_spec,
     "quant": suite_quant,
+    "chaos": suite_chaos,
 }
 
 

@@ -14,7 +14,7 @@ x 2 per layer under the BSP model); PP comm: fastest link between stages.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 from repro.configs.base import ModelConfig
 from repro.core.cluster import Cluster
@@ -350,6 +350,15 @@ def pipeline_phase_costs(cluster: Cluster, stages: List[Sequence[int]],
                       prefill_bottleneck=out["prefill"][1],
                       decode_latency=out["decode"][0],
                       decode_bottleneck=out["decode"][1])
+
+
+def phase_service_rates(pc: PhaseCosts) -> Tuple[float, float]:
+    """One replica's per-phase service rates (requests/s): the edge
+    capacities of the Helix-style max-flow graph (core.resched) — a
+    prefill node admits 1/prefill_bottleneck req/s, a decode node
+    completes 1/decode_bottleneck req/s."""
+    return (1.0 / max(pc.prefill_bottleneck, 1e-12),
+            1.0 / max(pc.decode_bottleneck, 1e-12))
 
 
 def kv_migration_bytes(model: ModelProfile, task: Task,

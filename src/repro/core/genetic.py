@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Dict, FrozenSet, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -23,7 +24,7 @@ from repro.core import cost_model as cm
 from repro.core import slo_sim
 from repro.core.cluster import Cluster
 from repro.core.dp_layout import optimize_pipeline
-from repro.core.plan import Assignment, PipelinePlan
+from repro.core.plan import Assignment, DeploymentPlan, PipelinePlan
 
 Individual = Tuple[FrozenSet[int], ...]
 
@@ -142,30 +143,53 @@ def mutate_random(ind: Individual, rng: np.random.Generator) -> Individual:
 
 @dataclasses.dataclass
 class SearchResult:
-    assignment: Assignment
+    """What the search found: a DeploymentPlan plus search telemetry.
+
+    The per-replica decisions (disaggregated role, speculation depth, KV
+    pool precision, host-tier blocks) live on ``plan.replicas`` — one
+    ``ReplicaSpec`` each — instead of the parallel Optional lists earlier
+    releases carried. The old field names (``roles``, ``spec_ks``,
+    ``kv_dtypes``, ``host_blocks``) remain as deprecated properties with
+    identical semantics (None when the search ran without that
+    dimension) for one release; new code should read ``result.plan``.
+    """
+
+    plan: DeploymentPlan
     attainment: float
     history: List[Tuple[float, float]]    # (wall_seconds, best_attainment)
     evaluations: int
-    # disaggregated serving: per-pipeline role ("prefill"|"decode"),
-    # aligned with assignment.pipelines; None = colocated serving won
-    roles: Optional[List[str]] = None
-    # speculative decoding: per-pipeline speculation depth k (0 = plain
-    # decode), aligned with assignment.pipelines; None = search ran
-    # without spec_decode. Slow replicas speculate deeper — pass to
-    # InferenceEngine(spec_ks=...).
-    spec_ks: Optional[List[int]] = None
-    # quantized KV pages: per-pipeline pool precision (None entry = model
-    # default, "int8" = quantized pages), aligned with
-    # assignment.pipelines; None = search ran without kv_dtype_search.
-    # Memory-constrained replicas quantize — pass to
-    # InferenceEngine(kv_dtypes=...).
-    kv_dtypes: Optional[List[Optional[str]]] = None
-    # host page tier: per-pipeline host-tier capacity in BLOCKS, aligned
-    # with assignment.pipelines; None = search ran without
-    # host_tier_bytes. The pool-wide host budget lands on the replicas
-    # with the largest device KV-capacity deficit, so small-HBM GPUs get
-    # the big host pools — pass to InferenceEngine(host_blocks=...).
-    host_blocks: Optional[List[int]] = None
+
+    @property
+    def assignment(self) -> Assignment:
+        return self.plan.assignment
+
+    @staticmethod
+    def _deprecated(name: str) -> None:
+        warnings.warn(
+            f"SearchResult.{name} is deprecated; read the per-replica "
+            f"values from SearchResult.plan.replicas (or the "
+            f"DeploymentPlan.{name} view) instead",
+            DeprecationWarning, stacklevel=3)
+
+    @property
+    def roles(self) -> Optional[List[str]]:
+        self._deprecated("roles")
+        return self.plan.roles
+
+    @property
+    def spec_ks(self) -> Optional[List[int]]:
+        self._deprecated("spec_ks")
+        return self.plan.spec_ks
+
+    @property
+    def kv_dtypes(self) -> Optional[List[Optional[str]]]:
+        self._deprecated("kv_dtypes")
+        return self.plan.kv_dtypes
+
+    @property
+    def host_blocks(self) -> Optional[List[int]]:
+        self._deprecated("host_blocks")
+        return self.plan.host_blocks
 
 
 def choose_kv_dtypes(plans: Sequence[PipelinePlan],
@@ -674,9 +698,9 @@ def search(cluster: Cluster, model: cm.ModelProfile, task: cm.Task, *,
         history.append((time.monotonic() - t0, scored[0][0][0]))  # repro: noqa[clock-discipline]
     best = scored[0][1]
     asg = ev.assignment(best)
-    return SearchResult(assignment=asg, attainment=scored[0][0][0],
-                        history=history, evaluations=ev.evaluations,
-                        roles=ev.roles_for(best),
-                        spec_ks=ev.spec_ks_for(best),
-                        kv_dtypes=ev.kv_dtypes_for(best),
-                        host_blocks=ev.host_blocks_for(best))
+    plan = DeploymentPlan.from_search(asg, roles=ev.roles_for(best),
+                                      spec_ks=ev.spec_ks_for(best),
+                                      kv_dtypes=ev.kv_dtypes_for(best),
+                                      host_blocks=ev.host_blocks_for(best))
+    return SearchResult(plan=plan, attainment=scored[0][0][0],
+                        history=history, evaluations=ev.evaluations)

@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Callable, List, Optional, Sequence, Union
+from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -46,6 +46,28 @@ def poisson_arrivals(rate: float, duration: float, seed: int = 0) -> np.ndarray:
         if t > duration:
             break
         ts.append(t)
+    return np.asarray(ts)
+
+
+def piecewise_poisson_arrivals(segments: Sequence[Tuple[float, float]],
+                               seed: int = 0) -> np.ndarray:
+    """Arrival times of a piecewise-constant-rate Poisson process:
+    ``segments`` is a list of (rate, duration) legs played back to back —
+    the chaos benchmark's 10x spike is [(r, t0), (10 * r, t1), (r, t2)].
+    Rate-0 legs contribute silence."""
+    rng = np.random.default_rng(seed)
+    ts: List[float] = []
+    t0 = 0.0
+    for rate, duration in segments:
+        assert duration >= 0.0, duration
+        if rate > 0.0:
+            t = t0
+            while True:
+                t += rng.exponential(1.0 / rate)
+                if t > t0 + duration:
+                    break
+                ts.append(t)
+        t0 += duration
     return np.asarray(ts)
 
 

@@ -4,33 +4,20 @@ pipeline engine, and serve a Poisson workload end to end.
   PYTHONPATH=src python -m repro.launch.serve --arch h2o-danube-1.8b \
       --reduced --cluster case_study --rate 2 --duration 5 --deadline 30
 
-The scheduler plans for the FULL model on the chosen GPU pool (the paper's
-setting); execution on this CPU container runs the --reduced variant of the
-same architecture through the scheduled stage layout, preserving every
+Every flag is a ``serving.config.ServingConfig`` field — the CLI schema,
+feature gating and derived planning inputs all live there; this driver is
+just the parse -> schedule -> build -> serve spine. The scheduler plans
+for the FULL model on the chosen GPU pool (the paper's setting);
+execution on this CPU container runs the --reduced variant of the same
+architecture through the scheduled stage layout, preserving every
 structural property (stage count, TP degrees, layer ratios).
 """
 from __future__ import annotations
 
-import argparse
-
-import jax
-import numpy as np
-
 from repro.configs import get_config
-from repro.core import cluster as cl
-from repro.core import cost_model as cm
 from repro.core.plan import Assignment, PipelinePlan, StagePlan
 from repro.core.scheduler import schedule
-from repro.serving.engine import InferenceEngine
-from repro.serving.request import shared_prefix_workload, synth_workload
-
-CLUSTERS = {
-    "case_study": cl.case_study_cluster,
-    "half_price": cl.hetero_half_price,
-    "full_price": cl.hetero_full_price,
-    "homogeneous": cl.homogeneous_a100,
-    "tpu_mixed": cl.tpu_mixed_slices,
-}
+from repro.serving.config import CLUSTERS, ServingConfig
 
 
 def scale_assignment(asg: Assignment, full_layers: int,
@@ -61,271 +48,35 @@ def scale_assignment(asg: Assignment, full_layers: int,
 
 
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="h2o-danube-1.8b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--cluster", default="case_study", choices=CLUSTERS)
-    ap.add_argument("--rate", type=float, default=2.0)
-    ap.add_argument("--duration", type=float, default=5.0)
-    ap.add_argument("--deadline", type=float, default=30.0)
-    ap.add_argument("--out-len", type=int, default=8)
-    ap.add_argument("--prompt-len", type=int, default=24)
-    ap.add_argument("--search-iters", type=int, default=10)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--policy", default="continuous",
-                    choices=("continuous", "static"),
-                    help="iteration-level slot batching vs the paper's "
-                         "static whole-batch engine")
-    ap.add_argument("--cache-layout", default="contiguous",
-                    choices=("contiguous", "paged"),
-                    help="per-slot max_len cache rows vs block-paged KV "
-                         "with per-stage pools (docs/memory.md)")
-    ap.add_argument("--block-size", type=int, default=16)
-    ap.add_argument("--prefix-caching", action="store_true",
-                    help="alias block-aligned shared prompt prefixes "
-                         "copy-on-write and prefill only cold suffixes "
-                         "(paged layout only)")
-    ap.add_argument("--prefill-chunk", type=int, default=0,
-                    help="split prefills longer than this many tokens into "
-                         "chunks interleaved with decode iterations "
-                         "(0 = one-shot; paged layout only)")
-    ap.add_argument("--prefix-hit-rate", type=float, default=0.0,
-                    help="expected fraction of prompt tokens served from "
-                         "the prefix cache; the scheduler plans KV "
-                         "capacity against the deduplicated demand")
-    ap.add_argument("--shared-prefix", type=int, default=0,
-                    help="generate prompts with this many shared system-"
-                         "prompt tokens (exercises the prefix cache)")
-    ap.add_argument("--host-mem-gb", type=float, default=0.0,
-                    help="pool-wide host-memory budget for the page tier "
-                         "(GB): the scheduler splits it across replicas "
-                         "by device KV-capacity deficit and prefix "
-                         "eviction demotes pages there instead of "
-                         "deleting them (paged + --prefix-caching)")
-    ap.add_argument("--host-swap-gbps", type=float, default=0.0,
-                    help="host<->device swap (and peer-fetch) bandwidth "
-                         "in Gbit/s the scheduler prices tiered hits at "
-                         "(0 = ideal free swap)")
-    ap.add_argument("--host-swap-cost", type=float, default=0.0,
-                    help="serving-clock cost of swapping one block "
-                         "between tiers, as a fraction of one iteration "
-                         "(virtual-clock replays only)")
-    ap.add_argument("--cluster-prefix", action="store_true",
-                    help="join every replica into a shared prefix "
-                         "directory: prompts whose prefix lives only on "
-                         "a peer fetch the pages over the KV link, and "
-                         "the router scores admission by resident prefix "
-                         "instead of pure least-loaded")
-    ap.add_argument("--prefix-route-weight", type=float, default=0.25,
-                    help="router weight of one resident prefix block "
-                         "against queue depth (0 = pure least-loaded)")
-    ap.add_argument("--route-seed", type=int, default=None,
-                    help="seed the router's dispatch tiebreaks instead "
-                         "of the deterministic lowest-replica-id order")
-    ap.add_argument("--prefix-working-set", type=int, default=0,
-                    help="hot shared-prefix working set in TOKENS: the "
-                         "scheduler derives the ACHIEVABLE per-replica "
-                         "hit rate from tiered residency instead of "
-                         "trusting --prefix-hit-rate verbatim")
-    ap.add_argument("--disaggregate", action="store_true",
-                    help="split prefill and decode across replicas: the "
-                         "scheduler also searches the role split, prefill "
-                         "replicas hand finished KV pages to decode "
-                         "replicas over the modeled link (paged layout, "
-                         ">= 2 replicas)")
-    ap.add_argument("--kv-link-gbps", type=float, default=0.0,
-                    help="flat bandwidth of the prefill->decode KV link in "
-                         "Gbit/s (0 = per-pair costs from the cluster's "
-                         "comm matrices)")
-    ap.add_argument("--spec-decode", action="store_true",
-                    help="speculative decoding: propose up to --spec-k "
-                         "tokens per slot per iteration and commit the "
-                         "verified prefix in one multi-token target step "
-                         "(token-identical to greedy decode; paged layout "
-                         "+ attention-only stacks)")
-    ap.add_argument("--draft-model", default="",
-                    help="draft architecture from configs/ for the "
-                         "proposer (empty = weight-free n-gram / "
-                         "prompt-lookup proposing)")
-    ap.add_argument("--spec-k", type=int, default=4,
-                    help="draft tokens proposed per target step; the "
-                         "scheduler's acceptance-aware search may deepen "
-                         "or shallow this per replica")
-    ap.add_argument("--spec-alpha", type=float, default=0.7,
-                    help="expected per-token draft acceptance rate the "
-                         "scheduler plans decode cost per COMMITTED "
-                         "token with")
-    ap.add_argument("--kv-dtype", default="auto",
-                    choices=("auto", "search", "fp32", "bf16", "int8",
-                             "fp8"),
-                    help="paged KV pool storage precision: 'auto' keeps "
-                         "the model default, int8/fp8 quantize pages with "
-                         "per-token-per-head scales (dequant fused into "
-                         "the paged kernels), and 'search' lets the "
-                         "scheduler pick PER REPLICA — memory-bound "
-                         "replicas quantize (docs/serving.md)")
-    ap.add_argument("--kv-guard-layers", type=int, default=0,
-                    help="pin this many layers at EACH END of the stack "
-                         "at model precision under a quantized --kv-dtype "
-                         "(quality guard: first/last layers are the "
-                         "usual outliers)")
-    ap.add_argument("--kvsan", action="store_true",
-                    help="serve under the KVSAN page-lifecycle sanitizer "
-                         "(repro.analysis.kvsan): every block's "
-                         "alloc/write/alias/spill/free is shadow-checked "
-                         "and refcount leaks surface as "
-                         "ServeStats.kvsan_leaks; token streams are "
-                         "identical, iterations cost more host time. "
-                         "Needs --cache-layout paged")
-    ap.add_argument("--spec-draft-cost", type=float, default=0.0,
-                    help="modeled cost of one draft step: the scheduler "
-                         "treats it as absolute seconds (> 0 makes slow "
-                         "replicas speculate deeper), and virtual-clock "
-                         "replays charge it per proposed token as a "
-                         "fraction of an iteration — so served latencies "
-                         "include the draft overhead the plan assumed")
-    args = ap.parse_args()
-
-    if args.prefix_hit_rate and args.cache_layout != "paged":
-        import warnings
-        warnings.warn(
-            "--prefix-hit-rate only affects capacity planning with "
-            "--cache-layout paged (contiguous replicas are simulated "
-            "unbounded); ignoring it", stacklevel=1)
-        args.prefix_hit_rate = 0.0
-    pool = CLUSTERS[args.cluster]()
-    cfg_full = get_config(args.arch)
-    # the scheduler must plan for the prompts the engine will actually
-    # serve: --shared-prefix prepends that many system-prompt tokens
-    task = cm.Task(batch=1, s_in=args.prompt_len + args.shared_prefix,
-                   s_out=args.out_len)
-    print(f"scheduling {args.arch} on {args.cluster} "
+    sv = ServingConfig.parse().normalized()
+    pool = sv.pool()
+    cfg_full = get_config(sv.arch)
+    print(f"scheduling {sv.arch} on {sv.cluster} "
           f"({len(pool)} GPUs, ${pool.price_per_hour:.2f}/h)...")
-    if args.disaggregate and args.cache_layout != "paged":
-        import warnings
-        warnings.warn(
-            "--disaggregate needs --cache-layout paged (the KV handoff is "
-            "a page transfer); serving colocated", stacklevel=1)
-        args.disaggregate = False
-    if args.spec_decode and args.cache_layout != "paged":
-        import warnings
-        warnings.warn(
-            "--spec-decode needs --cache-layout paged (multi-token "
-            "verification runs through the paged context path); serving "
-            "without it", stacklevel=1)
-        args.spec_decode = False
-    if args.kv_dtype != "auto" and args.cache_layout != "paged":
-        import warnings
-        warnings.warn(
-            "--kv-dtype needs --cache-layout paged (precision is a "
-            "page-pool layout); serving at model precision", stacklevel=1)
-        args.kv_dtype = "auto"
-    if (args.host_mem_gb > 0 or args.cluster_prefix) \
-            and not (args.cache_layout == "paged" and args.prefix_caching):
-        import warnings
-        warnings.warn(
-            "--host-mem-gb/--cluster-prefix need --cache-layout paged "
-            "with --prefix-caching (tiers and the directory hold prefix "
-            "blocks); serving without them", stacklevel=1)
-        args.host_mem_gb = 0.0
-        args.cluster_prefix = False
-    # "auto" = model default everywhere; "search" = per-replica scheduler
-    # choice; anything else fixes one pool precision for planning + serving
-    kv_dtype = None if args.kv_dtype in ("auto", "search") else args.kv_dtype
-    res = schedule(pool, args.arch, task, deadline=args.deadline,
-                   rate=args.rate, iters=args.search_iters, seed=args.seed,
-                   kv_block_size=(args.block_size
-                                  if args.cache_layout == "paged" else None),
-                   prefix_hit_rate=args.prefix_hit_rate,
-                   disaggregate=args.disaggregate,
-                   kv_link_gbps=args.kv_link_gbps,
-                   spec_decode=args.spec_decode,
-                   spec_alpha=args.spec_alpha,
-                   spec_draft_cost=args.spec_draft_cost,
-                   max_spec_k=max(args.spec_k, 1),
-                   kv_dtype=kv_dtype,
-                   kv_dtype_search=(args.kv_dtype == "search"),
-                   host_tier_bytes=args.host_mem_gb * 1e9,
-                   host_swap_gbps=args.host_swap_gbps,
-                   prefix_working_set=args.prefix_working_set,
-                   cluster_prefix=args.cluster_prefix)
-    print(f"  assignment: {res.assignment.describe()}")
+    res = schedule(pool, sv.arch, sv.task(), **sv.schedule_kwargs())
+    plan = res.plan
+    print(f"  assignment: {plan.assignment.describe()}")
     print(f"  estimated SLO attainment: {res.attainment*100:.1f}%")
-    if args.disaggregate:
-        print(f"  roles: {res.roles if res.roles is not None else 'colocated'}")
-    if args.spec_decode:
-        print(f"  spec-k per replica: {res.spec_ks}")
-    if args.kv_dtype == "search":
-        shown = [d or "auto" for d in (res.kv_dtypes or [])]
+    if sv.disaggregate:
+        print(f"  roles: "
+              f"{plan.roles if plan.roles is not None else 'colocated'}")
+    if sv.spec_decode:
+        print(f"  spec-k per replica: {plan.spec_ks}")
+    if sv.kv_dtype == "search":
+        shown = [d or "auto" for d in (plan.kv_dtypes or [])]
         print(f"  kv-dtype per replica: {shown}")
-    if args.host_mem_gb > 0:
-        print(f"  host-tier blocks per replica: {res.host_blocks}")
+    if sv.host_mem_gb > 0:
+        print(f"  host-tier blocks per replica: {plan.host_blocks}")
 
-    cfg = cfg_full.reduced() if args.reduced else cfg_full
-    asg = scale_assignment(res.assignment, cfg_full.num_layers,
-                           cfg.num_layers) if args.reduced else res.assignment
-    # quality guard: pin the first/last N layers of the SERVED stack
-    guard = []
-    if args.kv_guard_layers > 0:
-        n = min(args.kv_guard_layers, cfg.num_layers // 2)
-        guard = list(range(n)) + list(range(cfg.num_layers - n,
-                                            cfg.num_layers))
-    max_len = args.prompt_len + args.shared_prefix + 8 + args.out_len
-    if args.cache_layout == "paged":
-        max_len += (-max_len) % args.block_size    # whole blocks
-    engine = InferenceEngine(cfg, asg, key=jax.random.PRNGKey(args.seed),
-                             policy=args.policy, max_len=max_len,
-                             cache_layout=args.cache_layout,
-                             block_size=args.block_size,
-                             prefix_caching=args.prefix_caching,
-                             prefill_chunk=args.prefill_chunk,
-                             # the scheduler's deficit-weighted host-tier
-                             # split (None = no host tier)
-                             host_blocks=(res.host_blocks
-                                          if res.host_blocks is not None
-                                          else 0),
-                             host_swap_cost=args.host_swap_cost,
-                             cluster_prefix=args.cluster_prefix,
-                             prefix_route_weight=args.prefix_route_weight,
-                             route_seed=args.route_seed,
-                             # the role split is the SCHEDULER's verdict:
-                             # roles=None means colocated serving won the
-                             # search, so don't force a default split
-                             disaggregate=(args.disaggregate
-                                           and res.roles is not None),
-                             roles=res.roles if args.disaggregate else None,
-                             kv_link_gbps=args.kv_link_gbps,
-                             cluster=(pool if args.disaggregate
-                                      and args.kv_link_gbps <= 0 else None),
-                             spec_decode=args.spec_decode,
-                             spec_k=args.spec_k,
-                             draft_model=(args.draft_model or None),
-                             spec_draft_token_cost=args.spec_draft_cost,
-                             # the scheduler's acceptance-aware per-replica
-                             # depths (0 = plain decode on that replica)
-                             spec_ks=(res.spec_ks if args.spec_decode
-                                      else None),
-                             kv_dtype=kv_dtype,
-                             # per-replica precision: the scheduler's
-                             # choices (None entry = model default)
-                             kv_dtypes=(res.kv_dtypes
-                                        if args.kv_dtype == "search"
-                                        else None),
-                             kv_guard_layers=guard,
-                             kvsan=args.kvsan)
-    if args.shared_prefix:
-        reqs = shared_prefix_workload(
-            rate=args.rate, duration=args.duration, vocab=cfg.vocab_size,
-            shared_len=args.shared_prefix, unique_len=args.prompt_len,
-            unique_jitter=4, out_len=args.out_len, seed=args.seed)
-    else:
-        reqs = synth_workload(rate=args.rate, duration=args.duration,
-                              vocab=cfg.vocab_size,
-                              prompt_len=args.prompt_len,
-                              prompt_jitter=4, out_len=args.out_len,
-                              seed=args.seed)
+    from repro.serving.engine import InferenceEngine
+    cfg = cfg_full.reduced() if sv.reduced else cfg_full
+    asg = scale_assignment(plan.assignment, cfg_full.num_layers,
+                           cfg.num_layers) if sv.reduced else None
+    engine = InferenceEngine.from_config(cfg, plan, sv, assignment=asg,
+                                         cluster=pool)
+    reqs = sv.workload(cfg.vocab_size)
     print(f"serving {len(reqs)} requests...")
-    stats = engine.serve(reqs, deadline=args.deadline)
+    stats = engine.serve(reqs, deadline=sv.deadline)
     print("  " + stats.summary())
 
 

@@ -224,6 +224,54 @@ class InferenceEngine:
                              kvsan=kvsan)
         self.roles = self.router.roles
 
+    @classmethod
+    def from_config(cls, cfg: ModelConfig, plan, serving, *,
+                    assignment: Optional[Assignment] = None, key=None,
+                    cluster=None, **overrides) -> "InferenceEngine":
+        """Build an engine from the two typed surfaces: a
+        ``serving.config.ServingConfig`` (HOW to serve — policy, layout,
+        feature flags) and a ``core.plan.DeploymentPlan`` (WHERE — the
+        scheduler's replica layouts, roles, spec depths, KV precisions and
+        host-tier split). ``assignment`` overrides the plan's layer split
+        (e.g. the reduced-model projection from launch.serve) while the
+        plan keeps supplying the per-replica dimensions; ``cluster`` feeds
+        the per-pair KV-link cost model when no flat bandwidth is set;
+        ``overrides`` pass through any raw ``__init__`` kwarg (n_slots,
+        params, devices, ...)."""
+        sv = serving.normalized()
+        asg = assignment if assignment is not None else plan.assignment
+        kw = dict(
+            key=(key if key is not None
+                 else jax.random.PRNGKey(sv.seed)),
+            policy=sv.policy, max_len=sv.max_len(),
+            cache_layout=sv.cache_layout, block_size=sv.block_size,
+            prefix_caching=sv.prefix_caching,
+            prefill_chunk=sv.prefill_chunk,
+            host_blocks=(plan.host_blocks
+                         if plan.host_blocks is not None else 0),
+            host_swap_cost=sv.host_swap_cost,
+            cluster_prefix=sv.cluster_prefix,
+            prefix_route_weight=sv.prefix_route_weight,
+            route_seed=sv.route_seed,
+            # the role split is the SCHEDULER's verdict: roles=None means
+            # colocated serving won the search, so don't force a default
+            disaggregate=(sv.disaggregate and plan.roles is not None),
+            roles=(plan.roles if sv.disaggregate else None),
+            kv_link_gbps=sv.kv_link_gbps,
+            cluster=(cluster if sv.disaggregate and sv.kv_link_gbps <= 0
+                     else None),
+            spec_decode=sv.spec_decode, spec_k=sv.spec_k,
+            draft_model=(sv.draft_model or None),
+            spec_draft_token_cost=sv.spec_draft_cost,
+            spec_ks=(plan.spec_ks if sv.spec_decode else None),
+            kv_dtype=sv.fixed_kv_dtype(),
+            kv_dtypes=(plan.kv_dtypes if sv.kv_dtype == "search"
+                       else None),
+            kv_guard_layers=sv.guard_layers(cfg.num_layers),
+            kvsan=sv.kvsan)
+        kw.update(overrides)
+        return cls(cfg, asg, **kw)
+
     def generate(self, prompts: Sequence[np.ndarray], *, max_new: int = 16
                  ) -> List[np.ndarray]:
         """One-shot batched generation on replica 0."""

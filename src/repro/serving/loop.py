@@ -211,9 +211,7 @@ def run_serve_loop(workers: Sequence, requests: Sequence, *, deadline: float,
     pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
     idx = 0
     iterations = 0
-    wid = {id(w): getattr(w, "replica_id", i)
-           for i, w in enumerate(workers)}
-    # workers persist across serve() calls: report this replay's deltas
+    # workers persist across serve() calls: report this replay's deltas.
     counters = ("rejected", "preemptions", "prefix_lookups", "prefix_hits",
                 "prefix_hit_tokens", "prefill_tokens", "cow_copies",
                 "migrations", "migrated_kv_bytes", "spec_steps",
@@ -222,9 +220,26 @@ def run_serve_loop(workers: Sequence, requests: Sequence, *, deadline: float,
                 "host_demotions", "host_promotions", "host_evictions",
                 "host_hit_tokens", "prefix_fetches", "prefix_fetched_bytes",
                 "kvsan_leaks")
-    base = {c: sum(getattr(w, c, 0) for w in workers) for c in counters}
+    # MEMBERSHIP IS DYNAMIC: `workers` is consulted live each cycle, so a
+    # controller (serving.resched.OnlineRescheduler) removing a dead
+    # replica or adding a new one mid-serve is visible next iteration.
+    # `seen` retains every worker that EVER served this replay with its
+    # counter baseline, so a removed replica's pre-removal work still
+    # lands in the final ServeStats instead of vanishing with it.
+    wid: dict = {}
+    seen: dict = {}
+
+    def _register(ws) -> None:
+        for w in ws:
+            k = id(w)
+            if k not in seen:
+                wid[k] = getattr(w, "replica_id", len(wid))
+                seen[k] = (w, {c: getattr(w, c, 0) for c in counters})
+
+    _register(workers)
     while idx < len(pending) or any(w.inflight() for w in workers):
         now = clock.now()
+        _register(workers)         # pick up replicas added last cycle
         progressed = False
 
         # -- admission: due arrivals onto the least-loaded worker ---------
@@ -246,9 +261,11 @@ def run_serve_loop(workers: Sequence, requests: Sequence, *, deadline: float,
         # Workers are parallel replicas: in virtual time a cycle costs the
         # SLOWEST busy worker's iteration, not the sum, so the clock ticks
         # once per cycle and completions are stamped after the tick.
+        # (snapshot the list: a controller's run_iteration may add or
+        # remove replicas, which take effect next cycle)
         max_cost = 0.0
         completed = []
-        for w in workers:
+        for w in list(workers):
             if not w.busy(now):
                 continue
             done, cost = w.run_iteration(now)
@@ -275,7 +292,7 @@ def run_serve_loop(workers: Sequence, requests: Sequence, *, deadline: float,
         targets = []
         if idx < len(pending) and pending[idx].arrival > now:
             targets.append(pending[idx].arrival)
-        for w in workers:
+        for w in list(workers):
             t = w.next_event(now)
             if t is not None and t > now:
                 targets.append(t)
@@ -290,6 +307,6 @@ def run_serve_loop(workers: Sequence, requests: Sequence, *, deadline: float,
     stats = ServeStats.from_requests(pending, deadline,
                                      iterations=iterations)
     for c in counters:
-        setattr(stats, c,
-                sum(getattr(w, c, 0) for w in workers) - base[c])
+        setattr(stats, c, sum(getattr(w, c, 0) - b[c]
+                              for w, b in seen.values()))
     return stats

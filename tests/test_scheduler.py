@@ -246,13 +246,13 @@ def test_schedule_threads_spec_ks():
     res = schedule(half, "llama2-70b", task, deadline=8.0, rate=4.0,
                    iters=6, seed=0, paper_exact=True, spec_decode=True,
                    spec_alpha=0.8, spec_draft_cost=1e-4, max_spec_k=6)
-    assert res.spec_ks is not None
-    assert len(res.spec_ks) == res.assignment.num_replicas
-    assert all(0 <= k <= 6 for k in res.spec_ks)
-    # without spec_decode the field stays None (baseline behavior intact)
+    assert res.plan.spec_ks is not None
+    assert len(res.plan.spec_ks) == res.assignment.num_replicas
+    assert all(0 <= k <= 6 for k in res.plan.spec_ks)
+    # without spec_decode the dimension stays un-searched (None view)
     res0 = schedule(half, "llama2-70b", task, deadline=8.0, rate=4.0,
                     iters=6, seed=0, paper_exact=True)
-    assert res0.spec_ks is None
+    assert res0.plan.spec_ks is None
 
 
 def test_peak_rate_bisection():
