@@ -1,0 +1,145 @@
+"""Predicted-vs-observed cost calibration over a traced serve (the PR-10
+observability layer: repro.obs trace -> metrics -> calibration ->
+DriftDetector model-error signal).
+
+Setup: two colocated paged replicas serve one mixed workload under
+``VirtualClock``. The "planner" registers per-(replica, phase) predicted
+costs — exactly what ``launch.serve --calibrate`` derives from
+``cost_model.pipeline_phase_costs`` — as the virtual per-iteration /
+per-token costs both replicas were PLANNED at. Replica 0 runs at plan;
+replica 1 is configured ~30% slower than its plan (the degraded-GPU /
+stale-profile case the calibration loop exists to catch).
+
+The traced spans then close the loop:
+
+  * the calibration report shows ~0% relative error on replica 0 and the
+    injected ~30% on replica 1, per phase (prefill is per-TOKEN from the
+    chunked spans' token counts, decode per-SPAN) — asserting the error
+    math end to end rather than just that numbers came out;
+  * feeding the report into a ``DriftDetector`` fires the ``model_error``
+    drift signal naming a drifted phase — the hook ``core.resched`` uses
+    to trigger an online re-solve when the cost model stops matching
+    reality.
+
+Rows land in results/calibration.jsonl: one per (replica, phase) with
+predicted/observed/rel_err, plus a drift summary row whose
+``calibration_gap_x`` (observed/planned on the slow replica) is the
+trajectory headline.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, emit_json
+from repro.configs import get_config
+from repro.core.resched import DriftDetector
+from repro.models import model as M
+from repro.obs.calibration import CostCalibrator
+from repro.obs.trace import Tracer, validate_chrome_trace
+from repro.serving.continuous import PagedPipelineBatcher
+from repro.serving.loop import VirtualClock, run_serve_loop
+from repro.serving.pipeline import AsymmetricPipeline
+from repro.serving.request import Request
+
+MAX_LEN = 64
+BLOCK = 8
+CHUNK = 8
+# the planner's per-replica figures: seconds per decode iteration and per
+# prefill token (virtual units)
+PLAN_STEP = 1.0
+PLAN_TOKEN = 0.01
+SLOWDOWN = 1.3               # replica 1's reality vs its plan
+
+
+def _workload(cfg, n=8):
+    rng = np.random.RandomState(7)
+    reqs = []
+    for i in range(n):
+        prompt = rng.randint(0, cfg.vocab_size,
+                             size=int(rng.randint(12, 28))).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt,
+                            max_new_tokens=int(rng.randint(8, 14)),
+                            arrival=0.3 * i))
+    return reqs
+
+
+def run() -> None:
+    cfg = get_config("granite-8b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    dev = jax.devices()[0]
+    L = cfg.num_layers
+
+    def pipe():
+        return AsymmetricPipeline(cfg, params, [1, L - 1], [[dev], [dev]])
+
+    def replica(rid, slowdown):
+        return PagedPipelineBatcher(
+            pipe(), n_slots=4, max_len=MAX_LEN, block_size=BLOCK,
+            prefill_chunk=CHUNK, replica_id=rid,
+            virtual_step_cost=PLAN_STEP * slowdown,
+            prefill_token_cost=PLAN_TOKEN)
+
+    workers = [replica(0, 1.0), replica(1, SLOWDOWN)]
+    reqs = _workload(cfg)
+    tracer = Tracer()
+    for w in workers:          # Router.bind_tracer does this when serving
+        w.tracer = tracer      # through the engine; raw loops wire by hand
+    stats = run_serve_loop(workers, reqs, deadline=1e9,
+                           clock=VirtualClock(), tracer=tracer)
+    errs = validate_chrome_trace(tracer.to_chrome(),
+                                 require_spans=["prefill", "decode"])
+    assert not errs, errs
+
+    cal = CostCalibrator()
+    for rid in (0, 1):
+        cal.predict(rid, "decode", PLAN_STEP)
+        # engines charge virtual_step_cost * prefill_token_cost per token
+        cal.predict(rid, "prefill", PLAN_STEP * PLAN_TOKEN)
+    cal.observe_trace(tracer)
+    rows = cal.report()
+    assert rows, "no calibrated phases observed"
+    by = {(r["replica"], r["phase"]): r for r in rows}
+    for phase in ("prefill", "decode"):
+        if (0, phase) in by:
+            assert by[(0, phase)]["rel_err"] < 0.01, by[(0, phase)]
+        if (1, phase) in by:
+            got = by[(1, phase)]["rel_err"]
+            assert abs(got - (SLOWDOWN - 1.0)) < 0.05, by[(1, phase)]
+
+    det = DriftDetector(rate=1.0, model_error_threshold=0.1,
+                        model_error_min=2)
+    fed = cal.feed(det)
+    sig = det.poll(0.0)
+    assert sig is not None and sig.kind == "model_error", sig
+    emit("calibration/drift", 0.0,
+         f"fed={fed} rows -> {sig.describe()}")
+
+    for r in rows:
+        emit(f"calibration/r{r['replica']}/{r['phase']}", 0.0,
+             f"pred={r['predicted']:.4g} obs={r['observed']:.4g} "
+             f"rel_err={r['rel_err'] * 100:.1f}% spans={r['spans']}")
+        emit_json("calibration.jsonl",
+                  f"calibration_r{r['replica']}_{r['phase']}", {
+                      "arch": cfg.name, "replica": r["replica"],
+                      "phase": r["phase"],
+                      "predicted": float(r["predicted"]),
+                      "observed": float(r["observed"]),
+                      "rel_err": float(r["rel_err"]),
+                      "spans": r["spans"], "units": float(r["units"]),
+                  })
+    emit_json("calibration.jsonl", "calibration_drift", {
+        "arch": cfg.name, "n_requests": len(reqs),
+        "iterations": stats.iterations,
+        "trace_events": len(tracer.events),
+        "planned_step": PLAN_STEP,
+        "calibration_gap_x": float(SLOWDOWN),
+        "drift_fired": True, "drift_phase": sig.phase,
+        "drift_factor": float(sig.factor),
+        "rows_fed": fed,
+    })
+    emit("calibration/summary", 0.0, cal.summary())
+
+
+if __name__ == "__main__":
+    run()

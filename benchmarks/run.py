@@ -9,8 +9,9 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_case_study, bench_chaos, bench_continuous,
-                        bench_convergence, bench_cost_model,
+from benchmarks import (bench_calibration, bench_case_study, bench_chaos,
+                        bench_continuous, bench_convergence,
+                        bench_cost_model,
                         bench_disagg, bench_dryrun_table, bench_kernels,
                         bench_layout_breakdown, bench_offline_resilience,
                         bench_paged, bench_prefix, bench_prefix_cluster,
@@ -38,6 +39,7 @@ SUITES = {
     "quant_economics": bench_quant_economics.run,   # beyond-paper (int8)
     "quant_kv": bench_quant_kv.run,                 # beyond-paper (int8 KV)
     "dryrun_table": bench_dryrun_table.run,         # deliverable (g)
+    "calibration": bench_calibration.run,           # beyond-paper (HexTrace)
 }
 
 

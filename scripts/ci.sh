@@ -6,14 +6,16 @@
 #                          verify) + the spec==greedy smoke + the
 #                          quantized-KV smoke (fused-dequant kernels +
 #                          int8-pool serving) + the tiered cluster-prefix
-#                          smoke + the KVSAN serving smoke
+#                          smoke + the observability (HexTrace) smoke +
+#                          the KVSAN serving smoke
 #                          (~5 min on a laptop CPU)
 #   scripts/ci.sh --full   everything: full pytest (incl. @slow multi-device
 #                          subprocess sweeps), every serving smoke on 4
 #                          virtual devices (continuous/paged/prefix/disagg/
 #                          spec) plus the whole set again under the KVSAN
-#                          lifecycle sanitizer, and the benchmark-results +
-#                          oracle-registry schema guard
+#                          lifecycle sanitizer, the launch.serve --trace-out
+#                          smoke gated by the repro.obs.report CLI, and the
+#                          benchmark-results + oracle-registry schema guard
 #
 # No flag defaults to --full (the historical behavior). The smokes
 # themselves live in scripts/smoke_serving.py so humans can run or debug
@@ -64,6 +66,12 @@ echo "=== tiered cluster-prefix smoke (2 replicas, 4 virtual devices) ==="
 # stay token-identical to cold paged serving in every tier
 python scripts/smoke_serving.py cluster
 
+echo "=== observability smoke (HexTrace spans + metrics + report CLI) ==="
+# a traced + metered serve must reproduce the untraced run token for
+# token, and its Chrome-trace/metrics exports must pass the report CLI's
+# schema gate — tracing is pure observation in every tier
+python scripts/smoke_serving.py obs
+
 if [[ "$TIER" == "--fast" ]]; then
   echo "=== KVSAN serving + chaos smoke (page-lifecycle sanitizer) ==="
   # the paged + prefix suites again under KVSAN, plus the online-
@@ -80,7 +88,23 @@ if [[ "$TIER" == "--full" ]]; then
   echo "=== KVSAN serving smokes (page-lifecycle sanitizer) ==="
   # every serving suite again with the sanitizer shadowing the pools
   python scripts/smoke_serving.py serving prefix disagg cluster spec quant \
-    chaos --kvsan
+    obs chaos --kvsan
+
+  echo "=== trace smoke (launch.serve --trace-out -> report CLI gate) ==="
+  # the full CLI spine with tracing on: serve, export a Chrome trace +
+  # metrics JSONL + the predicted-vs-observed calibration table, then
+  # gate the artifacts on the report CLI's schema validation
+  TRACE_TMP="$(mktemp -d)"
+  trap 'rm -rf "$TRACE_TMP"' EXIT
+  python -m repro.launch.serve --arch granite-8b --reduced \
+    --cluster case_study --rate 4 --duration 1 --deadline 60 \
+    --out-len 4 --search-iters 2 --policy continuous \
+    --cache-layout paged --block-size 8 \
+    --trace-out "$TRACE_TMP/trace.json" \
+    --metrics-out "$TRACE_TMP/metrics.jsonl" --calibrate
+  python -m repro.obs.report "$TRACE_TMP/metrics.jsonl" \
+    --trace "$TRACE_TMP/trace.json" \
+    --require-spans serve,queue_wait,iteration,prefill,decode
 
   echo "=== benchmark results + oracle registry schema guard ==="
   python -m benchmarks.run --check

@@ -25,6 +25,9 @@ Suites:
            materialized-dequant pages, tolerance vs the pure-JAX quant
            oracles), then int8-pool serving on the 4-device pipeline
            (greedy tokens vs fp32, resident-byte savings reported)
+  obs      HexTrace observability: a traced + metered serve reproduces the
+           untraced one token for token, and the exported Chrome trace +
+           metrics JSONL pass the report CLI's schema gate
 
 Each suite asserts hard invariants and prints one OK line; any failure is
 a non-zero exit. The multi-device suites force 4 virtual CPU devices
@@ -393,6 +396,55 @@ def suite_quant() -> None:
         f"{stats_q.summary()}")
 
 
+def suite_obs() -> None:
+    import tempfile
+    from repro.obs.metrics import MetricsRegistry
+    from repro.obs.report import main as report_main
+    from repro.obs.trace import Tracer, validate_chrome_trace
+    from repro.serving.loop import VirtualClock
+    from repro.serving.request import shared_prefix_workload
+
+    cfg, asg = _setup()
+
+    def wl():
+        return shared_prefix_workload(rate=6.0, duration=1.5,
+                                      vocab=cfg.vocab_size, shared_len=24,
+                                      unique_len=6, out_len=4, seed=9)
+
+    def eng():
+        return _engine(cfg, asg, cache_layout="paged", block_size=8,
+                       prefix_caching=True, prefill_chunk=16)
+
+    # tracing is pure observation: the traced serve must reproduce the
+    # untraced one token for token
+    reqs_off = wl()
+    eng().serve(reqs_off, deadline=1e9, clock=VirtualClock())
+    reqs_on = wl()
+    tracer, metrics = Tracer(), MetricsRegistry()
+    stats = eng().serve(reqs_on, deadline=1e9, clock=VirtualClock(),
+                        tracer=tracer, metrics=metrics)
+    for ro, rt in zip(reqs_off, reqs_on):
+        assert list(ro.output) == list(rt.output), (ro.rid,)
+    errs = validate_chrome_trace(
+        tracer.to_chrome(),
+        require_spans=["serve", "queue_wait", "iteration", "prefill",
+                       "decode"])
+    assert not errs, errs
+    assert metrics.total("serve_n_requests") == len(reqs_on), \
+        metrics.collect()
+    # exported artifacts must survive the report CLI's schema gate
+    with tempfile.TemporaryDirectory() as td:
+        trace_p = os.path.join(td, "trace.json")
+        metrics_p = os.path.join(td, "metrics.jsonl")
+        tracer.write(trace_p)
+        metrics.to_jsonl(metrics_p)
+        rc = report_main([metrics_p, "--trace", trace_p,
+                          "--require-spans", "prefill,decode"])
+        assert rc == 0, rc
+    _ok(f"traced == untraced, {len(tracer.events)} events validate "
+        f"({stats.summary()})")
+
+
 def suite_chaos() -> None:
     from repro.configs import get_config
     from repro.core.plan import Assignment, PipelinePlan, StagePlan
@@ -476,6 +528,7 @@ SUITES = {
     "cluster": suite_cluster,
     "spec": suite_spec,
     "quant": suite_quant,
+    "obs": suite_obs,
     "chaos": suite_chaos,
 }
 

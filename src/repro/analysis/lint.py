@@ -34,6 +34,11 @@ Rules
 ``unseeded-rng``       global-state RNG draws (``random.*``,
                        ``np.random.*``) instead of an explicitly seeded
                        ``default_rng``/``RandomState``/``PRNGKey``.
+``span-pairing``       a ``tracer.begin(...)`` in a function with no
+                       ``tracer.end(...)`` anywhere in the same function.
+                       An unclosed span corrupts the Chrome-trace export
+                       (``openSpans`` validation fails); prefer the
+                       ``with tracer.span(...)`` context manager.
 """
 from __future__ import annotations
 
@@ -54,6 +59,7 @@ RULES: Dict[str, str] = {
     "bare-except": "bare except: swallows every exception",
     "mutable-default": "mutable default argument",
     "unseeded-rng": "unseeded global-state RNG",
+    "span-pairing": "tracer.begin() with no tracer.end() in the function",
 }
 
 # one-time-setup functions where jax.jit construction is the sanctioned
@@ -142,6 +148,10 @@ class _Visitor(ast.NodeVisitor):
         # per-class acquire sites, resolved when the class closes
         self._acquires: Dict[int, List[ast.Call]] = {}
         self._releases: Dict[int, bool] = {}
+        # per-function tracer.begin sites / tracer.end presence, resolved
+        # when the function closes (span-pairing)
+        self._span_begins: List[List[ast.Call]] = []
+        self._span_ends: List[bool] = []
 
     def _add(self, node: ast.AST, rule: str, message: str) -> None:
         self.findings.append(
@@ -150,6 +160,8 @@ class _Visitor(ast.NodeVisitor):
     # -- defs --------------------------------------------------------
 
     def _visit_func(self, node) -> None:
+        self._span_begins.append([])
+        self._span_ends.append(False)
         if node.name.endswith("_pallas") and not self._func_stack \
                 and not self._class_stack:
             if node.name not in _registry.KERNEL_ORACLES:
@@ -172,6 +184,15 @@ class _Visitor(ast.NodeVisitor):
         self._func_stack.append(node.name)
         self.generic_visit(node)
         self._func_stack.pop()
+        begins = self._span_begins.pop()
+        ended = self._span_ends.pop()
+        if begins and not ended:
+            for call in begins:
+                self._add(call, "span-pairing",
+                          f"tracer.begin() in '{node.name}' has no "
+                          "matching tracer.end(); an unclosed span "
+                          "corrupts the trace export — prefer "
+                          "'with tracer.span(...)'")
 
     visit_FunctionDef = _visit_func
     visit_AsyncFunctionDef = _visit_func
@@ -241,6 +262,17 @@ class _Visitor(ast.NodeVisitor):
                               f"'jnp.{attr}' shape derived from 'len(...)'"
                               " defeats compile-shape bucketing; pad to a "
                               "fixed bucket")
+
+        # span-pairing bookkeeping: begin/end on a receiver named
+        # *tracer (self.tracer, tracer, w.tracer, ...)
+        if self._span_begins:
+            recv = _dotted(func.value)
+            if recv is not None and \
+                    recv.split(".")[-1].lower().endswith("tracer"):
+                if attr == "begin":
+                    self._span_begins[-1].append(node)
+                elif attr == "end":
+                    self._span_ends[-1] = True
 
         # refcount-pairing bookkeeping
         if self._class_stack:

@@ -329,6 +329,11 @@ class PhaseCosts:
     decode_latency: float
     decode_bottleneck: float
 
+    def as_dict(self) -> dict:
+        """Plain-dict view for JSON surfaces (calibration reports,
+        bench rows)."""
+        return dataclasses.asdict(self)
+
 
 def pipeline_phase_costs(cluster: Cluster, stages: List[Sequence[int]],
                          layer_split: List[int], model: ModelProfile,

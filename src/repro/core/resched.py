@@ -44,12 +44,15 @@ from repro.core.plan import DeploymentPlan, ReplicaSpec
 class DriftSignal:
     """One detector firing: why the incumbent plan is suspect.
 
-    kind: "rate_spike" | "mix_shift" | "acceptance_drift" | "replica_death"
+    kind: "rate_spike" | "mix_shift" | "acceptance_drift" |
+    "replica_death" | "model_error"
     factor: observed / planned for the drifted quantity (rate or mean
-    prompt length; acceptance reports observed alpha directly).
+    prompt length; acceptance reports observed alpha directly;
+    model_error reports 1 + mean relative cost-model error).
     observed_rate / observed_prompt_len: the window estimates a re-solve
     should plan against (0 when the window was empty).
     dead: replica keys (device-id frozensets) confirmed dead, if any.
+    phase: the worst-calibrated phase, for model_error signals.
     """
 
     kind: str
@@ -59,10 +62,14 @@ class DriftSignal:
     observed_prompt_len: float = 0.0
     observed_alpha: float = 0.0
     dead: Tuple[FrozenSet[int], ...] = ()
+    phase: str = ""
 
     def describe(self) -> str:
         if self.kind == "replica_death":
             return f"replica_death x{len(self.dead)}"
+        if self.kind == "model_error" and self.phase:
+            return f"model_error factor={self.factor:.2f} " \
+                   f"worst={self.phase}"
         return f"{self.kind} factor={self.factor:.2f}"
 
 
@@ -85,7 +92,9 @@ class DriftDetector:
                  spec_alpha: float = 0.0, window: float = 10.0,
                  min_events: int = 8, rate_threshold: float = 3.0,
                  mix_threshold: float = 2.0,
-                 alpha_slack: float = 0.25):
+                 alpha_slack: float = 0.25,
+                 model_error_threshold: float = 0.5,
+                 model_error_min: int = 2):
         assert rate > 0.0, rate
         self.planned_rate = rate
         self.planned_prompt_len = prompt_len
@@ -95,10 +104,13 @@ class DriftDetector:
         self.rate_threshold = rate_threshold
         self.mix_threshold = mix_threshold
         self.alpha_slack = alpha_slack
+        self.model_error_threshold = model_error_threshold
+        self.model_error_min = model_error_min
         self._admits: Deque[Tuple[float, int]] = collections.deque()
         self._spec_proposed = 0
         self._spec_accepted = 0
         self._dead: List[FrozenSet[int]] = []
+        self._model_errors: List[Tuple[str, float]] = []
         self.signals_fired: List[DriftSignal] = []
 
     # ---- observations ----------------------------------------------------
@@ -113,6 +125,15 @@ class DriftDetector:
     def observe_death(self, key: FrozenSet[int]) -> None:
         if key not in self._dead:
             self._dead.append(frozenset(key))
+
+    def observe_model_error(self, phase: str, predicted: float,
+                            observed: float) -> None:
+        """One calibration row (repro.obs.calibration.CostCalibrator.feed):
+        how far a phase's observed seconds/unit landed from the cost
+        model's prediction the incumbent plan was scored with."""
+        if predicted > 0.0:
+            rel = abs(observed - predicted) / predicted
+            self._model_errors.append((phase, rel))
 
     def _trim(self, now: float) -> None:
         w = self._admits
@@ -138,6 +159,11 @@ class DriftDetector:
             return self.planned_alpha
         return self._spec_accepted / self._spec_proposed
 
+    def window_model_error(self) -> float:
+        if not self._model_errors:
+            return 0.0
+        return float(np.mean([e for _, e in self._model_errors]))
+
     # ---- the trigger -----------------------------------------------------
     def poll(self, now: float) -> Optional[DriftSignal]:
         sig = self._poll(now)
@@ -156,36 +182,51 @@ class DriftDetector:
                                observed_rate=self.window_rate(now),
                                observed_prompt_len=self
                                .window_prompt_len(now))
-        if len(self._admits) < self.min_events:
-            return None
-        rate = self.window_rate(now)
-        if rate > 0.0:
-            f = rate / self.planned_rate
-            if f >= self.rate_threshold or f <= 1.0 / self.rate_threshold:
-                self.planned_rate = rate          # re-anchor: fire once
-                return DriftSignal(kind="rate_spike", at=now, factor=f,
-                                   observed_rate=rate,
+        if len(self._admits) >= self.min_events:
+            rate = self.window_rate(now)
+            if rate > 0.0:
+                f = rate / self.planned_rate
+                if f >= self.rate_threshold \
+                        or f <= 1.0 / self.rate_threshold:
+                    self.planned_rate = rate      # re-anchor: fire once
+                    return DriftSignal(kind="rate_spike", at=now, factor=f,
+                                       observed_rate=rate,
+                                       observed_prompt_len=self
+                                       .window_prompt_len(now))
+            plen = self.window_prompt_len(now)
+            if self.planned_prompt_len > 0.0 and plen > 0.0:
+                f = plen / self.planned_prompt_len
+                if f >= self.mix_threshold \
+                        or f <= 1.0 / self.mix_threshold:
+                    self.planned_prompt_len = plen
+                    return DriftSignal(kind="mix_shift", at=now, factor=f,
+                                       observed_rate=rate,
+                                       observed_prompt_len=plen)
+            if self.planned_alpha > 0.0 and self._spec_proposed >= \
+                    self.min_events:
+                alpha = self.window_alpha()
+                if abs(alpha - self.planned_alpha) > self.alpha_slack:
+                    base = self.planned_alpha
+                    self.planned_alpha = alpha
+                    self._spec_proposed = self._spec_accepted = 0
+                    return DriftSignal(kind="acceptance_drift", at=now,
+                                       factor=alpha / max(base, 1e-9),
+                                       observed_rate=rate,
+                                       observed_alpha=alpha)
+        # calibration drift, lowest priority: the cost model the incumbent
+        # plan was scored with no longer matches observed phase costs —
+        # traffic may look in-band while every placement score is stale
+        if len(self._model_errors) >= self.model_error_min:
+            err = self.window_model_error()
+            if err > self.model_error_threshold:
+                worst = max(self._model_errors, key=lambda pe: pe[1])[0]
+                self._model_errors.clear()        # re-anchor: fire once
+                return DriftSignal(kind="model_error", at=now,
+                                   factor=1.0 + err,
+                                   observed_rate=self.window_rate(now),
                                    observed_prompt_len=self
-                                   .window_prompt_len(now))
-        plen = self.window_prompt_len(now)
-        if self.planned_prompt_len > 0.0 and plen > 0.0:
-            f = plen / self.planned_prompt_len
-            if f >= self.mix_threshold or f <= 1.0 / self.mix_threshold:
-                self.planned_prompt_len = plen
-                return DriftSignal(kind="mix_shift", at=now, factor=f,
-                                   observed_rate=rate,
-                                   observed_prompt_len=plen)
-        if self.planned_alpha > 0.0 and self._spec_proposed >= \
-                self.min_events:
-            alpha = self.window_alpha()
-            if abs(alpha - self.planned_alpha) > self.alpha_slack:
-                base = self.planned_alpha
-                self.planned_alpha = alpha
-                self._spec_proposed = self._spec_accepted = 0
-                return DriftSignal(kind="acceptance_drift", at=now,
-                                   factor=alpha / max(base, 1e-9),
-                                   observed_rate=rate,
-                                   observed_alpha=alpha)
+                                   .window_prompt_len(now),
+                                   phase=worst)
         return None
 
 

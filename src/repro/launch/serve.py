@@ -75,9 +75,47 @@ def main() -> None:
     engine = InferenceEngine.from_config(cfg, plan, sv, assignment=asg,
                                          cluster=pool)
     reqs = sv.workload(cfg.vocab_size)
+
+    # ---- observability (repro.obs) --------------------------------------
+    tracer = metrics = None
+    if sv.trace_out or sv.calibrate:
+        from repro.obs.trace import Tracer
+        tracer = Tracer()
+    if sv.metrics_out or sv.calibrate:
+        from repro.obs.metrics import MetricsRegistry
+        metrics = MetricsRegistry()
+
     print(f"serving {len(reqs)} requests...")
-    stats = engine.serve(reqs, deadline=sv.deadline)
+    stats = engine.serve(reqs, deadline=sv.deadline, tracer=tracer,
+                         metrics=metrics)
     print("  " + stats.summary())
+
+    if tracer is not None and metrics is not None:
+        from repro.obs.metrics import phase_histograms_from_trace
+        phase_histograms_from_trace(tracer, metrics)
+    if sv.trace_out:
+        tracer.write(sv.trace_out)
+        print(f"  trace: {sv.trace_out} ({len(tracer.events)} events)")
+    if sv.metrics_out:
+        metrics.to_jsonl(sv.metrics_out)
+        print(f"  metrics: {sv.metrics_out}")
+    if sv.calibrate:
+        from repro.core import cost_model as cm
+        from repro.obs.calibration import (CostCalibrator,
+                                           predictions_from_phase_costs)
+        from repro.obs.report import calibration_table
+        cal = CostCalibrator()
+        task = sv.task()
+        profile = cm.ModelProfile.from_config(
+            cfg_full, bytes_per_el=task.bytes_per_el)
+        for i, pipe in enumerate(plan.assignment.pipelines):
+            pc = cm.pipeline_phase_costs(
+                pool, [list(s.device_ids) for s in pipe.stages],
+                [s.num_layers for s in pipe.stages], profile, task)
+            predictions_from_phase_costs(cal, i, pc, task.s_in)
+        cal.observe_trace(tracer)
+        for line in calibration_table(cal):
+            print("  " + line)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,28 @@
+"""HexTrace observability: span tracing, metrics, and cost calibration.
+
+Three layers, each consumable alone (docs/observability.md):
+
+  * ``repro.obs.trace``        — ``Tracer`` riding the serving clock;
+    Chrome-trace/Perfetto JSON export; ``NULL_TRACER`` zero-overhead off
+    switch.
+  * ``repro.obs.metrics``      — ``MetricsRegistry`` of labeled
+    counters/gauges/histograms with deterministic JSONL export;
+    ``ServeStats`` publishes into it as a back-compat view.
+  * ``repro.obs.calibration``  — predicted (cost_model/slo_sim) vs
+    observed (span durations) per-(replica, phase) error report feeding
+    ``core.resched.DriftDetector``'s model-error signal.
+
+``python -m repro.obs.report`` summarizes/validates the exports.
+"""
+from repro.obs.calibration import (CostCalibrator,
+                                   predictions_from_phase_costs)
+from repro.obs.metrics import (MetricsRegistry,
+                               phase_histograms_from_trace)
+from repro.obs.trace import (NULL_TRACER, Span, Tracer,
+                             validate_chrome_trace)
+
+__all__ = [
+    "CostCalibrator", "MetricsRegistry", "NULL_TRACER", "Span", "Tracer",
+    "phase_histograms_from_trace", "predictions_from_phase_costs",
+    "validate_chrome_trace",
+]

@@ -63,6 +63,9 @@ class BlockPool:
         # optional PrefixIndex notified on 1<->2 ref transitions so it can
         # keep its evictable count O(1) (set by PrefixIndex.__init__)
         self.observer = None
+        # occupancy high-water mark, exported as the kv_pool_peak_blocks
+        # gauge (repro.obs.metrics)
+        self.peak_used = 0
 
     @property
     def n_free(self) -> int:
@@ -83,6 +86,9 @@ class BlockPool:
         for b in out:
             assert self._ref[b] == 0, b
             self._ref[b] = 1
+        used = self.n_used
+        if used > self.peak_used:
+            self.peak_used = used
         return out
 
     def incref(self, bid: int) -> None:

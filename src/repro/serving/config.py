@@ -162,6 +162,17 @@ class ServingConfig:
                             "sanitizer; leaks surface as "
                             "ServeStats.kvsan_leaks (paged layout)")
 
+    # ---- observability (repro.obs) --------------------------------------
+    trace_out: str = _f("", "write a Chrome-trace/Perfetto JSON of the "
+                            "serve's lifecycle spans to this path "
+                            "(empty = tracing off, zero overhead)")
+    metrics_out: str = _f("", "write the serve's metrics registry "
+                              "(counters/gauges/histograms) as JSONL to "
+                              "this path")
+    calibrate: bool = _f(False, "record predicted phase costs alongside "
+                                "observed span durations and print the "
+                                "predicted-vs-observed calibration table")
+
     # ---- argparse / serialization --------------------------------------
 
     @classmethod

@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
+from repro.obs.trace import NULL_TRACER
 from repro.serving.block_manager import (BlockPool, BlockTable, HostPagePool,
                                          PrefixIndex, blocks_for_tokens,
                                          chunk_hashes)
@@ -87,6 +88,10 @@ class SlotEngine:
         self.max_len = max_len
         self.pad_id = pad_id
         self.virtual_step_cost = virtual_step_cost
+        # HexTrace: the Router (or a test) swaps in a live Tracer; the
+        # null default keeps every emission site a single attribute check
+        self.tracer = NULL_TRACER
+        self.replica_id = 0
         self.slots = [_Slot() for _ in range(n_slots)]
         self._queue: Deque[Request] = deque()
         self._last_logits = np.zeros((n_slots, vocab_size), np.float32)
@@ -195,6 +200,18 @@ class SlotEngine:
         for i, r in enumerate(reqs):
             toks[i, :lens[i]] = r.prompt                   # right pad
         logits = self._prefill_insert(toks, plens, list(slot_ids))
+        if self.tracer.enabled:
+            # one-shot joint prefill: every admitted prompt completes its
+            # prefill within this iteration
+            ntok = int(lens.sum())
+            self.tracer.complete(
+                "prefill",
+                self.virtual_step_cost
+                * getattr(self, "prefill_token_cost", 0.0) * ntok,
+                pid=self.replica_id, tokens=ntok, slots=m)
+            for r in reqs:
+                self.tracer.mark(r.rid, "prefill_finish",
+                                 self.tracer.now())
         for i, (r, slot) in enumerate(zip(reqs, slot_ids)):
             self._last_logits[slot] = np.asarray(logits[i])
             self.slots[slot] = _Slot(req=r, pos=int(lens[i]),
@@ -206,18 +223,30 @@ class SlotEngine:
         self._before_decode()      # paged: grow tables, maybe preempt
         toks = np.zeros((self.n_slots,), np.int32)
         pos = np.zeros((self.n_slots,), np.int32)
+        n_dec = 0
         for i, s in enumerate(self.slots):
             if s.decoding:         # mid-prefill slots sit this one out
                 toks[i] = int(self._last_logits[i].argmax())
                 pos[i] = s.pos
+                n_dec += 1
         logits = self._decode_all(toks, pos)
+        if self.tracer.enabled and n_dec:
+            # one joint decode step; its virtual cost is the flat
+            # iteration cost whatever the batch width
+            self.tracer.complete("decode", self.virtual_step_cost, ts=now,
+                                 pid=self.replica_id, tokens=n_dec)
         done = []
         for i, s in enumerate(self.slots):
             if not s.decoding:
                 continue
             s.out.append(int(toks[i]))
             if len(s.out) == 1 and s.req is not None:
-                s.req.first_token_time = now
+                # first-wins: a preempt-recompute re-produces the token
+                # stream, but the client saw the first token at the
+                # ORIGINAL emission (trace marks share this discipline)
+                if s.req.first_token_time is None:
+                    s.req.first_token_time = now
+                self.tracer.mark(s.req.rid, "first_token", now)
             s.pos += 1
             s.remaining -= 1
             self._last_logits[i] = logits[i]
@@ -240,7 +269,9 @@ class SlotEngine:
         virtual clock: deterministic latencies in iteration units."""
         clock = WallClock() if realtime else VirtualClock()
         return run_serve_loop([self], requests, deadline=deadline,
-                              clock=clock)
+                              clock=clock,
+                              tracer=(self.tracer if self.tracer.enabled
+                                      else None))
 
     # seed-API shims (tests, notebooks) ------------------------------------
     def insert(self, req: Request) -> int:
@@ -664,6 +695,21 @@ class PagedPipelineBatcher(SlotEngine):
             return self._migrations[0][0]
         return None
 
+    def metrics_gauges(self):
+        """Gauge snapshot for the loop's metrics publication: per-stage
+        device-pool occupancy (current + high-water) and host-tier
+        residency."""
+        out = []
+        for si, (pool, host) in enumerate(zip(self._pools, self._host)):
+            if pool is None:
+                continue
+            st = {"stage": si}
+            out.append(("kv_pool_used_blocks", st, pool.n_used))
+            out.append(("kv_pool_peak_blocks", st, pool.peak_used))
+            if host is not None:
+                out.append(("host_pool_used_blocks", st, len(host)))
+        return out
+
     # ---- KV migration (disaggregated prefill/decode) -----------------------
     def migrate_in(self, mig: KVMigration, ready: float) -> None:
         """Accept a finished prefill from another replica; it becomes
@@ -766,6 +812,7 @@ class PagedPipelineBatcher(SlotEngine):
                 last_logits=np.array(self._last_logits[i]),
                 kv_bytes=KVMigration.payload_bytes(layer_kv))
             s.req.prefill_finish_time = now
+            self.tracer.mark(s.req.rid, "prefill_finish", now)
             self.migrations += 1
             self.migrated_kv_bytes += mig.kv_bytes
             self.dispatcher.send(self, mig, now)
@@ -809,6 +856,11 @@ class PagedPipelineBatcher(SlotEngine):
                 out_tokens=np.asarray(s.out, np.int32)))
             self.migrations += 1
             self.migrated_kv_bytes += migs[-1].kv_bytes
+            if self.tracer.enabled:
+                self.tracer.instant("live_move", ts=now,
+                                    pid=self.replica_id, rid=s.req.rid,
+                                    tokens=s.pos,
+                                    bytes=migs[-1].kv_bytes)
             self._on_slot_free(i)
             self.slots[i] = _Slot()
         return migs
@@ -1102,6 +1154,12 @@ class PagedPipelineBatcher(SlotEngine):
                   for tabs in self._tables]
         logits = np.asarray(self.pipeline.context_slots_paged(
             toks, lens, starts, tables))
+        if self.tracer.enabled:
+            ntok = int(lens.sum())
+            self.tracer.complete(
+                "prefill",
+                self.virtual_step_cost * self.prefill_token_cost * ntok,
+                pid=self.replica_id, tokens=ntok, slots=m)
         for row, (i, c) in enumerate(pairs):
             s = self.slots[i]
             s.pos += c
@@ -1113,6 +1171,8 @@ class PagedPipelineBatcher(SlotEngine):
                 self._last_logits[i] = logits[row]
                 self._register_prefix(i, s)
                 self._bt_cache = None
+                self.tracer.mark(s.req.rid, "prefill_finish",
+                                 self.tracer.now())
 
     def _register_prefix(self, i: int, s: _Slot) -> None:
         """Index the prompt's full blocks so later prompts can alias them
@@ -1152,6 +1212,11 @@ class PagedPipelineBatcher(SlotEngine):
             host.put(h, self.pipeline.extract_stage_pages(si, [bid]))
             self.host_demotions += 1
             self._iter_swap_blocks += 1
+            if self.tracer.enabled:
+                self.tracer.complete(
+                    "host_spill",
+                    self.virtual_step_cost * self.host_swap_cost,
+                    pid=self.replica_id, tid=si)
             if si == self._rep_stage and self.cluster_dir is not None:
                 self.cluster_dir.publish(h, self.replica_id, "host")
         return spill
@@ -1290,6 +1355,11 @@ class PagedPipelineBatcher(SlotEngine):
                 promoted = True
                 self.host_promotions += 1
                 self._iter_swap_blocks += 1
+                if self.tracer.enabled:
+                    self.tracer.complete(
+                        "host_promote",
+                        self.virtual_step_cost * self.host_swap_cost,
+                        pid=self.replica_id, tid=si)
             elif kind == "fetch":
                 dest[si] = [alloc[si]]
         if need_fetch:
@@ -1308,8 +1378,13 @@ class PagedPipelineBatcher(SlotEngine):
                 li += n_layers
             self.prefix_fetches += 1
             self.prefix_fetched_bytes += fetch_bytes
-            self._iter_fetch_cost += self.cluster_link.delay(
+            fetch_cost = self.cluster_link.delay(
                 fetch_bytes, src_rid, self.replica_id)
+            self._iter_fetch_cost += fetch_cost
+            if self.tracer.enabled:
+                self.tracer.complete("prefix_fetch", fetch_cost,
+                                     pid=self.replica_id,
+                                     src=src_rid, bytes=fetch_bytes)
         if promoted:
             self.host_hit_tokens += self.block_size
         # register + alias: the index takes its own reference, the table
@@ -1360,6 +1435,11 @@ class PagedPipelineBatcher(SlotEngine):
         self._queue.appendleft(s.req)
         self.slots[i] = _Slot()
         self.preemptions += 1
+        if self.tracer.enabled:
+            # the recompute itself shows up as this request's next
+            # prefill span; the eviction is the instant
+            self.tracer.instant("preempt", pid=self.replica_id,
+                                rid=s.req.rid, slot=i, pos=s.pos)
 
     def _on_slot_free(self, i: int) -> None:
         for tabs in self._tables:
@@ -1398,7 +1478,14 @@ class PagedPipelineBatcher(SlotEngine):
             items.append((i, bonus, hist, cap))
         props = self._proposer.propose(
             [(i, hist, cap) for i, _, hist, cap in items])
-        self._iter_spec_proposed += sum(len(p) for p in props.values())
+        n_prop = sum(len(p) for p in props.values())
+        self._iter_spec_proposed += n_prop
+        if self.tracer.enabled and n_prop:
+            self.tracer.complete(
+                "spec_propose",
+                self.virtual_step_cost * self.spec.draft_token_cost
+                * n_prop,
+                ts=now, pid=self.replica_id, tokens=n_prop)
         # block growth + copy-on-write for the whole chunk, oldest first
         plan = {}
         empty = np.zeros(0, np.int32)
@@ -1444,6 +1531,12 @@ class PagedPipelineBatcher(SlotEngine):
                         int(starts[i]), self.block_size)
         logits = np.asarray(self.pipeline.verify_slots_paged(
             toks, qlen, starts, tables))
+        if self.tracer.enabled:
+            # the multi-token verification step is the iteration's target
+            # pass: flat iteration cost, like a plain decode step
+            self.tracer.complete("spec_verify", self.virtual_step_cost,
+                                 ts=now, pid=self.replica_id,
+                                 slots=len(plan))
         done = []
         for i, (bonus, drafts) in plan.items():
             s = self.slots[i]
@@ -1456,7 +1549,10 @@ class PagedPipelineBatcher(SlotEngine):
             # token — its argmax is the next step's bonus token
             self._last_logits[i] = logits[i, a]
             if not s.out and s.req is not None:
-                s.req.first_token_time = now
+                # first-wins across preempt-recompute, like plain decode
+                if s.req.first_token_time is None:
+                    s.req.first_token_time = now
+                self.tracer.mark(s.req.rid, "first_token", now)
             s.out.extend(commit)
             s.pos += len(commit)
             s.remaining -= len(commit)
@@ -1469,6 +1565,10 @@ class PagedPipelineBatcher(SlotEngine):
                     freed += tabs[i].truncate(s.pos)
             if freed:
                 self._bt_cache = None
+                if self.tracer.enabled:
+                    self.tracer.instant("spec_rollback", ts=now,
+                                        pid=self.replica_id, slot=i,
+                                        blocks=freed)
             if s.remaining <= 0 or s.pos >= self.max_len - 1:
                 done.append((s.req, s.out))
                 self._on_slot_free(i)

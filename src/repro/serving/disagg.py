@@ -37,6 +37,8 @@ from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
+
 GBPS = 1e9 / 8.0                   # bytes per second per Gbit/s
 
 
@@ -150,6 +152,7 @@ class KVDispatcher:
         assert targets, "disaggregation needs at least one decode replica"
         self.targets = list(targets)
         self.link = link if link is not None else KVLink()
+        self.tracer = NULL_TRACER      # Router.serve swaps in the live one
 
     def send(self, src, mig: KVMigration, now: float) -> float:
         """Deliver `mig` to the least-loaded decode replica; returns the
@@ -159,6 +162,11 @@ class KVDispatcher:
                                 getattr(src, "replica_id", 0),
                                 dst.replica_id)
         ready = now + delay
+        if self.tracer.enabled:
+            self.tracer.complete("kv_migration", delay, ts=now,
+                                 pid=getattr(src, "replica_id", 0),
+                                 rid=mig.req.rid, dst=dst.replica_id,
+                                 bytes=mig.kv_bytes)
         dst.migrate_in(mig, ready)
         return ready
 

@@ -286,5 +286,6 @@ class InferenceEngine:
         return [out[i] for i in range(len(prompts))]
 
     def serve(self, requests: Sequence[Request], *, deadline: float,
-              clock=None) -> ServeStats:
-        return self.router.serve(requests, deadline, clock=clock)
+              clock=None, tracer=None, metrics=None) -> ServeStats:
+        return self.router.serve(requests, deadline, clock=clock,
+                                 tracer=tracer, metrics=metrics)

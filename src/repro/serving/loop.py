@@ -45,6 +45,8 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs.trace import NULL_TRACER
+
 
 # ---------------------------------------------------------------------------
 # Clocks
@@ -126,6 +128,9 @@ class ServeStats:
     prefix_fetched_bytes: int = 0  # payload bytes shipped for those fetches
     # KVSAN runtime sanitizer (PagedPipelineBatcher(kvsan=True))
     kvsan_leaks: int = 0           # pool references no table/index explains
+    # total requests this replay accounted (served + rejected + dropped);
+    # merge() weights attainment by it
+    n_requests: int = 0
 
     def summary(self) -> str:
         lat = np.asarray(self.latencies)
@@ -189,7 +194,90 @@ class ServeStats:
               if r.start_time is not None]
         return cls(latencies=lats, attainment=att,
                    throughput=len(served) / max(dur, 1e-9),
-                   iterations=iterations, queue_delays=qd, dropped=dropped)
+                   iterations=iterations, queue_delays=qd, dropped=dropped,
+                   n_requests=len(requests))
+
+    # ---- aggregation across replicas / runs ------------------------------
+    @classmethod
+    def merge(cls, parts: Sequence["ServeStats"]) -> "ServeStats":
+        """Aggregate stats across replicas or runs: integer counters sum,
+        percentile inputs (latencies, queue delays) concatenate, SLO
+        attainment weights by each part's request count, and throughput
+        adds (parts are concurrent replicas of one serve window; for
+        sequential runs, recompute from the merged requests instead).
+        Degenerate inputs are safe: no parts -> the neutral stats, parts
+        with zero requests contribute nothing to attainment."""
+        parts = list(parts)
+        if not parts:
+            return cls(latencies=[], attainment=1.0, throughput=0.0)
+        out = cls(latencies=[], attainment=1.0, throughput=0.0)
+        for f in dataclasses.fields(cls):
+            if f.name in ("latencies", "queue_delays", "attainment",
+                          "throughput"):
+                continue
+            setattr(out, f.name, sum(getattr(p, f.name) for p in parts))
+        for p in parts:
+            out.latencies.extend(p.latencies)
+            out.queue_delays.extend(p.queue_delays)
+            out.throughput += p.throughput
+        total = sum(p.n_requests for p in parts)
+        out.attainment = (sum(p.attainment * p.n_requests for p in parts)
+                          / total) if total else 1.0
+        return out
+
+    # ---- metrics-registry view (repro.obs.metrics) -----------------------
+    def publish(self, registry, **labels) -> None:
+        """Publish this stats object into a MetricsRegistry: every counter
+        field as a ``serve_<name>`` counter, attainment/throughput as
+        gauges, and the percentile inputs as histograms. ServeStats stays
+        the back-compat summary surface; the registry is the typed
+        stream."""
+        for f in dataclasses.fields(self):
+            if f.name in ("latencies", "queue_delays", "attainment",
+                          "throughput"):
+                continue
+            registry.counter("serve_" + f.name, **labels).inc(
+                getattr(self, f.name))
+        registry.gauge("serve_attainment", **labels).set(self.attainment)
+        registry.gauge("serve_throughput", **labels).set(self.throughput)
+        lat = registry.histogram("request_latency_seconds", **labels)
+        for v in self.latencies:
+            lat.observe(float(v))
+        qd = registry.histogram("queue_delay_seconds", **labels)
+        for v in self.queue_delays:
+            qd.observe(float(v))
+
+    @classmethod
+    def from_metrics(cls, registry, **labels) -> "ServeStats":
+        """Rebuild a ServeStats view from a registry ``publish`` wrote to.
+        Counters and gauges reconstruct exactly; latency/queue-delay
+        SAMPLES are approximated by histogram bucket upper bounds (the
+        registry keeps distributions, not raw values), so percentiles are
+        bucket-resolution estimates."""
+        out = cls(latencies=[], attainment=1.0, throughput=0.0)
+        for f in dataclasses.fields(cls):
+            if f.name in ("latencies", "queue_delays", "attainment",
+                          "throughput"):
+                continue
+            v = registry.value("serve_" + f.name, **labels)
+            if v is not None:
+                setattr(out, f.name, int(v))
+        att = registry.value("serve_attainment", **labels)
+        thpt = registry.value("serve_throughput", **labels)
+        out.attainment = att if att is not None else 1.0
+        out.throughput = thpt if thpt is not None else 0.0
+
+        def _samples(name):
+            for ls, h in registry.histograms(name):
+                if ls != {k: str(v) for k, v in labels.items()}:
+                    continue
+                for i, c in enumerate(h.counts):
+                    ub = (h.buckets[i] if i < len(h.buckets)
+                          else (h.max if h.max is not None else 0.0))
+                    yield from [ub] * c
+        out.latencies = list(_samples("request_latency_seconds"))
+        out.queue_delays = list(_samples("queue_delay_seconds"))
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -197,7 +285,8 @@ class ServeStats:
 # ---------------------------------------------------------------------------
 
 def run_serve_loop(workers: Sequence, requests: Sequence, *, deadline: float,
-                   clock=None, dispatch=None) -> ServeStats:
+                   clock=None, dispatch=None, tracer=None,
+                   metrics=None) -> ServeStats:
     """Replay a timed workload over `workers` and account the outcome.
 
     Mutates each request in place (`start_time`, `finish_time`, `output`)
@@ -206,8 +295,18 @@ def run_serve_loop(workers: Sequence, requests: Sequence, *, deadline: float,
     worker order) so identical workloads route identically run-to-run;
     ``dispatch(cands, req, now) -> worker`` overrides the choice entirely
     (the Router's prefix-aware scoring, seeded tiebreaks).
+
+    ``tracer`` (repro.obs.trace.Tracer) records queue-wait and per-worker
+    iteration spans against this loop's clock — pure observation, token
+    streams are identical with it on or off. ``metrics``
+    (repro.obs.metrics.MetricsRegistry) receives per-replica counter
+    deltas, engine gauges (``metrics_gauges`` port) and the final
+    ServeStats publication.
     """
     clock = clock if clock is not None else WallClock()
+    tracer = tracer if tracer is not None else NULL_TRACER
+    if tracer.enabled:
+        tracer.bind_clock(clock)
     pending = sorted(requests, key=lambda r: (r.arrival, r.rid))
     idx = 0
     iterations = 0
@@ -237,6 +336,9 @@ def run_serve_loop(workers: Sequence, requests: Sequence, *, deadline: float,
                 seen[k] = (w, {c: getattr(w, c, 0) for c in counters})
 
     _register(workers)
+    # serve-level span: the sanctioned begin/end pair (repro-lint
+    # span-pairing holds every begin to a matching end on its code path)
+    serve_span = tracer.begin("serve") if tracer.enabled else None
     while idx < len(pending) or any(w.inflight() for w in workers):
         now = clock.now()
         _register(workers)         # pick up replicas added last cycle
@@ -254,6 +356,11 @@ def run_serve_loop(workers: Sequence, requests: Sequence, *, deadline: float,
                 w = min(cands, key=lambda c: (c.load(now), wid[id(c)]))
             req.start_time = now
             w.admit([req], now)
+            if tracer.enabled:
+                # queue wait: arrival -> admission, on the chosen replica
+                tracer.complete("queue_wait", now - req.arrival,
+                                ts=req.arrival, pid=wid[id(w)],
+                                rid=req.rid)
             idx += 1
             progressed = True
 
@@ -273,6 +380,12 @@ def run_serve_loop(workers: Sequence, requests: Sequence, *, deadline: float,
             progressed = True
             max_cost = max(max_cost, cost)
             completed.extend(done)
+            if tracer.enabled:
+                # per-worker iteration span: the clock does not advance
+                # DURING an iteration (one tick per cycle, below), so the
+                # engine-reported cost is the span's duration
+                tracer.complete("iteration", cost, ts=now,
+                                pid=wid[id(w)], completions=len(done))
         if max_cost:
             clock.tick(max_cost)
         stamp = clock.now()
@@ -304,9 +417,27 @@ def run_serve_loop(workers: Sequence, requests: Sequence, *, deadline: float,
             break
         clock.sleep_until(min(targets))
 
+    if serve_span is not None:
+        tracer.end(serve_span, requests=len(pending))
+    # satellite: with tracing on, the span stream is the source of truth
+    # for first_token_time / prefill_finish_time — re-derive them (the
+    # values must equal the engines' inline stamps; tests assert it)
+    tracer.apply_marks(pending)
     stats = ServeStats.from_requests(pending, deadline,
                                      iterations=iterations)
     for c in counters:
         setattr(stats, c, sum(getattr(w, c, 0) - b[c]
                               for w, b in seen.values()))
+    if metrics is not None:
+        for w, b in seen.values():
+            rep = str(wid[id(w)])
+            for c in counters:
+                d = getattr(w, c, 0) - b[c]
+                if d:
+                    metrics.counter("serve_" + c, replica=rep).inc(d)
+            gauges = getattr(w, "metrics_gauges", None)
+            if gauges is not None:
+                for name, lbls, val in gauges():
+                    metrics.gauge(name, replica=rep, **lbls).set(val)
+        stats.publish(metrics)
     return stats

@@ -36,6 +36,7 @@ from typing import Callable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.resched import DriftDetector, DriftSignal
+from repro.obs.trace import NULL_TRACER
 from repro.serving.disagg import KVDispatcher, KVLink
 from repro.serving.request import Request
 
@@ -106,6 +107,7 @@ class OnlineRescheduler:
         self._spec_seen = (0, 0)
         self.events: List[dict] = []
         self.redispatches = 0
+        self.tracer = NULL_TRACER  # Router.bind_tracer swaps in the live one
 
     # ---- binding ---------------------------------------------------------
     def bind(self, router) -> None:
@@ -204,6 +206,9 @@ class OnlineRescheduler:
         self.events.append({"t": now, "kind": "kill",
                             "replica": replica_id,
                             "orphans": len(self._orphans)})
+        if self.tracer.enabled:
+            self.tracer.instant("replica_kill", ts=now, pid=replica_id,
+                                orphans=len(self._orphans))
         if self.detector is not None:
             key = frozenset(getattr(w, "device_ids", ())) \
                 or frozenset({replica_id})
@@ -267,6 +272,8 @@ class OnlineRescheduler:
         prefills = [w for w, r in zip(peers, new_roles) if r == "prefill"]
         assert bool(prefills) == bool(decodes), (new_roles,)
         disp = KVDispatcher(decodes, self.link) if decodes else None
+        if disp is not None:
+            disp.tracer = self.tracer
         for w, old, new in zip(peers, old_roles, new_roles):
             w.role = new
             if new == "prefill":
@@ -307,6 +314,10 @@ class OnlineRescheduler:
             assert len(roles) == len(insert), (roles, len(insert))
             for w, r in zip(insert, roles):
                 w.role = r
+        if self.tracer.enabled:
+            for w in insert:
+                if hasattr(w, "tracer"):
+                    w.tracer = self.tracer
         # keep the controller LAST so new workers admit before we run
         pos = self.workers.index(self) if self in self.workers \
             else len(self.workers)

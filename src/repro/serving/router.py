@@ -349,14 +349,36 @@ class Router:
             return (load - self.prefix_route_weight * bonus, tie)
         return min(cands, key=key)
 
+    def bind_tracer(self, tracer) -> None:
+        """Hand every tracing-aware collaborator the live tracer: workers
+        (span emission sites), the KV dispatcher (migration spans), and
+        the controller (replica_kill instants). Workers created after a
+        controller reschedule inherit it via ``replace_workers`` calling
+        back through the controller's ``tracer`` attribute."""
+        for w in self.workers:
+            if hasattr(w, "tracer"):
+                w.tracer = tracer
+            prop = getattr(w, "_proposer", None)
+            if prop is not None and hasattr(prop, "tracer"):
+                prop.tracer = tracer
+        if self.dispatcher is not None:
+            self.dispatcher.tracer = tracer
+        if self.controller is not None:
+            self.controller.tracer = tracer
+
     def serve(self, requests: Sequence[Request], deadline: float, *,
-              clock=None) -> ServeStats:
+              clock=None, tracer=None, metrics=None) -> ServeStats:
         """Replays a timed workload; wall-clock by default, or any Clock
         (e.g. VirtualClock for deterministic replay). An attached
         controller (``attach_controller``) joins ``self.workers`` for the
         replay — the SAME list object the loop re-reads each cycle, so
         the controller's membership edits (kills, re-solved layouts) are
-        visible next iteration."""
+        visible next iteration. A ``tracer`` (repro.obs.trace.Tracer) is
+        bound to every worker for lifecycle spans; a ``metrics`` registry
+        (repro.obs.metrics.MetricsRegistry) receives per-replica counters
+        and pool gauges at the end of the replay."""
+        if tracer is not None and tracer.enabled:
+            self.bind_tracer(tracer)
         ctl = self.controller
         if ctl is not None and ctl not in self.workers:
             self.workers.append(ctl)
@@ -364,7 +386,7 @@ class Router:
             return run_serve_loop(
                 self.workers, requests, deadline=deadline,
                 clock=clock if clock is not None else WallClock(),
-                dispatch=self._dispatch)
+                dispatch=self._dispatch, tracer=tracer, metrics=metrics)
         finally:
             if ctl is not None and ctl in self.workers:
                 self.workers.remove(ctl)

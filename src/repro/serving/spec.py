@@ -61,6 +61,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.obs.trace import NULL_TRACER
 
 ProposeItem = Tuple[int, np.ndarray, int]       # (slot, history, k_cap)
 
@@ -150,6 +151,7 @@ class NgramProposer:
         assert 1 <= ngram_min <= ngram_max, (ngram_min, ngram_max)
         self.ngram_max = ngram_max
         self.ngram_min = ngram_min
+        self.tracer = NULL_TRACER      # engine shares its tracer on bind
 
     def propose(self, items: Sequence[ProposeItem]
                 ) -> Dict[int, np.ndarray]:
@@ -229,6 +231,7 @@ class DraftModelProposer:
             lambda p, toks, lens, c: M.prefill(cfg, p, {"tokens": toks}, c,
                                                lens=lens))
         self.draft_steps = 0           # draft forward passes run (profiling)
+        self.tracer = NULL_TRACER      # engine shares its tracer on bind
 
     # ---- sync: (re)prefill slots whose cache doesn't hold history[:-1] ----
     def _sync(self, items: Sequence[ProposeItem]) -> None:
@@ -263,6 +266,8 @@ class DraftModelProposer:
         act = [(slot, h, cap) for slot, h, cap in items if cap > 0]
         if not act:
             return {}
+        synced = sum(1 for slot, h, _ in act
+                     if self._pos[slot] != len(h) - 1)
         self._sync(act)
         # steps 0..cap-1 produce the proposals; one EXTRA step per slot
         # feeds its final proposal back purely to write that candidate's
@@ -300,6 +305,9 @@ class DraftModelProposer:
             # cache now holds the history through the bonus token; the
             # proposals' K/V past it become valid only via commit()
             self._pos[slot] = len(h)
+        if self.tracer.enabled:
+            self.tracer.instant("spec_draft", steps=steps, slots=len(act),
+                                synced=synced)
         return {slot: np.asarray(v, np.int32) for slot, v in out.items()}
 
     def commit(self, slot: int, n_accepted: int) -> None:

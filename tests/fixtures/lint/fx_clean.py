@@ -27,3 +27,13 @@ def pick(xs: Optional[List[int]] = None, *, seed: int = 0) -> int:
         return xs[int(rng.integers(0, len(xs)))]
     except IndexError:
         return 0
+
+
+def traced_iteration(tracer, work) -> None:
+    # span-pairing sanctioned idioms: the context manager, and an
+    # explicit begin/end pair closed in the SAME function
+    with tracer.span("iteration"):
+        work()
+    sp = tracer.begin("serve")
+    work()
+    tracer.end(sp)

@@ -1,0 +1,28 @@
+"""Seeded span-pairing violations: tracer.begin() never closed.
+
+An unclosed span leaves ``openSpans`` nonzero in the Chrome-trace export,
+which ``validate_chrome_trace`` rejects — the linter catches it at review
+time instead.
+"""
+
+
+def leaky_serve(tracer, work):
+    span = tracer.begin("serve")        # fires: no end() in this function
+    work()
+    return span
+
+
+class Engine:
+    def __init__(self, tracer):
+        self.tracer = tracer
+
+    def leaky_iteration(self, work):
+        sp = self.tracer.begin("iteration")   # fires: end() is elsewhere
+        work()
+        return sp
+
+    def close(self, sp):
+        # an end() in a DIFFERENT function does not pair the begin above:
+        # the rule is per-function, matching the repo's discipline that a
+        # span opens and closes in one frame (or uses the context manager)
+        self.tracer.end(sp)

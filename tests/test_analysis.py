@@ -51,6 +51,8 @@ def rules_of(findings):
     ("fx_refcount.py", ["refcount-pairing"] * 2),
     ("fx_hygiene.py", ["bare-except"] + ["mutable-default"] * 2
      + ["unseeded-rng"] * 2),
+    ("fx_span.py", ["span-pairing"] * 2),
+    ("fx_span_noqa.py", []),
     ("fx_clean.py", []),
 ])
 def test_corpus_fixture(fixture, expect):
